@@ -1,0 +1,101 @@
+"""Paper Fig. 8 — execution-time breakdown: per-superstep computing vs
+synchronization (SBS) time, and per-partition workload balance (min/max),
+for DRONE-VC-CDBH vs DRONE-EC-RH on a power-law graph.
+
+The compute and sync phases are jitted separately so the wall-clock split is
+measurable on CPU; the per-partition *sweep counts* expose the straggler
+skew the paper attributes to edge-cut imbalance.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.algos import ConnectedComponents
+from repro.core import EngineConfig, partition_and_build
+from repro.core import engine as E
+from repro.core import sbs
+from repro.graphgen import kronecker_graph
+
+from benchmarks.common import save, table
+
+
+def _instrumented_cc(pg, mode="sc", max_supersteps=10000):
+    prog = ConnectedComponents()
+    cfg = EngineConfig(mode=mode)
+    sgs = E._device_subgraph(pg)
+    n_slots, K = pg.n_slots, prog.payload
+    ident = prog.identity
+    ec = E.EdgeCombine(())
+    ex = sbs.SimExchange()
+
+    @jax.jit
+    def local_all(state, merged_buf, first):
+        merged_v = jax.vmap(lambda sg: sbs.gather_merged(merged_buf, sg.slot))(sgs)
+        state, out, sweeps, last_ch = jax.vmap(
+            lambda sg, st, m: E._local_phase(prog, sg, None, st, m, ec,
+                                             cfg.local_bound, first)
+        )(sgs, state, merged_v)
+        return state, out, sweeps, last_ch
+
+    @jax.jit
+    def sync_all(out, last_out, last_ch):
+        bufs, changed = jax.vmap(
+            lambda sg, o, lo: E._pack(prog, sg, o, lo, n_slots))(sgs, out,
+                                                                 last_out)
+        merged = ex.all_combine(bufs, prog.combiner).at[n_slots].set(ident)
+        return merged, jnp.sum(changed), jnp.sum(last_ch > 0), changed
+
+    sweeps_total = np.zeros(pg.n_parts, np.int64)
+    steps = 0
+    state = jax.vmap(lambda sg: prog.init(sg, None, ec))(sgs)
+    merged = jnp.full((n_slots + 1, K), ident, prog.dtype)
+    last_out = jnp.full((pg.n_parts, pg.v_max, K), ident, prog.dtype)
+    t_comp = t_sync = 0.0
+    for step in range(max_supersteps):
+        t0 = time.perf_counter()
+        res = local_all(state, merged, jnp.bool_(step == 0))
+        jax.block_until_ready(res)
+        state, out, sweeps, last_ch = res
+        t_comp += time.perf_counter() - t0
+        t0 = time.perf_counter()
+        merged, msgs, active, changed = jax.block_until_ready(
+            sync_all(out, last_out, last_ch))
+        t_sync += time.perf_counter() - t0
+        last_out = out
+        sweeps_total += np.asarray(sweeps, np.int64)
+        steps = step + 1
+        if int(msgs) == 0 and int(active) == 0:
+            break
+    epp = pg.edges_per_part.astype(np.int64)
+    work = sweeps_total * epp
+    return dict(supersteps=steps, compute_s=t_comp, sync_s=t_sync,
+                work_min=int(work.min()), work_max=int(work.max()),
+                work_mean=float(work.mean()),
+                skew=float(work.max() / max(work.mean(), 1)))
+
+
+def run(scale: str = "small"):
+    g = kronecker_graph(13 if scale == "small" else 16, seed=5)
+    rows, recs = [], {}
+    for vname, pname in (("DRONE-VC-CDBH", "cdbh"), ("DRONE-VC-RH", "rh-vc"),
+                         ("DRONE-EC-RH", "rh-ec")):
+        pg = partition_and_build(g, 16, pname)
+        r = _instrumented_cc(pg)
+        rows.append([vname, r["supersteps"], f"{r['compute_s']:.2f}s",
+                     f"{r['sync_s']:.2f}s", r["work_max"],
+                     f"{r['skew']:.2f}x"])
+        recs[vname] = r
+    table("Fig 8 — CC breakdown: compute vs SBS sync, workload skew",
+          ["variant", "supersteps", "compute", "sync", "max work",
+           "skew(max/mean)"], rows)
+    # paper: vertex-cut balances edge work better than RH edge-cut
+    assert recs["DRONE-VC-CDBH"]["skew"] <= recs["DRONE-EC-RH"]["skew"] * 1.05
+    return save("breakdown", recs)
+
+
+if __name__ == "__main__":
+    run()

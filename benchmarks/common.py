@@ -1,0 +1,25 @@
+"""Shared benchmark utilities: result IO + table printing."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+
+def save(name: str, payload: dict, out_dir: str = "results/bench"):
+    os.makedirs(out_dir, exist_ok=True)
+    payload = dict(payload, benchmark=name, unix_time=time.time())
+    with open(os.path.join(out_dir, f"{name}.json"), "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    return payload
+
+
+def table(title: str, headers, rows):
+    print(f"\n== {title} ==")
+    widths = [max(len(str(h)), *(len(str(r[i])) for r in rows))
+              for i, h in enumerate(headers)] if rows else [len(h) for h in headers]
+    line = "  ".join(str(h).ljust(w) for h, w in zip(headers, widths))
+    print(line)
+    print("-" * len(line))
+    for r in rows:
+        print("  ".join(str(c).ljust(w) for c, w in zip(r, widths)))

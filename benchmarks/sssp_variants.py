@@ -1,0 +1,42 @@
+"""Paper Table 4 + Figs 6/7 — SSSP under DRONE variants on a power-law graph
+(WebBase proxy) and a road-network proxy: execution time, supersteps,
+messages-per-superstep traces for DRONE-VC-CDBH / DRONE-VC-RH / DRONE-EC-RH."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.algos import SSSP
+from repro.core import EngineConfig, partition_and_build, run_sim
+from repro.graphgen import grid_graph, kronecker_graph
+
+from benchmarks.common import save, table
+
+VARIANTS = {
+    "DRONE-VC-CDBH": ("cdbh", "sc"),
+    "DRONE-VC-RH": ("rh-vc", "sc"),
+    "DRONE-EC-RH": ("rh-ec", "sc"),
+}
+
+
+def run(scale: str = "small"):
+    g = kronecker_graph(14 if scale == "small" else 18, seed=4, weighted=True)
+    road = grid_graph(100 if scale == "small" else 300, weighted=True, seed=4)
+    rows, recs = [], {}
+    for gname, graph in (("kron-powerlaw", g), ("road-grid", road)):
+        for vname, (pname, mode) in VARIANTS.items():
+            pg = partition_and_build(graph, 16, pname)
+            cfg = EngineConfig(mode=mode, trace=True, max_supersteps=20000)
+            _, st = run_sim(SSSP(), pg, {"source": 0}, cfg)
+            rows.append([gname, vname, st.supersteps, st.total_messages,
+                         f"{st.wall_time:.2f}s"])
+            recs[f"{gname}/{vname}"] = dict(
+                supersteps=st.supersteps, messages=st.total_messages,
+                wall_time=st.wall_time,
+                messages_per_step=st.messages_per_step[:200])
+    table("Table 4 / Fig 7 — SSSP DRONE variants",
+          ["graph", "variant", "supersteps", "messages", "time"], rows)
+    return save("sssp_variants", recs)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,81 @@
+"""Paper Fig. 5 — cross-model strong scaling of CC / SSSP / PR / GSim.
+
+Systems proxied on the shared engine (identical data structures, so
+differences are attributable to the *model*, the paper's comparison axis):
+  DRONE-VC  = subgraph-centric + CDBH vertex-cut   (the paper's system)
+  DRONE-EC  = subgraph-centric + RH edge-cut       (Giraph++-style)
+  VC-model  = vertex-centric (1-hop supersteps) + RH edge-cut (Pregel/Giraph)
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.algos import ConnectedComponents, PageRank, SSSP
+from repro.algos.gsim import make_gsim
+from repro.core import EngineConfig, partition_and_build, run_sim
+from repro.graphgen import grid_graph, powerlaw_graph
+
+from benchmarks.common import save, table
+
+SYSTEMS = {
+    "DRONE-VC": dict(partitioner="cdbh", mode="sc"),
+    "DRONE-EC": dict(partitioner="rh-ec", mode="sc"),
+    "VC-model": dict(partitioner="rh-ec", mode="vc"),
+}
+
+
+def _run_algo(algo, g, n_parts, sysname, labels=None):
+    s = SYSTEMS[sysname]
+    pg = partition_and_build(g, n_parts, s["partitioner"])
+    cfg = EngineConfig(mode=s["mode"], max_supersteps=20000)
+    if algo == "cc":
+        return run_sim(ConnectedComponents(), pg, None, cfg)[1]
+    if algo == "sssp":
+        return run_sim(SSSP(), pg, {"source": 0}, cfg)[1]
+    if algo == "pagerank":
+        return run_sim(PageRank(tol=1e-7), pg,
+                       {"n_vertices": g.n_vertices}, cfg)[1]
+    pg.set_vertex_labels(labels)
+    prog, params = make_gsim(np.array([[0, 1, 0], [0, 0, 1], [0, 0, 0]],
+                                      np.int32),
+                             np.array([0, 1, 2], np.int32))
+    return run_sim(prog, pg, params, cfg)[1]
+
+
+def run(scale: str = "small"):
+    n = 20_000 if scale == "small" else 200_000
+    workers = [4, 8, 16] if scale == "small" else [4, 8, 16, 24]
+    g_pl = powerlaw_graph(n, alpha=2.2, avg_degree=12, seed=3)
+    g_cc = g_pl.as_undirected()
+    g_road = grid_graph(int(np.sqrt(n)), weighted=True, seed=3)
+    labels = np.random.default_rng(0).integers(0, 3, size=n).astype(np.int32)
+
+    graphs = {"cc": g_cc, "sssp": g_road, "pagerank": g_pl, "gsim": g_pl}
+    rows, recs = [], []
+    for algo in ("cc", "sssp", "pagerank", "gsim"):
+        for sysname in SYSTEMS:
+            for p in workers:
+                st = _run_algo(algo, graphs[algo], p, sysname,
+                               labels if algo == "gsim" else None)
+                rows.append([algo, sysname, p, st.supersteps,
+                             st.total_messages, f"{st.wall_time:.2f}s"])
+                recs.append(dict(algo=algo, system=sysname, workers=p,
+                                 supersteps=st.supersteps,
+                                 messages=st.total_messages,
+                                 wall_time=st.wall_time))
+    table("Fig 5 — strong scaling (supersteps / messages / sim time)",
+          ["algo", "system", "workers", "supersteps", "messages", "time"],
+          rows)
+    # paper claims (model-level): SC <= VC supersteps; DRONE-VC fewer
+    # messages than VC-model on CC
+    by = {(r["algo"], r["system"], r["workers"]): r for r in recs}
+    for p in workers:
+        assert by[("cc", "DRONE-VC", p)]["supersteps"] <= \
+            by[("cc", "VC-model", p)]["supersteps"]
+        assert by[("cc", "DRONE-VC", p)]["messages"] < \
+            by[("cc", "VC-model", p)]["messages"]
+    return save("strong_scaling", {"rows": recs, "scale": scale})
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,47 @@
+"""Paper Fig. 9 — weak scaling on Graph500 Kronecker graphs: fixed edges per
+partition, growing scale; performance in PEPS (actual processed edges per
+second) per worker. CPU-sim absolute numbers are not TPU numbers — the curve
+*shape* (PEPS/worker vs scale) is the reproduction target.
+
+Also includes the trillion-edge *capability* dry-run marker: see
+benchmarks/trillion_dryrun.py (compile-only, 512 devices).
+"""
+from __future__ import annotations
+
+from repro.algos import ConnectedComponents, PageRank
+from repro.core import EngineConfig, partition_and_build, run_sim
+from repro.graphgen import kronecker_graph
+
+from benchmarks.common import save, table
+
+
+def run(scale: str = "small"):
+    scales = [12, 13, 14] if scale == "small" else [14, 15, 16, 17]
+    base_parts = 4
+    rows, recs = [], []
+    for i, sc in enumerate(scales):
+        g = kronecker_graph(sc, seed=6)
+        p = base_parts * (2 ** i)              # fixed edges/partition
+        pg = partition_and_build(g, p, "cdbh")
+        for aname in ("cc", "pagerank"):
+            if aname == "cc":
+                _, st = run_sim(ConnectedComponents(), pg, None,
+                                EngineConfig(mode="sc"))
+            else:
+                _, st = run_sim(PageRank(tol=1e-6), pg,
+                                {"n_vertices": g.n_vertices},
+                                EngineConfig(mode="sc", max_local_iters=100))
+            peps_w = st.peps / p
+            rows.append([aname, sc, p, g.n_edges, st.supersteps,
+                         f"{st.peps:.3e}", f"{peps_w:.3e}"])
+            recs.append(dict(algo=aname, scale=sc, workers=p,
+                             edges=g.n_edges, supersteps=st.supersteps,
+                             peps=st.peps, peps_per_worker=peps_w))
+    table("Fig 9 — weak scaling on Kronecker graphs (PEPS/worker)",
+          ["algo", "scale", "workers", "edges", "supersteps", "PEPS",
+           "PEPS/worker"], rows)
+    return save("weak_scaling", {"rows": recs})
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,35 @@
+"""PageRank (paper §7.2, asynchronous accumulative) on a power-law graph,
+comparing the paper's DRONE-VC against the DRONE-EC baseline.
+
+    PYTHONPATH=src python examples/pagerank_powerlaw.py
+"""
+import numpy as np
+
+from repro.algos import PageRank
+from repro.core import EngineConfig, partition_and_build, run_sim
+from repro.graphgen import powerlaw_graph
+
+
+def main():
+    g = powerlaw_graph(30_000, alpha=2.2, avg_degree=12, seed=11)
+    cfg = EngineConfig(mode="sc", max_local_iters=200)
+    pr = PageRank(tol=1e-8)
+    rows = []
+    for name, part in (("DRONE-VC (cdbh)", "cdbh"), ("DRONE-EC (rh)", "rh-ec")):
+        pg = partition_and_build(g, 16, part)
+        res, st = run_sim(pr, pg, {"n_vertices": g.n_vertices}, cfg)
+        ranks = pg.collect(res, fill=0.0)
+        top = np.argsort(-ranks)[:5]
+        rows.append((name, st.supersteps, st.total_messages, st.wall_time,
+                     ranks))
+        print(f"{name:18s} supersteps={st.supersteps:4d} "
+              f"messages={st.total_messages:9d} time={st.wall_time:.2f}s "
+              f"top5={top.tolist()}")
+    # both cuts converge to the same ranks (within the async tolerance)
+    assert np.allclose(rows[0][4], rows[1][4], atol=5e-5), \
+        float(np.abs(rows[0][4] - rows[1][4]).max())
+    print("rank agreement OK; mass =", float(rows[0][4].sum()))
+
+
+if __name__ == "__main__":
+    main()

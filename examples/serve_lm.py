@@ -1,0 +1,59 @@
+"""Batched LM serving: prefill a batch of prompts, then greedy-decode with
+the per-arch KV/state cache (deliverable b, serving flavour).
+
+    PYTHONPATH=src python examples/serve_lm.py --arch jamba_v01_52b
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.models import model as M
+from repro.training import steps as S
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo_1b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=24)
+    ap.add_argument("--gen", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    key = jax.random.PRNGKey(0)
+    params = M.init_model(key, cfg)
+    max_len = args.prompt_len + args.gen + (cfg.frontend_len or 0)
+
+    prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
+                                 cfg.vocab)
+    batch = {"tokens": prompts}
+    if cfg.frontend:
+        batch["frontend"] = jnp.zeros((args.batch, cfg.frontend_len,
+                                       cfg.frontend_dim))
+    memory = M._encode(params, batch, cfg) if cfg.n_enc_layers else None
+
+    prefill = jax.jit(S.make_prefill_step(cfg, max_len))
+    step = jax.jit(S.make_serve_step(cfg), donate_argnums=(1,))
+
+    t0 = time.time()
+    nxt, caches = prefill(params, batch)
+    out = [nxt]
+    for _ in range(args.gen - 1):
+        db = {"tokens": nxt[:, None]}
+        if memory is not None:
+            db["memory"] = memory
+        nxt, caches = step(params, caches, db)
+        out.append(nxt)
+    toks = jnp.stack(out, axis=1)
+    dt = time.time() - t0
+    print(f"{args.arch}: generated {args.batch}x{args.gen} tokens in {dt:.2f}s"
+          f" ({args.batch*args.gen/dt:.1f} tok/s on CPU)")
+    print("sample:", toks[0, :16].tolist())
+    assert bool(jnp.isfinite(toks.astype(jnp.float32)).all())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""End-to-end LM training driver (deliverable b): train a ~100M-class model
+for a few hundred steps on the synthetic pipeline, with checkpoint/restart.
+
+    PYTHONPATH=src python examples/train_lm.py             # ~small olmo-family
+    PYTHONPATH=src python examples/train_lm.py --arch jamba_v01_52b --steps 50
+
+This wraps repro.launch.train; kill it mid-run and re-invoke with --resume to
+exercise fault tolerance.
+"""
+import argparse
+
+from repro.launch.train import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo_1b")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+    _, hist = train(args.arch, smoke=True, steps=args.steps, batch=8,
+                    seq=128, ckpt_dir=f"ckpts/{args.arch}", ckpt_every=50,
+                    resume=args.resume, peak_lr=1e-3)
+    print(f"loss {hist[0]:.3f} -> {hist[-1]:.3f}")
+    assert hist[-1] < hist[0]
+
+
+if __name__ == "__main__":
+    main()

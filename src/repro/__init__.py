@@ -1,0 +1,5 @@
+"""repro — DRONE/SVHM (Wen, Zhang, You 2018) on TPU: a distributed
+subgraph-centric graph engine with vertex-cut partitioning, plus the assigned
+LM-architecture zoo, sharded launch/dry-run and roofline tooling."""
+
+__version__ = "0.1.0"

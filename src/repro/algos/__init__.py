@@ -1,0 +1,8 @@
+from repro.algos.cc import ConnectedComponents
+from repro.algos.sssp import SSSP
+from repro.algos.pagerank import PageRank
+from repro.algos.gsim import GraphSimulation
+from repro.algos.mssp import MultiSourceSSSP
+
+__all__ = ["ConnectedComponents", "SSSP", "PageRank", "GraphSimulation",
+           "MultiSourceSSSP"]

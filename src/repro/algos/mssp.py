@@ -1,0 +1,58 @@
+"""Multi-source shortest paths (landmarks): K sources solved simultaneously.
+
+Exercises the SVHM engine's vector payload (K > 1): vertex values are
+[K]-vectors, one distance per source; SBS reduces [n_slots, K] buffers with
+``min``. This is the "graph algorithms for machine learning" direction the
+paper names as future work (landmark embeddings / ANF sketches), and the
+natural consumer of the model-axis feature parallelism (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.core.api import DeviceSubgraph, VertexProgram
+
+INF = jnp.float32(jnp.inf)
+
+
+@dataclasses.dataclass
+class MultiSourceSSSP(VertexProgram):
+    combiner: str = "min"
+    payload: int = 4            # K sources; set at construction
+    dtype: object = jnp.float32
+    delta_based: bool = False
+
+    def init(self, sg: DeviceSubgraph, params, ec):
+        sources = params["sources"]          # [K] global vertex ids
+        dist = jnp.where(sg.vid32[:, None] == sources[None, :], 0.0, INF)
+        return {"dist": jnp.where(sg.vmask[:, None], dist, INF)}
+
+    def apply_frontier(self, sg, params, state, merged, ec):
+        new = jnp.where(sg.frontier[:, None],
+                        jnp.minimum(state["dist"], merged), state["dist"])
+        changed = jnp.sum(jnp.any(new < state["dist"], -1), dtype=jnp.int32)
+        return {"dist": new}, changed
+
+    def sweep(self, sg, params, state, ec):
+        d = state["dist"]
+        cand = jnp.where(sg.emask[:, None], d[sg.esrc] + sg.ew[:, None], INF)
+        agg = jnp.full(d.shape, INF, jnp.float32).at[sg.edst].min(cand)
+        agg = ec.min(agg)
+        new = jnp.where(sg.vmask[:, None], jnp.minimum(d, agg), d)
+        changed = jnp.sum(jnp.any(new < d, -1), dtype=jnp.int32)
+        return {"dist": new}, changed
+
+    def frontier_out(self, sg, params, state):
+        return state["dist"]
+
+    def result(self, sg, params, state):
+        return state["dist"]
+
+
+def make_mssp(sources):
+    import numpy as np
+    sources = np.asarray(sources, np.int32)
+    prog = MultiSourceSSSP(payload=int(sources.shape[0]))
+    return prog, {"sources": jnp.asarray(sources)}

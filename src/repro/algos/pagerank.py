@@ -1,0 +1,82 @@
+"""PageRank — asynchronous accumulative formulation (paper §7.2, after
+Zhang et al. [17]).
+
+State per vertex: rank ``pr`` and accumulator ``delta``. Processing a vertex:
+``pr += delta``; push ``alpha * delta / out_deg`` to each out-neighbour's
+accumulator; reset ``delta``. Fixed point: ``pr = sum_n alpha^n M^n r`` with
+``r = (1-alpha)/N`` — the standard PageRank (dangling mass not redistributed,
+as in [17]).
+
+SVHM replication protocol (DESIGN.md):
+  - internal vertices are processed by local sweeps (to the partition-local
+    fixed point, modulo ``tol``);
+  - frontier vertices are processed only at superstep boundaries: local
+    sweeps accumulate their inflow into ``delta``; SBS sums the accumulators
+    (Aggregate = sum, as in the paper), and ``apply_frontier`` has every
+    replica consume the *merged* delta identically (pr update + push along
+    the replica's local out-edges, whose union over replicas is exactly the
+    vertex's global out-edge set). Initial seeding of a frontier vertex
+    happens on its master replica only, so the merged sum is not inflated.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.core.api import DeviceSubgraph, VertexProgram
+
+
+@dataclasses.dataclass
+class PageRank(VertexProgram):
+    combiner: str = "sum"
+    payload: int = 1
+    dtype: object = jnp.float32
+    delta_based: bool = True
+    tol: float = 1e-7
+    alpha: float = 0.85
+
+    # -------------------------------------------------------------- #
+    def _push(self, sg: DeviceSubgraph, d, ec):
+        """Push alpha*d/out_deg along local out-edges; returns inflow."""
+        rate = jnp.where(sg.out_deg > 0, self.alpha / jnp.maximum(sg.out_deg, 1.0), 0.0)
+        send = d * rate
+        contrib = jnp.where(sg.emask, send[sg.esrc], 0.0)
+        recv = jnp.zeros((sg.v_max,), jnp.float32).at[sg.edst].add(contrib)
+        return ec.sum(recv)
+
+    def init(self, sg: DeviceSubgraph, params, ec):
+        n = params["n_vertices"]
+        seed = jnp.float32((1.0 - self.alpha) / n)
+        # master-only seeding for frontier vertices (mirrors start at 0)
+        d0 = jnp.where(sg.internal | (sg.frontier & sg.is_master), seed, 0.0)
+        d0 = jnp.where(sg.vmask, d0, 0.0)
+        return {"pr": jnp.zeros((sg.v_max,), jnp.float32), "delta": d0}
+
+    def apply_frontier(self, sg, params, state, merged, ec):
+        m = jnp.where(sg.frontier, merged[:, 0], 0.0)
+        sig = jnp.abs(m) > self.tol
+        pr = state["pr"] + jnp.where(sig, m, 0.0)
+        inflow = self._push(sg, jnp.where(sig, m, 0.0), ec)
+        # frontier accumulators were globally consumed: reset to new inflow;
+        # internal accumulators keep pending value + new inflow.
+        delta = jnp.where(sg.frontier, inflow, state["delta"] + inflow)
+        changed = jnp.sum(sig & sg.frontier, dtype=jnp.int32)
+        return {"pr": pr, "delta": delta}, changed
+
+    def sweep(self, sg, params, state, ec):
+        d = state["delta"]
+        proc = sg.internal & (jnp.abs(d) > self.tol)
+        dp = jnp.where(proc, d, 0.0)
+        pr = state["pr"] + dp
+        inflow = self._push(sg, dp, ec)
+        delta = jnp.where(proc, 0.0, d) + jnp.where(sg.vmask, inflow, 0.0)
+        changed = jnp.sum(proc, dtype=jnp.int32)
+        return {"pr": pr, "delta": delta}, changed
+
+    def frontier_out(self, sg, params, state):
+        return jnp.where(sg.frontier, state["delta"], 0.0)[:, None]
+
+    def result(self, sg, params, state):
+        # remaining sub-tolerance delta is folded in for a tighter answer
+        return state["pr"] + state["delta"]

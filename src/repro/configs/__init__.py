@@ -1,0 +1,3 @@
+from repro.configs.registry import ARCHS, get_config, get_smoke_config
+
+__all__ = ["ARCHS", "get_config", "get_smoke_config"]

@@ -1,0 +1,22 @@
+"""Beyond-paper optimization variants for the §Perf hillclimb.
+
+``optimized(cfg)`` returns the config with the per-arch perf levers flipped;
+the dry-run records baseline and variant cells separately so the
+paper-faithful baseline and the optimized version are both visible
+(EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+def optimized(cfg):
+    over = {}
+    if cfg.moe is not None:
+        over["moe"] = dataclasses.replace(cfg.moe, dispatch="hierarchical")
+    # dense FSDP archs: gather weights per layer instead of GSPMD's
+    # activation-partial all-reduces
+    over["fsdp_gather_weights"] = True
+    # keep TP activation all-reduce payloads bf16 (block f32-upcast hoisting)
+    over["tp_bf16_payload"] = True
+    return dataclasses.replace(cfg, **over)

@@ -1,0 +1,23 @@
+from repro.core.api import DeviceSubgraph, VertexProgram
+from repro.core.engine import EdgeCombine, EngineConfig, run, run_sim, run_shard_map
+from repro.core.graph import Graph
+from repro.core.metrics import ExecutionStats, PartitionMetrics, partition_metrics
+from repro.core.partition import (PARTITIONERS, cdbh_vertex_cut, greedy_edge_cut,
+                                  grid_vertex_cut, random_hash_edge_cut,
+                                  random_hash_vertex_cut)
+from repro.core.subgraph import PartitionedGraph, build_partitioned_graph
+
+__all__ = [
+    "DeviceSubgraph", "VertexProgram", "EdgeCombine", "EngineConfig", "run",
+    "run_sim", "run_shard_map", "Graph", "ExecutionStats", "PartitionMetrics",
+    "partition_metrics", "PARTITIONERS", "cdbh_vertex_cut", "greedy_edge_cut",
+    "grid_vertex_cut", "random_hash_edge_cut", "random_hash_vertex_cut",
+    "PartitionedGraph", "build_partitioned_graph", "partition_and_build",
+]
+
+
+def partition_and_build(g: Graph, n_parts: int, partitioner: str = "cdbh",
+                        *, seed: int = 0, pad_multiple: int = 8):
+    """One-call preprocessing: partition edges + build device arrays."""
+    part = PARTITIONERS[partitioner](g, n_parts, seed=seed)
+    return build_partitioned_graph(g, part, n_parts, pad_multiple=pad_multiple)

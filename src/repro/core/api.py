@@ -1,0 +1,131 @@
+"""DRONE programming API (paper §5.1), adapted to JAX.
+
+The paper exposes ``Compute(g Subgraph, M message) -> vector`` plus
+``addPairToVector``/``voteToHalt``. The TPU-native equivalent is a
+``VertexProgram``: a pytree-pure description of
+
+  - how to initialize per-partition state                         (init)
+  - how to consume merged frontier data at a superstep boundary   (apply_frontier)
+  - one local relaxation sweep over the partition                 (sweep)
+  - which per-vertex payload to contribute to SBS                 (frontier_out)
+
+The engine (engine.py) iterates ``sweep`` to a local fixed point per superstep
+("think like a graph"; ``max_local_iters=1`` degrades to the vertex-centric
+baseline), performs SBS with the program's combiner, counts changed
+(key,value) pairs — the paper's network-message metric — and terminates when
+no partition emits changes (voteToHalt + no pending messages).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+
+class DeviceSubgraph(NamedTuple):
+    """Per-partition device arrays (one shard; no leading P dim)."""
+    esrc: jnp.ndarray     # [e_max] int32 local src
+    edst: jnp.ndarray     # [e_max] int32 local dst (ascending)
+    ew: jnp.ndarray       # [e_max] f32
+    emask: jnp.ndarray    # [e_max] bool
+    slot: jnp.ndarray     # [v_max] int32 frontier slot (n_slots if none)
+    vmask: jnp.ndarray    # [v_max] bool
+    vid32: jnp.ndarray    # [v_max] int32 global vertex id (INT32_MAX pad)
+    is_frontier: jnp.ndarray  # [v_max] bool — vertex replicated elsewhere
+    out_deg: jnp.ndarray  # [v_max] f32 full out-degree
+    in_deg: jnp.ndarray   # [v_max] f32 full in-degree
+    is_master: jnp.ndarray  # [v_max] bool
+    vlabel: Optional[jnp.ndarray] = None  # [v_max] int32
+
+    @property
+    def v_max(self) -> int:
+        return self.vmask.shape[-1]
+
+    @property
+    def e_max(self) -> int:
+        return self.emask.shape[-1]
+
+    @property
+    def frontier(self) -> jnp.ndarray:
+        """[v_max] bool — valid vertices that have an SBS slot."""
+        return self.vmask & self.is_frontier
+
+    @property
+    def internal(self) -> jnp.ndarray:
+        """[v_max] bool — valid vertices living only in this partition."""
+        return self.vmask & ~self.is_frontier
+
+
+COMBINER_IDENTITY = {
+    ("min", jnp.float32.dtype): np.float32(np.inf),
+    ("min", jnp.int32.dtype): np.int32(np.iinfo(np.int32).max),
+    ("max", jnp.float32.dtype): np.float32(-np.inf),
+    ("max", jnp.int32.dtype): np.int32(np.iinfo(np.int32).min),
+    ("sum", jnp.float32.dtype): np.float32(0),
+    ("sum", jnp.int32.dtype): np.int32(0),
+}
+
+
+def combiner_identity(combiner: str, dtype) -> np.generic:
+    return COMBINER_IDENTITY[(combiner, jnp.dtype(dtype))]
+
+
+@dataclasses.dataclass
+class VertexProgram:
+    """Base class. Subclasses implement the four methods below.
+
+    combiner:    'min' | 'sum' | 'max' — the SBS Aggregate operator (§4.3).
+    payload:     K, width of the per-vertex exchanged vector. Scalar algos
+                 use K=1; graph simulation uses K=|V_Q|.
+    dtype:       dtype of the exchanged payload.
+    delta_based: True if frontier_out is a *delta* (sum-combined, e.g. the
+                 PageRank accumulator); False if it is the value itself
+                 (min/max-combined, e.g. CC labels / SSSP distances).
+    tol:         significance threshold for float change detection.
+    """
+
+    combiner: str = "min"
+    payload: int = 1
+    dtype: Any = jnp.float32
+    delta_based: bool = False
+    tol: float = 0.0
+
+    # -------------------------------------------------------------- #
+    def init(self, sg: DeviceSubgraph, params, ec) -> Any:
+        """Build per-partition state. ``ec`` is the EdgeCombine context for
+        merging any edge-derived reductions (see engine.EdgeCombine)."""
+        raise NotImplementedError
+
+    def apply_frontier(self, sg: DeviceSubgraph, params, state, merged):
+        """Consume merged [v_max, K] (identity at non-frontier rows).
+        Returns (state, n_changed:int32)."""
+        raise NotImplementedError
+
+    def sweep(self, sg: DeviceSubgraph, params, state):
+        """One local relaxation pass. Returns (state, n_changed:int32)."""
+        raise NotImplementedError
+
+    def frontier_out(self, sg: DeviceSubgraph, params, state) -> jnp.ndarray:
+        """Per-vertex SBS contribution [v_max, K]."""
+        raise NotImplementedError
+
+    def result(self, sg: DeviceSubgraph, params, state) -> jnp.ndarray:
+        """Per-vertex output [v_max, ...] for collection from masters."""
+        raise NotImplementedError
+
+    # -------------------------------------------------------------- #
+    @property
+    def identity(self):
+        return combiner_identity(self.combiner, self.dtype)
+
+    def changed_mask(self, out: jnp.ndarray, last_out: jnp.ndarray) -> jnp.ndarray:
+        """[v_max] bool — which vertices would emit a (key,value) pair."""
+        if self.delta_based:
+            if self.tol > 0:
+                return jnp.any(jnp.abs(out) > self.tol, axis=-1)
+            return jnp.any(out != 0, axis=-1)
+        if self.tol > 0:
+            return jnp.any(jnp.abs(out - last_out) > self.tol, axis=-1)
+        return jnp.any(out != last_out, axis=-1)

@@ -1,0 +1,403 @@
+"""SVHM BSP engine (paper §4).
+
+Executes a ``VertexProgram`` over a ``PartitionedGraph`` in bulk-synchronous
+supersteps:
+
+  superstep =  apply merged frontier data (paper: incoming messages M_i)
+             → iterate local sweeps to a fixed point    ["think like a graph"]
+             → emit frontier contributions ΔD_i
+             → SBS combiner all-reduce (Aggregate + Disseminate, §4.3)
+             → vote-to-halt when no partition changed anything and no
+               messages are pending.
+
+``mode='vc'`` bounds local iteration at one hop — the vertex-centric
+(Pregel/Giraph) baseline the paper compares against. ``mode='sc'`` iterates to
+the local fixed point — the subgraph-centric model. The partitioner choice
+(vertex-cut vs edge-cut) is orthogonal and lives in the PartitionedGraph,
+exactly the DRONE-VC / DRONE-EC split of §8.
+
+Backends:
+  - ``sim``       — single-process: [P, ...] stacked arrays, vmapped local
+    phase, SBS = axis-0 reductions. Used by tests/benchmarks on CPU.
+  - ``shard_map`` — production: partitions on the (pod, data) mesh axes, the
+    model axis shards each partition's *edges* (hierarchical SVHM,
+    DESIGN.md §2); SBS = lax.pmin/psum over (pod, data), intra-partition
+    edge-combine = collectives over (model,).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import sbs
+from repro.core.api import DeviceSubgraph, VertexProgram
+from repro.core.metrics import ExecutionStats
+from repro.core.subgraph import PartitionedGraph
+
+__all__ = ["EngineConfig", "EdgeCombine", "run", "run_sim", "run_shard_map"]
+
+
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class EdgeCombine:
+    """Merges edge-parallel partial aggregates inside a partition.
+
+    Programs call ``ec.sum/min/max`` on any value derived from a reduction
+    over the partition's edges. In the simulator this is the identity; under
+    shard_map it reduces over the model axis, which shards the edge list.
+    """
+
+    axis_names: tuple = ()
+
+    def sum(self, x):
+        return jax.lax.psum(x, self.axis_names) if self.axis_names else x
+
+    def min(self, x):
+        return jax.lax.pmin(x, self.axis_names) if self.axis_names else x
+
+    def max(self, x):
+        return jax.lax.pmax(x, self.axis_names) if self.axis_names else x
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    mode: str = "sc"                  # 'sc' | 'vc'
+    max_local_iters: int = 10_000     # straggler bound (DESIGN.md §7)
+    max_supersteps: int = 100_000
+    backend: str = "sim"              # 'sim' | 'shard_map'
+    trace: bool = False               # python superstep loop w/ per-step stats
+    sparse_sync_capacity: int = 0     # >0: compacted all-gather SBS (shard)
+    shard_slots: bool = False         # shard the SBS buffer over edge_axes
+    lean_frontier: bool = False       # detect changes vs last *merged* value
+                                      # (no last_out buffer; suppresses
+                                      # globally-dominated updates — §Perf)
+    subgraph_axes: tuple = ("sub",)   # mesh axes carrying partitions
+    edge_axes: tuple = ()             # mesh axes sharding edges in-partition
+    checkpoint_every: int = 0         # supersteps; 0 = off (trace mode only)
+    checkpoint_dir: Optional[str] = None
+
+    @property
+    def local_bound(self) -> int:
+        return 1 if self.mode == "vc" else self.max_local_iters
+
+
+# --------------------------------------------------------------------------- #
+def _device_subgraph(pg: PartitionedGraph) -> DeviceSubgraph:
+    """Stacked [P, ...] DeviceSubgraph pytree."""
+    assert pg.n_vertices < 2**31
+    vid32 = pg.gvid.astype(np.int64).copy()
+    vid32[~pg.vmask] = np.iinfo(np.int32).max
+    return DeviceSubgraph(
+        esrc=jnp.asarray(pg.esrc), edst=jnp.asarray(pg.edst),
+        ew=jnp.asarray(pg.ew), emask=jnp.asarray(pg.emask),
+        slot=jnp.asarray(pg.slot), vmask=jnp.asarray(pg.vmask),
+        vid32=jnp.asarray(vid32.astype(np.int32)),
+        is_frontier=jnp.asarray(pg.is_frontier),
+        out_deg=jnp.asarray(pg.out_deg), in_deg=jnp.asarray(pg.in_deg),
+        is_master=jnp.asarray(pg.is_master),
+        vlabel=None if pg.vlabel is None else jnp.asarray(pg.vlabel),
+    )
+
+
+def _local_phase(program: VertexProgram, sg: DeviceSubgraph, params, state,
+                 merged_v, ec: EdgeCombine, bound: int, first):
+    """apply incoming -> sweep to local fixed point (or one hop).
+
+    ``first`` is True at superstep 0, where there are no incoming messages
+    (paper Algorithm 1's ``if superstep = 0`` branch) and apply is skipped.
+    """
+    state = jax.lax.cond(
+        first, lambda st: st,
+        lambda st: program.apply_frontier(sg, params, st, merged_v, ec)[0],
+        state)
+    state, ch = program.sweep(sg, params, state, ec)
+
+    def cond(c):
+        i, _, chg = c
+        return (chg > 0) & (i < bound)
+
+    def body(c):
+        i, st, _ = c
+        st, chg = program.sweep(sg, params, st, ec)
+        return (i + 1, st, chg)
+
+    i, state, last_ch = jax.lax.while_loop(cond, body, (jnp.int32(1), state, ch))
+    out = program.frontier_out(sg, params, state)
+    return state, out, i, last_ch
+
+
+def _pack(program: VertexProgram, sg: DeviceSubgraph, out, last_out,
+          n_slots: int):
+    changed = program.changed_mask(out, last_out) & sg.frontier
+    buf = sbs.scatter_combine(out, sg.slot, changed, n_slots,
+                              program.combiner, program.identity)
+    return buf, changed
+
+
+# --------------------------------------------------------------------------- #
+# Simulator backend
+# --------------------------------------------------------------------------- #
+def run_sim(program: VertexProgram, pg: PartitionedGraph, params=None,
+            cfg: EngineConfig = EngineConfig(), *, resume_from=None):
+    """``resume_from``: path to a BSP checkpoint written by a previous trace
+    run (cfg.checkpoint_every) — restart mid-job (DESIGN.md §7)."""
+    sgs = _device_subgraph(pg)
+    n_slots, K = pg.n_slots, program.payload
+    ident = program.identity
+    ec = EdgeCombine(())
+    ex = sbs.SimExchange()
+
+    v_init = jax.vmap(lambda sg: program.init(sg, params, ec))(sgs)
+    last0 = jnp.full((pg.n_parts, pg.v_max, K), ident, dtype=program.dtype)
+    merged0 = jnp.full((n_slots + 1, K), ident, dtype=program.dtype)
+    start_step = 0
+    if resume_from is not None:
+        from repro.training.checkpoint import load_pytree
+        ckpt, meta = load_pytree(
+            resume_from, like=dict(state=v_init, last_out=last0,
+                                   merged=merged0, step=jnp.int32(0)))
+        v_init, last0, merged0 = ckpt["state"], ckpt["last_out"], ckpt["merged"]
+        start_step = int(ckpt["step"])
+        assert cfg.trace, "resume requires trace mode"
+
+    def superstep(state, last_out, merged_buf, first):
+        merged_v = jax.vmap(lambda sg: sbs.gather_merged(merged_buf, sg.slot))(sgs)
+        state, out, sweeps, last_ch = jax.vmap(
+            lambda sg, st, m: _local_phase(program, sg, params, st, m, ec,
+                                           cfg.local_bound, first)
+        )(sgs, state, merged_v)
+        bufs, changed = jax.vmap(
+            lambda sg, o, lo: _pack(program, sg, o, lo, n_slots)
+        )(sgs, out, last_out)
+        merged_buf = ex.all_combine(bufs, program.combiner)
+        merged_buf = merged_buf.at[n_slots].set(ident)
+        msgs = jnp.sum(changed, dtype=jnp.int32)
+        active = jnp.sum(last_ch > 0, dtype=jnp.int32)
+        return state, out, merged_buf, msgs, active, sweeps
+
+    stats = ExecutionStats()
+    epp_host = pg.edges_per_part.astype(np.int64)
+    t0 = time.perf_counter()
+
+    if cfg.trace:
+        step_fn = jax.jit(superstep)
+        state, last_out, merged_buf = v_init, last0, merged0
+        for step in range(start_step, cfg.max_supersteps):
+            state, last_out, merged_buf, msgs, active, sweeps = step_fn(
+                state, last_out, merged_buf, jnp.bool_(step == 0))
+            msgs, active = int(msgs), int(active)
+            stats.messages_per_step.append(msgs)
+            stats.active_parts_per_step.append(active)
+            stats.total_messages += msgs
+            stats.processed_edges += int(
+                (np.asarray(sweeps, dtype=np.int64) * epp_host).sum())
+            stats.total_bytes += (n_slots + 1) * K * np.dtype(program.dtype).itemsize * pg.n_parts
+            stats.supersteps = step + 1
+            if cfg.checkpoint_every and (step + 1) % cfg.checkpoint_every == 0 \
+                    and cfg.checkpoint_dir:
+                from repro.training.checkpoint import save_pytree
+                save_pytree(f"{cfg.checkpoint_dir}/bsp_{step + 1:06d}.npz",
+                            dict(state=state, last_out=last_out,
+                                 merged=merged_buf, step=step + 1))
+            if msgs == 0 and active == 0:
+                break
+    else:
+        def cond(c):
+            step, msgs, active = c[0], c[-2], c[-1]
+            return (step == 0) | (((msgs > 0) | (active > 0))
+                                  & (step < cfg.max_supersteps))
+
+        def body(c):
+            step, state, last_out, merged_buf, tot_msgs, tot_sweeps, _, _ = c
+            state, out, merged_buf, msgs, active, sweeps = superstep(
+                state, last_out, merged_buf, step == 0)
+            return (step + 1, state, out, merged_buf, tot_msgs + msgs,
+                    tot_sweeps + sweeps, msgs, active)
+
+        carry = (jnp.int32(0), v_init, last0, merged0, jnp.int32(0),
+                 jnp.zeros((pg.n_parts,), jnp.int32), jnp.int32(1),
+                 jnp.int32(1))
+        carry = jax.lax.while_loop(cond, body, carry)
+        (steps, state, last_out, merged_buf, tot_msgs, tot_sweeps, *_) = carry
+        stats.supersteps = int(steps)
+        stats.total_messages = int(tot_msgs)
+        stats.processed_edges = int(
+            (np.asarray(tot_sweeps, dtype=np.int64) * epp_host).sum())
+        stats.total_bytes = stats.supersteps * (n_slots + 1) * K * \
+            np.dtype(program.dtype).itemsize * pg.n_parts
+
+    stats.wall_time = time.perf_counter() - t0
+    results = jax.vmap(lambda sg, st: program.result(sg, params, st))(sgs, state)
+    return np.asarray(results), stats
+
+
+# --------------------------------------------------------------------------- #
+# shard_map backend
+# --------------------------------------------------------------------------- #
+def make_bsp_runner(program: VertexProgram, mesh: Mesh,
+                    cfg: EngineConfig, n_slots: int, *, has_vlabel=False):
+    """Build the shard_map'd BSP loop (shared by run_shard_map and the
+    graph-engine dry-run, which lowers it against ShapeDtypeStructs)."""
+    sub_axes = tuple(cfg.subgraph_axes)
+    edge_axes = tuple(cfg.edge_axes)
+    K = program.payload
+    ident = program.identity
+    ec = EdgeCombine(edge_axes)
+    ex = sbs.ShardExchange(sub_axes)
+    params = cfg._params  # stashed by callers (static pytree closure)
+
+    edge_spec = P(sub_axes, edge_axes if edge_axes else None)
+    vert_spec = P(sub_axes, None)
+    sg_specs = DeviceSubgraph(
+        esrc=edge_spec, edst=edge_spec, ew=edge_spec, emask=edge_spec,
+        slot=vert_spec, vmask=vert_spec, vid32=vert_spec,
+        is_frontier=vert_spec, out_deg=vert_spec, in_deg=vert_spec,
+        is_master=vert_spec,
+        vlabel=vert_spec if has_vlabel else None,
+    )
+
+    def _squeeze(x):
+        return None if x is None else x.reshape(x.shape[1:])
+
+    n_edge_shards = int(np.prod([mesh.shape[a] for a in edge_axes])) \
+        if edge_axes else 1
+    shard_slots = cfg.shard_slots and n_edge_shards > 1
+    n_loc = -(-(n_slots + 1) // n_edge_shards) if shard_slots else n_slots + 1
+
+    @partial(jax.shard_map, mesh=mesh,
+             in_specs=(sg_specs,),
+             out_specs=(vert_spec, P(), P(), P(sub_axes)),
+             check_vma=False)
+    def go(sg_block):
+        sg = DeviceSubgraph(*[_squeeze(x) for x in sg_block])
+        state = program.init(sg, params, ec)
+        last0 = jnp.full((sg.v_max, K), ident, dtype=program.dtype)
+        merged_v0 = jnp.full((sg.v_max, K), ident, dtype=program.dtype)
+
+        def _exchange_dense(out, changed):
+            buf = sbs.scatter_combine(out, sg.slot, changed, n_slots,
+                                      program.combiner, ident)
+            if cfg.sparse_sync_capacity > 0:
+                merged = sbs.compact_allgather_exchange(
+                    buf, ident, program.combiner, n_slots,
+                    cfg.sparse_sync_capacity, sub_axes)
+            else:
+                merged = ex.all_combine(buf, program.combiner)
+            merged = merged.at[n_slots].set(ident)
+            return sbs.gather_merged(merged, sg.slot)
+
+        def _exchange_sharded(out, changed):
+            # Sharded SBS (DESIGN.md §7): frontier slots are owned by the
+            # edge-axis shard slot % n_edge_shards; the (pod,data) combiner
+            # all-reduce runs on the 1/n_edge_shards slot slice, and the
+            # per-vertex merged view is rebuilt with an edge-axis combine —
+            # O(n_slots / n_edge_shards) state per device, which is what
+            # keeps the trillion-edge configuration within HBM.
+            rank = jax.lax.axis_index(edge_axes)
+            owned = changed & (sg.slot % n_edge_shards == rank)
+            slot_loc = jnp.where(owned, sg.slot // n_edge_shards, n_loc)
+            buf = sbs.scatter_combine(out, slot_loc, owned, n_loc,
+                                      program.combiner, ident)
+            merged = ex.all_combine(buf, program.combiner)
+            gather_own = sg.frontier & (sg.slot % n_edge_shards == rank)
+            mv = jnp.where(
+                gather_own[:, None],
+                merged[jnp.clip(sg.slot // n_edge_shards, 0, n_loc)], ident)
+            if program.combiner == "min":
+                return ec.min(mv)
+            if program.combiner == "max":
+                return ec.max(mv)
+            return ec.sum(jnp.where(gather_own[:, None], mv, 0).astype(mv.dtype))
+
+        def superstep(state, last_out, merged_v, first):
+            state, out, sweeps, last_ch = _local_phase(
+                program, sg, params, state, merged_v, ec, cfg.local_bound,
+                first)
+            ref = merged_v if cfg.lean_frontier else last_out
+            changed = program.changed_mask(out, ref) & sg.frontier
+            if shard_slots:
+                merged_v = _exchange_sharded(out, changed)
+            else:
+                merged_v = _exchange_dense(out, changed)
+            msgs = ex.all_sum_scalar(jnp.sum(changed, dtype=jnp.int32))
+            active = ex.all_sum_scalar((last_ch > 0).astype(jnp.int32))
+            return state, out, merged_v, msgs, active, sweeps
+
+        def cond(c):
+            step, msgs, active = c[0], c[-2], c[-1]
+            return (step == 0) | (((msgs > 0) | (active > 0))
+                                  & (step < cfg.max_supersteps))
+
+        if cfg.lean_frontier:
+            # no last_out buffer: 2 fewer [v_max, K] live values in the loop
+            def body(c):
+                step, state, merged_v, tm, tsw, _, _ = c
+                state, _, merged_v, msgs, active, sweeps = superstep(
+                    state, None, merged_v, step == 0)
+                return (step + 1, state, merged_v, tm + msgs, tsw + sweeps,
+                        msgs, active)
+
+            carry = (jnp.int32(0), state, merged_v0, jnp.int32(0),
+                     jnp.int32(0), jnp.int32(1), jnp.int32(1))
+        else:
+            def body(c):
+                step, state, last_out, merged_v, tm, tsw, _, _ = c
+                state, out, merged_v, msgs, active, sweeps = superstep(
+                    state, last_out, merged_v, step == 0)
+                return (step + 1, state, out, merged_v, tm + msgs,
+                        tsw + sweeps, msgs, active)
+
+            carry = (jnp.int32(0), state, last0, merged_v0, jnp.int32(0),
+                     jnp.int32(0), jnp.int32(1), jnp.int32(1))
+        steps, state, *_, tm, tsw, _, _ = jax.lax.while_loop(cond, body, carry)
+        res = program.result(sg, params, state)
+        return res[None], steps, tm, tsw[None]
+
+    return go
+
+
+def run_shard_map(program: VertexProgram, pg: PartitionedGraph, mesh: Mesh,
+                  params=None, cfg: EngineConfig = EngineConfig()):
+    sub_axes = tuple(cfg.subgraph_axes)
+    edge_axes = tuple(cfg.edge_axes)
+    n_sub = int(np.prod([mesh.shape[a] for a in sub_axes]))
+    n_edge = int(np.prod([mesh.shape[a] for a in edge_axes])) if edge_axes else 1
+    assert pg.n_parts == n_sub, (pg.n_parts, n_sub)
+    assert pg.e_max % n_edge == 0, "pad edges to a multiple of the edge axes"
+
+    n_slots, K = pg.n_slots, program.payload
+    cfg = dataclasses.replace(cfg)
+    cfg._params = params
+    go = make_bsp_runner(program, mesh, cfg, n_slots,
+                         has_vlabel=pg.vlabel is not None)
+    sgs = _device_subgraph(pg)
+
+    t0 = time.perf_counter()
+    with mesh:
+        res, steps, tot_msgs, sweeps_per_part = go(sgs)
+    res = np.asarray(res)
+    sweeps_per_part = np.asarray(sweeps_per_part, dtype=np.int64)
+    stats = ExecutionStats(
+        supersteps=int(steps), total_messages=int(tot_msgs),
+        processed_edges=int(
+            (sweeps_per_part * pg.edges_per_part.astype(np.int64)).sum()),
+        total_bytes=int(steps) * (n_slots + 1) * K
+        * np.dtype(program.dtype).itemsize * pg.n_parts,
+        wall_time=time.perf_counter() - t0,
+    )
+    return res, stats
+
+
+def run(program: VertexProgram, pg: PartitionedGraph, params=None,
+        cfg: EngineConfig = EngineConfig(), mesh: Optional[Mesh] = None):
+    if cfg.backend == "sim":
+        return run_sim(program, pg, params, cfg)
+    assert mesh is not None, "shard_map backend needs a mesh"
+    return run_shard_map(program, pg, mesh, params, cfg)

@@ -1,0 +1,70 @@
+"""Partitioning + execution metrics (paper §6.2).
+
+Partitioning metrics:
+  - Imbalance         = max_i |E_i| / (|E| / n)
+  - Replication Factor = sum_i |V_i| / |V|
+
+Execution metrics (gathered by the engine): supersteps, network messages
+((key,value) pairs, i.e. changed frontier slots per superstep), bytes moved,
+per-phase time breakdown, PEPS (processed edges per second, paper Fig 9).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.subgraph import PartitionedGraph
+
+__all__ = ["PartitionMetrics", "partition_metrics", "ExecutionStats"]
+
+
+@dataclasses.dataclass
+class PartitionMetrics:
+    n_parts: int
+    imbalance: float
+    replication_factor: float
+    edges_per_part_max: int
+    edges_per_part_min: int
+    n_frontier: int
+    master_balance: float  # max masters per part / mean (SBS aggregation balance)
+
+    def __str__(self):
+        return (f"P={self.n_parts} imbalance={self.imbalance:.4f} "
+                f"RF={self.replication_factor:.4f} frontier={self.n_frontier} "
+                f"master_balance={self.master_balance:.3f}")
+
+
+def partition_metrics(pg: PartitionedGraph) -> PartitionMetrics:
+    epp = pg.edges_per_part
+    vpp = pg.vertices_per_part
+    masters = (pg.is_master & pg.vmask & (pg.slot < pg.n_slots)).sum(axis=1)
+    mmean = masters.mean() if pg.n_slots else 1.0
+    return PartitionMetrics(
+        n_parts=pg.n_parts,
+        imbalance=float(epp.max() / max(epp.mean(), 1e-12)),
+        replication_factor=float(vpp.sum() / max(pg.n_vertices, 1)),
+        edges_per_part_max=int(epp.max()),
+        edges_per_part_min=int(epp.min()),
+        n_frontier=pg.n_slots,
+        master_balance=float(masters.max() / max(mmean, 1e-12)) if pg.n_slots else 1.0,
+    )
+
+
+@dataclasses.dataclass
+class ExecutionStats:
+    """Filled in by the engine; one entry per superstep when tracing."""
+    supersteps: int = 0
+    total_messages: int = 0            # changed (key,value) pairs, paper metric
+    total_bytes: int = 0               # dense SBS buffer bytes actually reduced
+    messages_per_step: list = dataclasses.field(default_factory=list)
+    active_parts_per_step: list = dataclasses.field(default_factory=list)
+    compute_time: float = 0.0
+    sync_time: float = 0.0
+    wall_time: float = 0.0
+    processed_edges: int = 0
+
+    @property
+    def peps(self) -> float:
+        """Actual processed edges per second (paper §8.5, [25])."""
+        return self.processed_edges / self.wall_time if self.wall_time else 0.0

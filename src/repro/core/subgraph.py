@@ -1,0 +1,209 @@
+"""Subgraph construction (paper §4.1, §6.3 "construct subgraphs by received
+data").
+
+Given an edge -> partition assignment (any vertex-cut or edge-cut partitioner),
+build the device-ready ``PartitionedGraph``: dense padded per-partition arrays
+with *local* int32 vertex indexing, plus the frontier-slot structure that SBS
+(subgraph boundary synchronization) reduces over.
+
+Frontier vertices (replicated in >= 2 partitions) each get a global *slot* in
+``[0, n_slots)``. SBS scatters local contributions into a ``[n_slots(+1)]``
+buffer, all-reduces it with the algorithm's combiner across the subgraph mesh
+axes, and gathers merged values back — the TPU-native realization of the
+paper's master/mirror Aggregate+Disseminate (DESIGN.md §2). The paper's
+master designation survives as ``is_master`` (random replica election via
+hash, §4.3) and is used for result collection and the aggregation-balance
+statistic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core.graph import Graph, splitmix64
+
+__all__ = ["PartitionedGraph", "build_partitioned_graph"]
+
+
+def _pad_to(arr: np.ndarray, n: int, fill) -> np.ndarray:
+    out = np.full((n,) + arr.shape[1:], fill, dtype=arr.dtype)
+    out[: arr.shape[0]] = arr
+    return out
+
+
+@dataclasses.dataclass
+class PartitionedGraph:
+    """Dense, padded, device-ready partitioned graph.
+
+    All ``[P, ...]`` arrays are numpy on the host; the engine moves them to
+    device (full for the simulator backend, per-shard under shard_map).
+    """
+
+    n_parts: int
+    n_vertices: int      # global vertex count
+    n_edges: int         # global edge count (unpadded)
+    n_slots: int         # number of frontier (replicated) vertices
+    v_max: int           # padded per-partition vertex capacity
+    e_max: int           # padded per-partition edge capacity
+
+    gvid: np.ndarray     # [P, v_max] int64 global id per local slot (-1 pad)
+    vmask: np.ndarray    # [P, v_max] bool
+    esrc: np.ndarray     # [P, e_max] int32 local src index (0 where padded)
+    edst: np.ndarray     # [P, e_max] int32 local dst index, sorted ascending
+    ew: np.ndarray       # [P, e_max] float32 edge weight (0 where padded)
+    emask: np.ndarray    # [P, e_max] bool
+    slot: np.ndarray     # [P, v_max] int32 frontier slot id; n_slots if none
+    is_frontier: np.ndarray  # [P, v_max] bool — vertex replicated elsewhere
+    out_deg: np.ndarray  # [P, v_max] float32 FULL (global) out-degree
+    in_deg: np.ndarray   # [P, v_max] float32 FULL (global) in-degree
+    is_master: np.ndarray  # [P, v_max] bool
+
+    frontier_gvid: np.ndarray  # [n_slots] int64
+    edge_part: Optional[np.ndarray] = None  # [E] int32 host-side assignment
+    vlabel: Optional[np.ndarray] = None     # [P, v_max] int32 (gsim labels)
+
+    # ------------------------------------------------------------------ #
+    @property
+    def edges_per_part(self) -> np.ndarray:
+        return self.emask.sum(axis=1)
+
+    @property
+    def vertices_per_part(self) -> np.ndarray:
+        return self.vmask.sum(axis=1)
+
+    def device_arrays(self) -> dict:
+        """The pytree the engine ships to device."""
+        d = dict(esrc=self.esrc, edst=self.edst, ew=self.ew, emask=self.emask,
+                 slot=self.slot, vmask=self.vmask, is_frontier=self.is_frontier,
+                 out_deg=self.out_deg, in_deg=self.in_deg,
+                 is_master=self.is_master)
+        if self.vlabel is not None:
+            d["vlabel"] = self.vlabel
+        return d
+
+    # ------------------------------------------------------------------ #
+    def collect(self, values: np.ndarray, fill=0) -> np.ndarray:
+        """Gather per-vertex results from master replicas into a global
+        [n_vertices, ...] array (paper: masters hold the primary value)."""
+        values = np.asarray(values)
+        out = np.full((self.n_vertices,) + values.shape[2:], fill,
+                      dtype=values.dtype)
+        sel = self.vmask & self.is_master
+        out[self.gvid[sel]] = values[sel]
+        return out
+
+    def set_vertex_labels(self, labels: np.ndarray) -> None:
+        """Attach global per-vertex int labels (graph simulation §7.3)."""
+        lab = np.zeros((self.n_parts, self.v_max), dtype=np.int32)
+        lab[self.vmask] = labels[self.gvid[self.vmask]]
+        self.vlabel = lab
+
+
+def build_partitioned_graph(g: Graph, edge_part: np.ndarray, n_parts: int,
+                            *, pad_multiple: int = 8,
+                            include_isolated: bool = True) -> PartitionedGraph:
+    edge_part = np.asarray(edge_part, dtype=np.int32)
+    assert edge_part.shape == g.src.shape
+    P = n_parts
+
+    # ---- group edges by partition -------------------------------------- #
+    order = np.argsort(edge_part, kind="stable")
+    ps, pd = g.src[order], g.dst[order]
+    pw = g.weights[order]
+    counts = np.bincount(edge_part, minlength=P).astype(np.int64)
+    starts = np.concatenate([[0], np.cumsum(counts)])
+
+    # ---- per-partition vertex sets (endpoints of local edges) ---------- #
+    pair_part = np.concatenate([edge_part, edge_part]).astype(np.int64)
+    pair_vid = np.concatenate([g.src, g.dst])
+    key = pair_part * np.int64(g.n_vertices) + pair_vid
+    ukey = np.unique(key)
+    up = (ukey // g.n_vertices).astype(np.int32)
+    uv = (ukey % g.n_vertices).astype(np.int64)
+
+    # isolated vertices -> round-robin
+    if include_isolated:
+        iso = g.isolated_vertices()
+        if iso.size:
+            iso_p = (splitmix64(iso.astype(np.uint64)) % np.uint64(P)).astype(np.int32)
+            up = np.concatenate([up, iso_p])
+            uv = np.concatenate([uv, iso])
+            re = np.lexsort((uv, up))
+            up, uv = up[re], uv[re]
+
+    vcounts = np.bincount(up, minlength=P).astype(np.int64)
+    vstarts = np.concatenate([[0], np.cumsum(vcounts)])
+
+    # ---- replica counts and frontier slots ------------------------------ #
+    replica_count = np.bincount(uv, minlength=g.n_vertices)
+    frontier_gvid = np.nonzero(replica_count >= 2)[0].astype(np.int64)
+    n_slots = int(frontier_gvid.shape[0])
+    slot_of_gvid = np.full(g.n_vertices, n_slots, dtype=np.int64)
+    slot_of_gvid[frontier_gvid] = np.arange(n_slots)
+
+    # ---- master election (random replica via hash, paper §4.3) --------- #
+    # replicas of v appear consecutively in (uv sorted by (vid)); pick
+    # hash(v) % replica_count-th one.
+    v_sort = np.argsort(uv, kind="stable")
+    uv_s = uv[v_sort]
+    first_occ = np.concatenate([[True], uv_s[1:] != uv_s[:-1]])
+    group_start = np.maximum.accumulate(np.where(first_occ, np.arange(uv_s.size), 0))
+    rank_in_group = np.arange(uv_s.size) - group_start
+    pick = (splitmix64(uv_s.astype(np.uint64)) % replica_count[uv_s].astype(np.uint64)).astype(np.int64)
+    master_sorted = rank_in_group == pick
+    is_master_flat = np.zeros(uv.size, dtype=bool)
+    is_master_flat[v_sort] = master_sorted
+
+    # ---- padded sizes ---------------------------------------------------- #
+    def _round(n):
+        return int(-(-max(n, 1) // pad_multiple) * pad_multiple)
+
+    v_max = _round(int(vcounts.max()))
+    e_max = _round(int(counts.max()))
+
+    gvid = np.full((P, v_max), -1, dtype=np.int64)
+    vmask = np.zeros((P, v_max), dtype=bool)
+    slot = np.full((P, v_max), n_slots, dtype=np.int32)
+    is_master = np.zeros((P, v_max), dtype=bool)
+    out_deg = np.zeros((P, v_max), dtype=np.float32)
+    in_deg = np.zeros((P, v_max), dtype=np.float32)
+    esrc = np.zeros((P, e_max), dtype=np.int32)
+    edst = np.zeros((P, e_max), dtype=np.int32)
+    ew = np.zeros((P, e_max), dtype=np.float32)
+    emask = np.zeros((P, e_max), dtype=bool)
+
+    g_out = g.out_degrees().astype(np.float32)
+    g_in = g.in_degrees().astype(np.float32)
+
+    for p in range(P):
+        lv = uv[vstarts[p]:vstarts[p + 1]]           # sorted ascending
+        nv = lv.shape[0]
+        gvid[p, :nv] = lv
+        vmask[p, :nv] = True
+        slot[p, :nv] = slot_of_gvid[lv]
+        is_master[p, :nv] = is_master_flat[vstarts[p]:vstarts[p + 1]]
+        out_deg[p, :nv] = g_out[lv]
+        in_deg[p, :nv] = g_in[lv]
+
+        es, ed = ps[starts[p]:starts[p + 1]], pd[starts[p]:starts[p + 1]]
+        w = pw[starts[p]:starts[p + 1]]
+        ls = np.searchsorted(lv, es).astype(np.int32)
+        ld = np.searchsorted(lv, ed).astype(np.int32)
+        # sort local edges by destination (segment ops expect sorted ids)
+        eo = np.argsort(ld, kind="stable")
+        ne = es.shape[0]
+        esrc[p, :ne] = ls[eo]
+        edst[p, :ne] = ld[eo]
+        ew[p, :ne] = w[eo]
+        emask[p, :ne] = True
+
+    return PartitionedGraph(
+        n_parts=P, n_vertices=g.n_vertices, n_edges=g.n_edges,
+        n_slots=n_slots, v_max=v_max, e_max=e_max,
+        gvid=gvid, vmask=vmask, esrc=esrc, edst=edst, ew=ew, emask=emask,
+        slot=slot, is_frontier=(slot < n_slots) & vmask,
+        out_deg=out_deg, in_deg=in_deg, is_master=is_master,
+        frontier_gvid=frontier_gvid, edge_part=edge_part,
+    )

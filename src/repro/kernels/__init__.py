@@ -1,0 +1,5 @@
+from repro.kernels.bsp_spmv import bsp_spmv
+from repro.kernels.segment_combine import segment_combine_windowed
+from repro.kernels import ops, ref
+
+__all__ = ["bsp_spmv", "segment_combine_windowed", "ops", "ref"]

@@ -1,0 +1,148 @@
+"""Host-side layout builders + jit'd wrappers around the Pallas kernels.
+
+``build_tiles``        COO edges -> dst-major dense 128x128 tile list
+                       (bsp_spmv input; identity filler rows guarantee every
+                       output block is visited).
+``window_align_edges`` dst-sorted COO -> per-128-row-window edge blocks
+                       (segment_combine_windowed input; empty windows get one
+                       identity block).
+``spmv``               end-to-end semiring SpMV on COO via either kernel,
+                       validated against ref.ref_* in tests.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.kernels.bsp_spmv import TM, TN, bsp_spmv
+from repro.kernels.segment_combine import W, segment_combine_windowed
+from repro.kernels.ref import semiring_identity
+
+__all__ = ["build_tiles", "window_align_edges", "spmv", "TileLayout",
+           "WindowLayout"]
+
+
+class TileLayout:
+    """Dense-tile decomposition of one partition's adjacency (COO -> tiles)."""
+
+    def __init__(self, src, dst, w, n_src_rows, n_dst_rows, semiring):
+        src = np.asarray(src, np.int64)
+        dst = np.asarray(dst, np.int64)
+        w = np.asarray(w, np.float32)
+        ident = float(semiring_identity(semiring))
+        self.semiring = semiring
+        self.n_src_tiles = max(-(-int(n_src_rows) // TN), 1)
+        self.n_dst_tiles = max(-(-int(n_dst_rows) // TM), 1)
+
+        td, ts = dst // TM, src // TN
+        key = td * self.n_src_tiles + ts
+        order = np.argsort(key, kind="stable")
+        key_s = key[order]
+        uniq, start = np.unique(key_s, return_index=True)
+        # one tile per unique (dst,src) block + identity fillers for dst rows
+        # with no tiles at all
+        covered = np.zeros(self.n_dst_tiles, bool)
+        covered[(uniq // self.n_src_tiles).astype(np.int64)] = True
+        missing = np.nonzero(~covered)[0]
+        T = uniq.shape[0] + missing.shape[0]
+
+        tiles = np.full((T, TM, TN), ident, np.float32)
+        tile_dst = np.zeros(T, np.int32)
+        tile_src = np.zeros(T, np.int32)
+        tile_dst[:uniq.shape[0]] = (uniq // self.n_src_tiles).astype(np.int32)
+        tile_src[:uniq.shape[0]] = (uniq % self.n_src_tiles).astype(np.int32)
+        tile_dst[uniq.shape[0]:] = missing.astype(np.int32)
+
+        tidx = np.searchsorted(uniq, key)               # tile index per edge
+        r = (dst % TM).astype(np.int64)
+        c = (src % TN).astype(np.int64)
+        if semiring == "plus_times":
+            np.add.at(tiles, (tidx, r, c), w)
+        else:
+            np.minimum.at(tiles, (tidx, r, c), w)
+
+        # re-sort whole list dst-major (fillers interleaved correctly)
+        final = np.lexsort((tile_src, tile_dst))
+        self.tiles = tiles[final]
+        self.tile_dst = tile_dst[final]
+        self.tile_src = tile_src[final]
+        self.density = (self.tiles != ident).mean()
+
+    def __call__(self, vals, *, interpret=True):
+        """vals [n_src_rows(+pad), K] -> [n_dst_tiles*TM, K]."""
+        K = vals.shape[-1]
+        pad = self.n_src_tiles * TN - vals.shape[0]
+        ident = semiring_identity(self.semiring)
+        v = jnp.pad(vals.astype(jnp.float32), ((0, pad), (0, 0)),
+                    constant_values=ident)
+        v = v.reshape(self.n_src_tiles, TN, K)
+        out = bsp_spmv(jnp.asarray(self.tiles), jnp.asarray(self.tile_dst),
+                       jnp.asarray(self.tile_src), v,
+                       n_dst_tiles=self.n_dst_tiles, semiring=self.semiring,
+                       interpret=interpret)
+        return out.reshape(self.n_dst_tiles * TM, K)
+
+
+def build_tiles(src, dst, w, n_src_rows, n_dst_rows, semiring) -> TileLayout:
+    return TileLayout(src, dst, w, n_src_rows, n_dst_rows, semiring)
+
+
+class WindowLayout:
+    """Edge blocks confined to 128-dst-row windows (segment_combine input)."""
+
+    def __init__(self, dst, n_rows, block_edges: int = 512):
+        dst = np.asarray(dst, np.int64)
+        self.n_windows = max(-(-int(n_rows) // W), 1)
+        self.block_edges = Be = int(block_edges)
+        order = np.argsort(dst, kind="stable")
+        self.order = order
+        dsts = dst[order]
+        win = dsts // W
+        counts = np.bincount(win, minlength=self.n_windows)
+        blocks = np.maximum(-(-counts // Be), 1)         # >=1 block per window
+        self.n_blocks = int(blocks.sum())
+        self.block_window = np.repeat(np.arange(self.n_windows, dtype=np.int32),
+                                      blocks)
+        # slot of each (sorted) edge in the padded layout
+        woff = np.concatenate([[0], np.cumsum(blocks)])[:-1] * Be
+        estart = np.concatenate([[0], np.cumsum(counts)])[:-1]
+        self.edge_slot = woff[win] + (np.arange(dsts.shape[0]) - estart[win])
+        self.local_dst = np.zeros(self.n_blocks * Be, np.int32)
+        self.local_dst[self.edge_slot] = (dsts % W).astype(np.int32)
+        self.pad_mask = np.ones(self.n_blocks * Be, bool)
+        self.pad_mask[self.edge_slot] = False
+
+    def __call__(self, msgs, *, combiner="sum", interpret=True):
+        """msgs [E, K] (in original edge order) -> [n_rows(+pad), K]."""
+        K = msgs.shape[-1]
+        ident = {"sum": 0.0, "min": np.inf, "max": -np.inf}[combiner]
+        buf = jnp.full((self.n_blocks * self.block_edges, K), ident,
+                       jnp.float32)
+        buf = buf.at[jnp.asarray(self.edge_slot)].set(
+            msgs[jnp.asarray(self.order)].astype(jnp.float32))
+        out = segment_combine_windowed(
+            buf, jnp.asarray(self.local_dst), jnp.asarray(self.block_window),
+            n_windows=self.n_windows, combiner=combiner, interpret=interpret)
+        return out.reshape(self.n_windows * W, K)
+
+
+def window_align_edges(dst, n_rows, block_edges: int = 512) -> WindowLayout:
+    return WindowLayout(dst, n_rows, block_edges)
+
+
+def spmv(src, dst, w, vals, n_rows, *, semiring="plus_times", kernel="tiles",
+         interpret=True):
+    """One-shot semiring SpMV over COO edges (testing/benchmark entry)."""
+    vals = jnp.asarray(vals)
+    if vals.ndim == 1:
+        vals = vals[:, None]
+    if kernel == "tiles":
+        layout = build_tiles(src, dst, w, vals.shape[0], n_rows, semiring)
+        return layout(vals, interpret=interpret)[:n_rows]
+    # windowed: materialize edge messages then reduce
+    sv = vals[jnp.asarray(np.asarray(src, np.int64))]
+    wj = jnp.asarray(np.asarray(w, np.float32))[:, None]
+    msgs = sv * wj if semiring == "plus_times" else sv + wj
+    layout = window_align_edges(dst, n_rows)
+    comb = "sum" if semiring == "plus_times" else "min"
+    return layout(msgs, combiner=comb, interpret=interpret)[:n_rows]

@@ -1,0 +1,76 @@
+"""Pure-jnp oracles for the Pallas kernels (allclose targets).
+
+Semirings (DESIGN.md §5): the SVHM local relaxation sweep is a semiring SpMV
+over the partition's adjacency:
+  - ``plus_times`` : out[d] = sum_s A[d,s] * v[s]      (PageRank push)
+  - ``min_plus``   : out[d] = min_s A[d,s] + v[s]      (SSSP relax; CC with 0
+                     weights — min-label propagation)
+Absent entries are the semiring's multiplicative-absorbing pad: 0 for
+plus_times, +inf for min_plus.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def semiring_identity(semiring: str):
+    return jnp.float32(0.0) if semiring == "plus_times" else jnp.float32(jnp.inf)
+
+
+def ref_tile_spmv(tiles, tile_dst, tile_src, vals, n_dst_tiles, semiring):
+    """Oracle for kernels.bsp_spmv.
+
+    tiles:    [T, tm, tn] dense tile values (pad = semiring absorbing elem)
+    tile_dst: [T] int32 dst tile row per tile
+    tile_src: [T] int32 src tile col per tile
+    vals:     [n_src_tiles, tn, K]
+    returns   [n_dst_tiles, tm, K]
+    """
+    T, tm, tn = tiles.shape
+    K = vals.shape[-1]
+    ident = semiring_identity(semiring)
+    out = jnp.full((n_dst_tiles, tm, K), ident, jnp.float32)
+    v = vals[tile_src]                                   # [T, tn, K]
+    if semiring == "plus_times":
+        part = jnp.einsum("tmn,tnk->tmk", tiles, v)      # [T, tm, K]
+        return out.at[tile_dst].add(part)
+    cand = tiles[:, :, :, None] + v[:, None, :, :]       # [T, tm, tn, K]
+    part = jnp.min(cand, axis=2)                         # [T, tm, K]
+    return out.at[tile_dst].min(part)
+
+
+def ref_segment_combine(msgs, seg_ids, n_segments, combiner):
+    """Oracle for kernels.segment_combine: combine msgs[e] into seg_ids[e].
+
+    msgs: [E, K]; seg_ids: [E] int32 sorted ascending; returns [n_segments, K]
+    (identity rows for empty segments).
+    """
+    if combiner == "sum":
+        out = jnp.zeros((n_segments, msgs.shape[-1]), msgs.dtype)
+        return out.at[seg_ids].add(msgs)
+    if combiner == "min":
+        out = jnp.full((n_segments, msgs.shape[-1]), jnp.inf, msgs.dtype)
+        return out.at[seg_ids].min(msgs)
+    if combiner == "max":
+        out = jnp.full((n_segments, msgs.shape[-1]), -jnp.inf, msgs.dtype)
+        return out.at[seg_ids].max(msgs)
+    raise ValueError(combiner)
+
+
+def dense_from_tiles(tiles, tile_dst, tile_src, n_dst_tiles, n_src_tiles,
+                     semiring):
+    """Expand the tile list into a dense [n_dst*tm, n_src*tn] matrix (small
+    test graphs only) — second-level oracle used to cross-check the tile
+    builder itself."""
+    T, tm, tn = tiles.shape
+    ident = float(semiring_identity(semiring))
+    dense = np.full((n_dst_tiles * tm, n_src_tiles * tn), ident, np.float32)
+    for t in range(T):
+        r, c = int(tile_dst[t]) * tm, int(tile_src[t]) * tn
+        block = np.asarray(tiles[t])
+        if semiring == "plus_times":
+            dense[r:r + tm, c:c + tn] += block
+        else:
+            dense[r:r + tm, c:c + tn] = np.minimum(dense[r:r + tm, c:c + tn], block)
+    return dense

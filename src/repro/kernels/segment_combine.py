@@ -1,0 +1,95 @@
+"""Windowed one-hot segment combine — general-case SpMV reduce as a Pallas
+TPU kernel (DESIGN.md §5).
+
+The XLA fallback for the SVHM sweep's reduce-by-destination is a scatter,
+which serializes badly on TPU. This kernel instead processes *edge blocks*
+whose destinations are confined to one 128-row output window (a layout
+produced by ``ops.window_align_edges`` — edges sorted by dst, padded per
+window to a multiple of the block size, empty windows given one identity
+block). No dynamic gather/scatter is needed inside the kernel:
+
+  onehot[e, w] = (local_dst[e] == w)        # iota compare, VPU
+  sum:  out_window += onehot.T @ msgs       # [W, Be] @ [Be, K] -> MXU
+  min:  out_window = min(out_window, min_e where(onehot, msgs, +inf))
+
+Scalar-prefetched ``block_window[b]`` routes each edge block to its output
+window; consecutive blocks of the same window accumulate in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+W = 128       # output rows per window
+
+
+def _kernel(block_window_ref, msgs_ref, ldst_ref, out_ref, *, combiner: str):
+    b = pl.program_id(0)
+    prev = block_window_ref[jnp.maximum(b - 1, 0)]
+    first = (b == 0) | (block_window_ref[b] != prev)
+
+    msgs = msgs_ref[0]                                   # [Be, K]
+    ldst = ldst_ref[0]                                   # [Be]
+    onehot = (ldst[:, None] ==
+              jax.lax.broadcasted_iota(jnp.int32, (ldst.shape[0], W), 1))
+
+    if combiner == "sum":
+        part = jnp.dot(onehot.astype(msgs.dtype).T, msgs,
+                       preferred_element_type=jnp.float32)           # MXU
+
+        @pl.when(first)
+        def _init():
+            out_ref[0] = part
+
+        @pl.when(jnp.logical_not(first))
+        def _acc():
+            out_ref[0] += part
+    else:
+        ident = jnp.float32(jnp.inf) if combiner == "min" else jnp.float32(-jnp.inf)
+        cand = jnp.where(onehot[:, :, None], msgs[:, None, :], ident)  # [Be,W,K]
+        red = jnp.min if combiner == "min" else jnp.max
+        part = red(cand, axis=0)                                       # [W, K]
+
+        @pl.when(first)
+        def _init():
+            out_ref[0] = part
+
+        @pl.when(jnp.logical_not(first))
+        def _acc():
+            cur = out_ref[0]
+            out_ref[0] = jnp.minimum(cur, part) if combiner == "min" \
+                else jnp.maximum(cur, part)
+
+
+@functools.partial(jax.jit, static_argnames=("n_windows", "combiner",
+                                             "interpret"))
+def segment_combine_windowed(msgs, local_dst, block_window, *, n_windows: int,
+                             combiner: str = "sum", interpret: bool = True):
+    """msgs [B*Be, K] f32 (identity-padded), local_dst [B*Be] i32 in [0, W),
+    block_window [B] i32 sorted ascending covering every window
+    ->  [n_windows, W, K] f32."""
+    B = block_window.shape[0]
+    Be = msgs.shape[0] // B
+    K = msgs.shape[-1]
+    msgs = msgs.reshape(B, Be, K)
+    local_dst = local_dst.reshape(B, Be)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, Be, K), lambda b, bw: (b, 0, 0)),
+            pl.BlockSpec((1, Be), lambda b, bw: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, W, K), lambda b, bw: (bw[b], 0, 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, combiner=combiner),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_windows, W, K), jnp.float32),
+        interpret=interpret,
+    )(block_window, msgs, local_dst)

@@ -1,0 +1,118 @@
+"""Collective/byte statistics from compiled HLO text (roofline inputs).
+
+``compiled.cost_analysis()`` reports FLOPs and bytes accessed but NOT
+collective traffic; we parse the post-SPMD optimized HLO and sum the shapes
+flowing through every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute. Per-op byte accounting (per participating device):
+
+  all-gather:          output_bytes * (N-1)/N     received
+  all-reduce:          2 * bytes * (N-1)/N        (ring: RS + AG phases)
+  reduce-scatter:      input_bytes * (N-1)/N
+  all-to-all:          bytes * (N-1)/N
+  collective-permute:  bytes                       (one hop)
+
+N = participants per replica group (parsed from replica_groups when
+available, else the mesh size hint).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+import numpy as np
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s+(.{0,400}?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_GROUPS2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str, default_group: int = 2) -> dict:
+    """Sum per-device collective bytes by op kind."""
+    per_kind = defaultdict(float)
+    counts = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m or m.group(3) == "-done":
+            continue
+        result_txt, kind = m.group(1), m.group(2)
+        size = _shape_bytes(result_txt)
+        # participants
+        g = _GROUPS_RE.search(line)
+        if g:
+            n = len([x for x in g.group(1).split(",") if x.strip() != ""])
+        else:
+            g2 = _GROUPS2_RE.search(line)
+            n = int(g2.group(2)) if g2 else default_group
+        n = max(n, 2)
+        frac = (n - 1) / n
+        if kind == "all-gather":
+            moved = size * frac
+        elif kind == "all-reduce":
+            moved = 2 * size * frac
+        elif kind == "reduce-scatter":
+            # result is the scattered shard; ring moves input = shard * N
+            moved = size * n * frac
+        elif kind == "all-to-all":
+            moved = size * frac
+        else:  # collective-permute
+            moved = size
+        per_kind[kind] += moved
+        counts[kind] += 1
+    total = float(sum(per_kind.values()))
+    return {"bytes_per_device": total,
+            "by_kind": {k: float(v) for k, v in per_kind.items()},
+            "counts": dict(counts)}
+
+
+def cost_stats(compiled) -> dict:
+    out = {}
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, list):
+            ca = ca[0]
+        for k in ("flops", "bytes accessed", "transcendentals",
+                  "optimal_seconds"):
+            if k in ca:
+                out[k.replace(" ", "_")] = float(ca[k])
+        out["_raw_keys"] = sorted(ca.keys())[:50]
+    except Exception as e:  # pragma: no cover
+        out["error"] = repr(e)
+    return out
+
+
+def memory_stats(compiled) -> dict:
+    out = {}
+    try:
+        ma = compiled.memory_analysis()
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "alias_size_in_bytes",
+                  "generated_code_size_in_bytes",
+                  "host_argument_size_in_bytes"):
+            if hasattr(ma, k):
+                out[k] = int(getattr(ma, k))
+    except Exception as e:  # pragma: no cover
+        out["error"] = repr(e)
+    return out

@@ -1,0 +1,257 @@
+"""Loop-aware HLO accounting.
+
+XLA's HloCostAnalysis counts each computation ONCE — a scan lowered to
+``while`` with trip count 126 under-reports its body's FLOPs and collective
+bytes by 126x. This walker parses the post-optimization HLO text into
+computations, recovers while-loop trip counts from their condition
+computations, and accumulates
+
+  - matmul FLOPs:        2 * |output| * prod(contracting dims) per dot
+                         (+ convolutions via the same formula)
+  - collective bytes:    per-device moved bytes per op kind (ring model)
+  - HBM traffic proxy:   bytes of every dot/convolution operand + result
+                         (once per execution) — a lower bound on touched
+                         bytes that scales with trip count, unlike
+                         cost_analysis' 'bytes accessed'
+
+multiplied through while trip counts and fusion/call/conditional edges.
+Elementwise FLOPs are not counted (matmuls dominate the archs here; the
+roofline notes this).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1, "c128": 16,
+}
+
+_COMP_NAME_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(")
+_TRIP_RE = re.compile(r"known_trip_count\\?\":\{\\?\"n\\?\":\\?\"(\d+)\\?\"")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_CALLED_RE = re.compile(
+    r"(?:body|condition|calls|branch_computations|to_apply)="
+    r"(?:\{([^}]*)\}|%?([\w\.\-]+))")
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+_DOT_RE = re.compile(r"=\s*(\(?.{0,400}?)\s(dot|convolution)\(")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_LHS_SHAPE_RE = re.compile(r"(dot|convolution)\(\s*([a-z0-9]+)\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s+(.{0,400}?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(")
+_WHILE_RE = re.compile(r"\swhile\(")
+
+
+def _elems(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def _first_shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt in _DTYPE_BYTES:
+            total += _elems(dims) * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CompStats:
+    flops: float = 0.0
+    coll: dict = field(default_factory=lambda: defaultdict(float))
+    coll_counts: dict = field(default_factory=lambda: defaultdict(float))
+    hbm: float = 0.0
+    # edges: (multiplier_kind, called_comp) — 'while' resolved w/ trip count
+    whiles: list = field(default_factory=list)  # (cond, body, trip_or_None)
+    calls: list = field(default_factory=list)       # called once per exec
+    max_s32_const: int = 1
+
+
+def parse_computations(hlo: str) -> dict:
+    comps, name, buf = {}, None, []
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if name is None:
+            if stripped.endswith("{") and "->" in stripped:
+                m = _COMP_NAME_RE.match(stripped)
+                if m:
+                    name, buf = m.group(1), []
+            continue
+        if stripped == "}":
+            comps[name] = buf
+            name = None
+            continue
+        buf.append(line)
+    return comps
+
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*?)\s+[a-z][\w\-]*\(")
+_OPERAND_RE = re.compile(r"\(\s*%([\w\.\-]+)")
+
+
+def _build_symtab(lines) -> dict:
+    """instruction name -> (dims list, bytes) from its result type."""
+    tab = {}
+    for line in lines:
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        shapes = _SHAPE_RE.findall(m.group(2))
+        if shapes:
+            dt, dims = shapes[0]
+            tab[m.group(1)] = ([int(x) for x in dims.split(",") if x],
+                               _first_shape_bytes(m.group(2)))
+    return tab
+
+
+def _line_stats(line: str, st: CompStats, symtab: dict):
+    # dots / convolutions
+    m = _DOT_RE.search(line)
+    if m:
+        out_elems = 0
+        for dt, dims in _SHAPE_RE.findall(m.group(1)):
+            if dt in _DTYPE_BYTES:
+                out_elems += _elems(dims)
+        c = _CONTRACT_RE.search(line)
+        contract = 1
+        lhs_dims, lhs_bytes = None, 0
+        # operand shapes: inline (rare) or via the symbol table
+        lhs_inline = _LHS_SHAPE_RE.search(line)
+        if lhs_inline:
+            lhs_dims = [int(x) for x in lhs_inline.group(3).split(",") if x]
+        else:
+            ops = _OPERAND_RE.search(line[m.start(2):])
+            if ops and ops.group(1) in symtab:
+                lhs_dims, lhs_bytes = symtab[ops.group(1)]
+        if c and lhs_dims is not None:
+            for ci in c.group(1).split(","):
+                if ci and int(ci) < len(lhs_dims):
+                    contract *= lhs_dims[int(ci)]
+        st.flops += 2.0 * out_elems * contract
+        # HBM proxy: result + operand bytes
+        opb = 0
+        tail = line[m.start(2):]
+        for opname in re.findall(r"%([\w\.\-]+)", tail)[:4]:
+            if opname in symtab:
+                opb += symtab[opname][1]
+        st.hbm += _first_shape_bytes(m.group(1)) + opb
+    # collectives
+    mc = _COLL_RE.search(line)
+    if mc and mc.group(3) != "-done":
+        size = _first_shape_bytes(mc.group(1))
+        kind = mc.group(2)
+        n = 2.0
+        g = re.search(r"replica_groups=\{\{([0-9, ]+)\}", line)
+        if g:
+            n = max(len([x for x in g.group(1).split(",") if x.strip()]), 2)
+        else:
+            g2 = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+            if g2:
+                n = max(int(g2.group(2)), 2)
+        frac = (n - 1) / n
+        moved = {"all-gather": size * frac,
+                 "all-reduce": 2 * size * frac,
+                 "reduce-scatter": size * n * frac,
+                 "all-to-all": size * frac,
+                 "collective-permute": size}[kind]
+        st.coll[kind] += moved
+        st.coll_counts[kind] += 1
+    # constants (trip-count hints when this comp is a while condition)
+    for cst in _CONST_RE.findall(line):
+        st.max_s32_const = max(st.max_s32_const, int(cst))
+    # called computations
+    if _WHILE_RE.search(line):
+        mcond = re.search(r"condition=%?([\w\.\-]+)", line)
+        mbody = re.search(r"body=%?([\w\.\-]+)", line)
+        mt = _TRIP_RE.search(line)
+        trip = int(mt.group(1)) if mt else None
+        if mcond and mbody:
+            st.whiles.append((mcond.group(1), mbody.group(1), trip))
+    else:
+        for m2 in _CALLED_RE.finditer(line):
+            blob = m2.group(1)
+            if blob is not None:
+                for nm in blob.split(","):
+                    nm = nm.strip().lstrip("%")
+                    if nm:
+                        st.calls.append(nm)
+            elif m2.group(2):
+                st.calls.append(m2.group(2).lstrip("%"))
+
+
+def analyze(hlo: str) -> dict:
+    comps = parse_computations(hlo)
+    stats = {}
+    for nm, lines in comps.items():
+        st = CompStats()
+        symtab = _build_symtab(lines)
+        for line in lines:
+            _line_stats(line, st, symtab)
+        stats[nm] = st
+
+    memo = {}
+
+    def total(nm, depth=0):
+        if nm in memo:
+            return memo[nm]
+        if nm not in stats or depth > 50:
+            return (0.0, defaultdict(float), defaultdict(float), 0.0)
+        st = stats[nm]
+        fl = st.flops
+        co = defaultdict(float, st.coll)
+        cc = defaultdict(float, st.coll_counts)
+        hb = st.hbm
+        for callee in st.calls:
+            f2, c2, n2, h2 = total(callee, depth + 1)
+            fl += f2
+            hb += h2
+            for k, v in c2.items():
+                co[k] += v
+            for k, v in n2.items():
+                cc[k] += v
+        for cond, body, trip in st.whiles:
+            if trip is None:
+                trip = stats[cond].max_s32_const if cond in stats else 1
+            fb, cb, nb, hbb = total(body, depth + 1)
+            fc, ccnd, ncnd, hc = total(cond, depth + 1)
+            fl += trip * (fb + fc)
+            hb += trip * (hbb + hc)
+            for k, v in cb.items():
+                co[k] += trip * v
+            for k, v in nb.items():
+                cc[k] += trip * v
+        memo[nm] = (fl, co, cc, hb)
+        return memo[nm]
+
+    # entry computation: the one nobody calls
+    called = set()
+    for st in stats.values():
+        called.update(st.calls)
+        for c, b, _ in st.whiles:
+            called.update([c, b])
+    entries = [nm for nm in stats if nm not in called]
+    fl = hb = 0.0
+    co, cc = defaultdict(float), defaultdict(float)
+    for e in entries:
+        f, c, n, h = total(e)
+        fl += f
+        hb += h
+        for k, v in c.items():
+            co[k] += v
+        for k, v in n.items():
+            cc[k] += v
+    return {"dot_flops_per_device": fl,
+            "collective_bytes_per_device": float(sum(co.values())),
+            "collective_by_kind": {k: float(v) for k, v in co.items()},
+            "collective_counts": {k: float(v) for k, v in cc.items()},
+            "dot_hbm_bytes_per_device": hb,
+            "n_computations": len(comps),
+            "n_entries": len(entries)}

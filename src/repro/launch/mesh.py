@@ -1,0 +1,28 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — required by the dry-run, whose first two lines
+set XLA_FLAGS before any jax initialization.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_graph_mesh(*, multi_pod: bool = False):
+    """Same chips, graph-engine view: (pod, data) -> subgraphs, model ->
+    intra-partition edge shards (hierarchical SVHM, DESIGN.md §2)."""
+    return make_production_mesh(multi_pod=multi_pod)
+
+
+def make_host_mesh(n: int = 1, axis: str = "data"):
+    """Small CPU mesh for tests/examples."""
+    return jax.make_mesh((n,), (axis,),
+                         axis_types=(jax.sharding.AxisType.Auto,))

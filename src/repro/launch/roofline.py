@@ -1,0 +1,186 @@
+"""Roofline analysis (deliverable g) — reads the dry-run JSONs and derives
+the three terms per (arch x shape x mesh) cell on TPU v5e constants:
+
+  compute term    = dot_FLOPs_per_device / 197e12          [s]
+  memory term     = HBM_bytes_per_device / 819e9           [s]
+  collective term = collective_bytes_per_device / 50e9     [s]
+
+FLOPs/bytes come from the loop-aware HLO walk (hlo_walk.py) — XLA's
+cost_analysis does not multiply `while` bodies by their trip counts, so raw
+cost_analysis numbers are reported only as a cross-check. MODEL_FLOPS uses
+6*N*D (dense) / 6*N_active*D (MoE) per the spec; the ratio
+MODEL_FLOPS / HLO_FLOPS exposes remat/redundancy overhead.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # B/s / chip
+LINK_BW = 50e9               # B/s / link (ICI)
+HBM_CAP = 16 * 2 ** 30       # v5e HBM per chip
+
+_PARAM_CACHE = {}
+
+
+def param_counts(arch: str):
+    """(n_total, n_active) parameters (active = per-token, MoE-aware)."""
+    if arch in _PARAM_CACHE:
+        return _PARAM_CACHE[arch]
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.models import model as M
+    cfg = get_config(arch)
+    shapes = jax.eval_shape(lambda k: M.init_model(k, cfg),
+                            jax.ShapeDtypeStruct((2,), jnp.uint32))
+    total = active = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        total += n
+        keys = "".join(str(p) for p in path)
+        if cfg.moe and ("w_gate" in keys or "w_up" in keys or
+                        "w_down" in keys) and "blocks" in keys:
+            active += n * cfg.moe.top_k / cfg.moe.n_experts
+        else:
+            active += n
+    _PARAM_CACHE[arch] = (int(total), int(active))
+    return _PARAM_CACHE[arch]
+
+
+def model_flops(rec: dict) -> float:
+    """Spec MODEL_FLOPS for the cell (total across chips)."""
+    from repro.models.config import SHAPES
+    sh = SHAPES[rec["shape"]]
+    n_total, n_active = param_counts(rec["arch"])
+    if sh["kind"] == "train":
+        tokens = sh["seq_len"] * sh["global_batch"]
+        return 6.0 * n_active * tokens
+    if sh["kind"] == "prefill":
+        tokens = sh["seq_len"] * sh["global_batch"]
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * sh["global_batch"]
+
+
+def analyze_record(rec: dict) -> dict:
+    if rec.get("status") != "ok":
+        return dict(rec, terms=None)
+    w = rec["walk"]
+    n_dev = rec.get("n_devices", 512 if rec["mesh"] == "multipod" else 256)
+    t_comp = w["dot_flops_per_device"] / PEAK_FLOPS
+    t_mem = w["dot_hbm_bytes_per_device"] / HBM_BW
+    t_coll = w["collective_bytes_per_device"] / LINK_BW
+    terms = {"compute_s": t_comp, "memory_s": t_mem, "collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+    mem = rec.get("memory", {})
+    footprint = mem.get("temp_size_in_bytes", 0) + \
+        mem.get("argument_size_in_bytes", 0) / max(n_dev, 1)
+    mf = model_flops(rec) if rec.get("kind") != "graph_engine" else None
+    hlo_total = w["dot_flops_per_device"] * n_dev
+    out = dict(rec)
+    out.update(
+        terms=terms, dominant=dominant.replace("_s", ""),
+        bound_s=max(terms.values()),
+        model_flops=mf,
+        useful_ratio=(mf / hlo_total) if (mf and hlo_total) else None,
+        roofline_fraction=(min(mf / n_dev / PEAK_FLOPS, t_comp)
+                           / max(max(terms.values()), 1e-30)) if mf else None,
+        fits_hbm=footprint <= HBM_CAP,
+        temp_gib=mem.get("temp_size_in_bytes", 0) / 2 ** 30,
+    )
+    return out
+
+
+def suggestion(row: dict) -> str:
+    if row.get("terms") is None:
+        return ""
+    d = row["dominant"]
+    coll = row["walk"].get("collective_by_kind", {})
+    top_coll = max(coll, key=coll.get) if coll else ""
+    if d == "collective":
+        return (f"dominated by {top_coll}; reduce via sharding that keeps "
+                "the operand local (expert/data remap), comm-compute overlap,"
+                " or quantized payloads")
+    if d == "memory":
+        return ("HBM-bound: fuse/blockwise the dominant op, tighten remat "
+                "policy, or shard the live tensor further")
+    if (row.get("useful_ratio") or 1) < 0.4:
+        return "compute-bound but low useful ratio: cut remat recompute"
+    return "compute-bound: near the right regime; raise per-chip utilization"
+
+
+def markdown_table(rows, *, include_graph=True) -> str:
+    lines = ["| arch | shape | mesh | compute s | memory s | collective s | "
+             "dominant | MODEL/HLO | roofline frac | temp GiB | fits |",
+             "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(rows, key=lambda r: (r.get("arch", r.get("scale", "")),
+                                         r.get("shape", r.get("algo", "")),
+                                         r["mesh"])):
+        if r.get("status") == "skipped":
+            name = r.get("arch") or f"graph:{r.get('scale')}"
+            lines.append(f"| {name} | {r.get('shape') or r.get('algo')} | "
+                         f"{r['mesh']} | — | — | — | skipped | — | — | — | "
+                         f"{r['reason'][:70]}… |")
+            continue
+        if r.get("terms") is None:
+            continue
+        t = r["terms"]
+        ur = f"{r['useful_ratio']:.2f}" if r.get("useful_ratio") else "—"
+        rf = f"{r['roofline_fraction']:.2f}" if r.get("roofline_fraction") else "—"
+        name = r.get("arch") or f"graph:{r.get('scale')}"
+        if r.get("variant") not in (None, "base", "opt") or \
+                (r.get("variant") == "opt" and r.get("arch")):
+            name += f" [{r['variant']}]"
+        shape = r.get("shape") or r.get("algo")
+        lines.append(
+            f"| {name} | {shape} | {r['mesh']} | {t['compute_s']:.3e} | "
+            f"{t['memory_s']:.3e} | {t['collective_s']:.3e} | "
+            f"{r['dominant']} | {ur} | {rf} | {r['temp_gib']:.1f} | "
+            f"{'y' if r['fits_hbm'] else 'NO'} |")
+    return "\n".join(lines)
+
+
+def load_all(dry_dir: str):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dry_dir, "*.json"))):
+        with open(path) as f:
+            rows.append(analyze_record(json.load(f)))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dry", default="results/dryrun")
+    ap.add_argument("--out", default="results/roofline.md")
+    args = ap.parse_args()
+    rows = load_all(args.dry)
+    md = ["# Roofline (v5e: 197 TF/s bf16, 819 GB/s HBM, 50 GB/s/link ICI)",
+          "", markdown_table(rows), "", "## Bottleneck notes", ""]
+    for r in rows:
+        if r.get("terms") is None:
+            continue
+        name = r.get("arch") or f"graph:{r.get('scale')}"
+        if r.get("variant") not in (None, "base") and r.get("arch"):
+            name += f" [{r['variant']}]"
+        md.append(f"- **{name} / {r.get('shape') or r.get('algo')} / "
+                  f"{r['mesh']}** — {r['dominant']}-bound "
+                  f"({r['bound_s']:.2e}s): {suggestion(r)}")
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        f.write("\n".join(md) + "\n")
+    with open(args.out.replace(".md", ".json"), "w") as f:
+        json.dump([{k: v for k, v in r.items()
+                    if k not in ("traceback",)} for r in rows], f, indent=1,
+                  default=str)
+    ok = sum(1 for r in rows if r.get("status") == "ok")
+    print(f"wrote {args.out}: {ok} analyzed cells")
+
+
+if __name__ == "__main__":
+    main()

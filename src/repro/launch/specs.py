@@ -1,0 +1,61 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) cell — no
+device allocation; the dry-run lowers against these."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.models.config import SHAPES, ModelConfig, shape_applicable
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def train_batch_specs(cfg: ModelConfig, seq_len: int, global_batch: int):
+    b = {"tokens": _sds((global_batch, seq_len), jnp.int32),
+         "labels": _sds((global_batch, seq_len), jnp.int32)}
+    if cfg.frontend:
+        b["frontend"] = _sds((global_batch, cfg.frontend_len,
+                              cfg.frontend_dim), jnp.dtype(cfg.activation_dtype))
+    return b
+
+
+def prefill_batch_specs(cfg: ModelConfig, seq_len: int, global_batch: int):
+    b = {"tokens": _sds((global_batch, seq_len), jnp.int32)}
+    if cfg.frontend:
+        b["frontend"] = _sds((global_batch, cfg.frontend_len,
+                              cfg.frontend_dim), jnp.dtype(cfg.activation_dtype))
+    return b
+
+
+def decode_batch_specs(cfg: ModelConfig, global_batch: int):
+    b = {"tokens": _sds((global_batch, 1), jnp.int32)}
+    if cfg.n_enc_layers:
+        b["memory"] = _sds((global_batch, cfg.frontend_len, cfg.d_model),
+                           jnp.dtype(cfg.activation_dtype))
+    return b
+
+
+def cache_len(cfg: ModelConfig, seq_len: int) -> int:
+    """KV capacity: the context plus the modality prefix (VLM)."""
+    extra = cfg.frontend_len if (cfg.frontend and not cfg.n_enc_layers) else 0
+    return seq_len + extra
+
+
+def input_specs(cfg: ModelConfig, shape_name: str):
+    """-> (kind, batch_sds, cache_sds_or_None). kind: train|prefill|decode."""
+    ok, why = shape_applicable(cfg, shape_name)
+    if not ok:
+        raise ValueError(f"{cfg.name} x {shape_name} skipped: {why}")
+    sh = SHAPES[shape_name]
+    if sh["kind"] == "train":
+        return "train", train_batch_specs(cfg, sh["seq_len"],
+                                          sh["global_batch"]), None
+    if sh["kind"] == "prefill":
+        return "prefill", prefill_batch_specs(cfg, sh["seq_len"],
+                                              sh["global_batch"]), None
+    caches = M.init_cache(cfg, sh["global_batch"],
+                          cache_len(cfg, sh["seq_len"]))
+    return "decode", decode_batch_specs(cfg, sh["global_batch"]), caches

@@ -1,0 +1,336 @@
+"""Neural layers for the architecture zoo (pure-function JAX, no framework).
+
+Every module is a pair ``init_*(key, ...) -> params`` / ``*_apply(params, x,
+...)`` plus a parallel ``*_specs(...)`` pytree of *logical axis names* used by
+sharding/rules.py to produce PartitionSpecs. Parameters are plain nested
+dicts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# --------------------------------------------------------------------------- #
+# initializers
+# --------------------------------------------------------------------------- #
+def _dense_init(key, shape, in_axis_size, dtype):
+    scale = 1.0 / math.sqrt(max(in_axis_size, 1))
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# --------------------------------------------------------------------------- #
+# norms
+# --------------------------------------------------------------------------- #
+def init_norm(key, d, kind, dtype):
+    if kind == "rmsnorm":
+        return {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+    if kind == "nonparam_ln":   # OLMo: no learned affine
+        return {}
+    raise ValueError(kind)
+
+
+def norm_specs(kind):
+    if kind == "rmsnorm":
+        return {"scale": ("embed",)}
+    if kind == "layernorm":
+        return {"scale": ("embed",), "bias": ("embed",)}
+    return {}
+
+
+def norm_apply(params, x, kind, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+        return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+    mu = jnp.mean(xf, -1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), -1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    if kind == "layernorm":
+        y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# rotary embeddings
+# --------------------------------------------------------------------------- #
+def rope(x, positions, *, theta=10000.0, pct=1.0):
+    """x [..., S, H, D]; positions [..., S] int32."""
+    D = x.shape[-1]
+    rot = int(D * pct) // 2 * 2
+    if rot == 0:
+        return x
+    xr, xp = x[..., :rot], x[..., rot:]
+    half = rot // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    # positions [..., S] -> [..., S, 1(H), half]
+    ang = positions[..., :, None, None].astype(jnp.float32) * freq
+    x1, x2 = xr[..., :half], xr[..., half:]
+    c, s = jnp.cos(ang), jnp.sin(ang)
+    y = jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], -1)
+    return jnp.concatenate([y.astype(x.dtype), xp], -1)
+
+
+# --------------------------------------------------------------------------- #
+# dense MLP (swiglu / gelu)
+# --------------------------------------------------------------------------- #
+def init_mlp(key, d, d_ff, act, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    if act == "swiglu":
+        return {"w_gate": _dense_init(k1, (d, d_ff), d, dtype),
+                "w_up": _dense_init(k2, (d, d_ff), d, dtype),
+                "w_down": _dense_init(k3, (d_ff, d), d_ff, dtype)}
+    return {"w_in": _dense_init(k1, (d, d_ff), d, dtype),
+            "w_out": _dense_init(k2, (d_ff, d), d_ff, dtype)}
+
+
+def mlp_specs(act):
+    if act == "swiglu":
+        return {"w_gate": ("embed", "ff"), "w_up": ("embed", "ff"),
+                "w_down": ("ff", "embed")}
+    return {"w_in": ("embed", "ff"), "w_out": ("ff", "embed")}
+
+
+def mlp_apply(params, x, act):
+    if act == "swiglu":
+        g = jnp.einsum("...d,df->...f", x, params["w_gate"])
+        u = jnp.einsum("...d,df->...f", x, params["w_up"])
+        h = jax.nn.silu(g) * u
+        return jnp.einsum("...f,fd->...d", h, params["w_down"])
+    h = jax.nn.gelu(jnp.einsum("...d,df->...f", x, params["w_in"]))
+    return jnp.einsum("...f,fd->...d", h, params["w_out"])
+
+
+# --------------------------------------------------------------------------- #
+# GQA attention (with optional decode cache)
+# --------------------------------------------------------------------------- #
+def init_attention(key, cfg, dtype):
+    d, H, Hkv, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {"wq": _dense_init(k1, (d, H, Dh), d, dtype),
+            "wk": _dense_init(k2, (d, Hkv, Dh), d, dtype),
+            "wv": _dense_init(k3, (d, Hkv, Dh), d, dtype),
+            "wo": _dense_init(k4, (H, Dh, d), H * Dh, dtype)}
+
+
+def attention_specs(cfg):
+    return {"wq": ("embed", "heads", "qkv"), "wk": ("embed", "kv_heads", "qkv"),
+            "wv": ("embed", "kv_heads", "qkv"), "wo": ("heads", "qkv", "embed")}
+
+
+_SDPA_BLOCK_THRESHOLD = 4096 * 4096   # T*S above this -> blockwise path
+_SDPA_KV_BLOCK = 1024
+
+
+def _sdpa_dense(q, k, v, *, causal, q_offset, kv_len_valid=None,
+                soft_cap=0.0):
+    """q [B,T,H,D], k/v [B,S,Hkv,D] -> [B,T,H,D]; GQA via head grouping."""
+    B, T, H, D = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, T, Hkv, G, D)
+    scores = jnp.einsum("bthgd,bshd->bhgts", qg, k) / math.sqrt(D)
+    scores = scores.astype(jnp.float32)
+    if soft_cap > 0:
+        scores = soft_cap * jnp.tanh(scores / soft_cap)
+    tpos = jnp.arange(T)[:, None] + q_offset
+    spos = jnp.arange(S)[None, :]
+    mask = jnp.ones((T, S), bool)
+    if causal:
+        mask &= spos <= tpos
+    if kv_len_valid is not None:
+        mask &= spos < kv_len_valid
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgts,bshd->bthgd", p, v)
+    return out.reshape(B, T, H, v.shape[-1])
+
+
+def _sdpa_blockwise(q, k, v, *, causal, q_offset, kv_len_valid=None,
+                    soft_cap=0.0, kv_block=_SDPA_KV_BLOCK):
+    """Online-softmax blockwise attention (flash-attention dataflow in pure
+    JAX): lax.scan over KV blocks with (m, l, acc) carry — O(T * kv_block)
+    live memory instead of O(T * S) scores. The long-context prefill path;
+    on TPU the Pallas/XLA fused kernel would slot in here (DESIGN.md §5)."""
+    B, T, H, D = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    nb = -(-S // kv_block)
+    pad = nb * kv_block - S
+    k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = k.reshape(B, nb, kv_block, Hkv, k.shape[-1]).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nb, kv_block, Hkv, v.shape[-1]).transpose(1, 0, 2, 3, 4)
+    qg = q.reshape(B, T, Hkv, G, D)
+    tpos = jnp.arange(T) + q_offset
+    valid_len = S if kv_len_valid is None else kv_len_valid
+
+    def body(carry, inp):
+        m, l, acc = carry
+        j, kj, vj = inp
+        spos = j * kv_block + jnp.arange(kv_block)
+        s = jnp.einsum("bthgd,bshd->bhgts", qg, kj).astype(jnp.float32)
+        s = s / math.sqrt(D)
+        if soft_cap > 0:
+            s = soft_cap * jnp.tanh(s / soft_cap)
+        mask = (spos[None, :] < valid_len)
+        if causal:
+            mask = mask & (spos[None, :] <= tpos[:, None])
+        s = jnp.where(mask[None, None, None], s, -1e30)
+        mj = jnp.max(s, axis=-1)
+        m2 = jnp.maximum(m, mj)
+        corr = jnp.exp(m - m2)
+        p = jnp.exp(s - m2[..., None])
+        l2 = l * corr + p.sum(-1)
+        pv = jnp.einsum("bhgts,bshd->bhgtd", p.astype(vj.dtype), vj)
+        acc2 = acc * corr[..., None].astype(acc.dtype) + pv
+        return (m2, l2, acc2), None
+
+    Dv = v.shape[-1]
+    m0 = jnp.full((B, Hkv, G, T), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, T), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, G, T, Dv), v.dtype)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0),
+                                  (jnp.arange(nb), kb, vb))
+    out = acc / jnp.maximum(l, 1e-30)[..., None].astype(acc.dtype)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, T, H, Dv)
+
+
+def _sdpa(q, k, v, *, causal, q_offset, kv_len_valid=None, soft_cap=0.0):
+    T, S = q.shape[1], k.shape[1]
+    if T * S > _SDPA_BLOCK_THRESHOLD and T > 1:
+        return _sdpa_blockwise(q, k, v, causal=causal, q_offset=q_offset,
+                               kv_len_valid=kv_len_valid, soft_cap=soft_cap)
+    return _sdpa_dense(q, k, v, causal=causal, q_offset=q_offset,
+                       kv_len_valid=kv_len_valid, soft_cap=soft_cap)
+
+
+def attention_apply(params, x, cfg, *, positions, causal=True, cache=None):
+    """cache: None (full-seq) or dict(k,v [B,Smax,Hkv,D], idx scalar) for
+    one-token decode. Returns (y, new_cache)."""
+    q = jnp.einsum("btd,dhk->bthk", x, params["wq"])
+    k = jnp.einsum("btd,dhk->bthk", x, params["wk"])
+    v = jnp.einsum("btd,dhk->bthk", x, params["wv"])
+    q = rope(q, positions, theta=cfg.rope_theta, pct=cfg.rotary_pct)
+    k = rope(k, positions, theta=cfg.rope_theta, pct=cfg.rotary_pct)
+    if cache is None:
+        out = _sdpa(q, k, v, causal=causal, q_offset=0,
+                    soft_cap=cfg.attn_logit_soft_cap)
+        new_cache = {"k": k, "v": v, "idx": jnp.int32(x.shape[1])}
+    else:
+        idx = cache["idx"]
+        ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, idx, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, idx, 0, 0))
+        out = _sdpa(q, ck, cv, causal=causal, q_offset=idx,
+                    kv_len_valid=idx + x.shape[1],
+                    soft_cap=cfg.attn_logit_soft_cap)
+        new_cache = {"k": ck, "v": cv, "idx": idx + x.shape[1]}
+    y = jnp.einsum("bthk,hkd->btd", out, params["wo"])
+    return y, new_cache
+
+
+def attention_cache_shape(cfg, batch, max_len, dtype):
+    Hkv, Dh = cfg.n_kv_heads, cfg.head_dim
+    return {"k": jax.ShapeDtypeStruct((batch, max_len, Hkv, Dh), dtype),
+            "v": jax.ShapeDtypeStruct((batch, max_len, Hkv, Dh), dtype),
+            "idx": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+# --------------------------------------------------------------------------- #
+# MLA — Multi-head Latent Attention (DeepSeek-V2/V3)
+# --------------------------------------------------------------------------- #
+def init_mla(key, cfg, dtype):
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.n_heads
+    ks = jax.random.split(key, 8)
+    return {
+        "wdq": _dense_init(ks[0], (d, m.q_lora_rank), d, dtype),
+        "q_norm": init_norm(ks[1], m.q_lora_rank, "rmsnorm", dtype),
+        "wuq": _dense_init(ks[2], (m.q_lora_rank, H,
+                                   m.nope_head_dim + m.rope_head_dim),
+                           m.q_lora_rank, dtype),
+        "wdkv": _dense_init(ks[3], (d, m.kv_lora_rank + m.rope_head_dim), d,
+                            dtype),
+        "kv_norm": init_norm(ks[4], m.kv_lora_rank, "rmsnorm", dtype),
+        "wuk": _dense_init(ks[5], (m.kv_lora_rank, H, m.nope_head_dim),
+                           m.kv_lora_rank, dtype),
+        "wuv": _dense_init(ks[6], (m.kv_lora_rank, H, m.v_head_dim),
+                           m.kv_lora_rank, dtype),
+        "wo": _dense_init(ks[7], (H, m.v_head_dim, d), H * m.v_head_dim,
+                          dtype),
+    }
+
+
+def mla_specs(cfg):
+    return {"wdq": ("embed", "lora"), "q_norm": norm_specs("rmsnorm"),
+            "wuq": ("lora", "heads", "qkv"), "wdkv": ("embed", "lora"),
+            "kv_norm": norm_specs("rmsnorm"), "wuk": ("lora", "heads", "qkv"),
+            "wuv": ("lora", "heads", "qkv"), "wo": ("heads", "qkv", "embed")}
+
+
+def mla_apply(params, x, cfg, *, positions, causal=True, cache=None):
+    m = cfg.mla
+    H = cfg.n_heads
+    B, T, _ = x.shape
+    cq = norm_apply(params["q_norm"], jnp.einsum("btd,dr->btr", x, params["wdq"]),
+                    "rmsnorm")
+    q = jnp.einsum("btr,rhk->bthk", cq, params["wuq"])
+    qn, qr = q[..., :m.nope_head_dim], q[..., m.nope_head_dim:]
+    qr = rope(qr, positions, theta=cfg.rope_theta)
+
+    dkv = jnp.einsum("btd,dr->btr", x, params["wdkv"])
+    ckv = norm_apply(params["kv_norm"], dkv[..., :m.kv_lora_rank], "rmsnorm")
+    kr = rope(dkv[..., m.kv_lora_rank:][:, :, None, :], positions,
+              theta=cfg.rope_theta)[:, :, 0, :]        # shared rope key head
+
+    if cache is not None:
+        idx = cache["idx"]
+        ckv = jax.lax.dynamic_update_slice(cache["ckv"], ckv, (0, idx, 0))
+        kr = jax.lax.dynamic_update_slice(cache["kr"], kr, (0, idx, 0))
+        new_cache = {"ckv": ckv, "kr": kr, "idx": idx + T}
+        q_offset, kv_valid = idx, idx + T
+    else:
+        new_cache = {"ckv": ckv, "kr": kr, "idx": jnp.int32(T)}
+        q_offset, kv_valid = 0, None
+
+    kn = jnp.einsum("bsr,rhk->bshk", ckv, params["wuk"])
+    v = jnp.einsum("bsr,rhk->bshk", ckv, params["wuv"])
+    S = kn.shape[1]
+    # fold the shared rope key head into a concat so the standard (block-
+    # wise-capable) SDPA computes qn.kn + qr.kr in one pass
+    q_eff = jnp.concatenate([qn, qr], -1)
+    k_eff = jnp.concatenate(
+        [kn, jnp.broadcast_to(kr[:, :, None, :],
+                              (kr.shape[0], S, H, m.rope_head_dim))], -1)
+    out = _sdpa(q_eff, k_eff, v, causal=causal or cache is not None,
+                q_offset=q_offset,
+                kv_len_valid=kv_valid)
+    y = jnp.einsum("bthk,hkd->btd", out, params["wo"])
+    return y, new_cache
+
+
+def mla_cache_shape(cfg, batch, max_len, dtype):
+    m = cfg.mla
+    return {"ckv": jax.ShapeDtypeStruct((batch, max_len, m.kv_lora_rank), dtype),
+            "kr": jax.ShapeDtypeStruct((batch, max_len, m.rope_head_dim), dtype),
+            "idx": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+# --------------------------------------------------------------------------- #
+# cross attention (enc-dec)
+# --------------------------------------------------------------------------- #
+def init_cross_attention(key, cfg, dtype):
+    return init_attention(key, cfg, dtype)
+
+
+def cross_attention_apply(params, x, memory, cfg, *, positions):
+    q = jnp.einsum("btd,dhk->bthk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", memory, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", memory, params["wv"])
+    out = _sdpa(q, k, v, causal=False, q_offset=0)
+    return jnp.einsum("bthk,hkd->btd", out, params["wo"])

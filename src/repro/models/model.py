@@ -1,0 +1,398 @@
+"""Model assembly: config -> init / forward / prefill / decode.
+
+Layers are grouped into periodic *super-blocks* (config.super_blocks) whose
+parameters are stacked on a leading repeat axis and applied with ``lax.scan``
+(+ ``jax.checkpoint`` remat) — compact HLO even for llama3-405b's 126 layers,
+and the scan carry is the natural FSDP all-gather overlap point.
+
+Supports: dense/GQA/MLA attention, MoE (shared+routed), Mamba, mLSTM/sLSTM,
+encoder-decoder (cross-attention), modality frontend stubs (precomputed
+patch/frame embeddings per the assignment spec), and DeepSeek-style MTP.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import moe as moe_lib
+from repro.models import ssm
+from repro.models.config import BlockSpec, ModelConfig
+from repro.sharding.rules import maybe_constrain
+from repro.models.layers import (_dense_init, attention_apply,
+                                 attention_cache_shape, attention_specs,
+                                 cross_attention_apply, init_attention,
+                                 init_cross_attention, init_mla, init_mlp,
+                                 init_norm, mla_apply, mla_cache_shape,
+                                 mla_specs, mlp_apply, mlp_specs, norm_apply,
+                                 norm_specs)
+
+# --------------------------------------------------------------------------- #
+# one block
+# --------------------------------------------------------------------------- #
+_MIXER_INIT = {"attn": init_attention, "mla": init_mla,
+               "mamba": ssm.init_mamba, "mlstm": ssm.init_mlstm,
+               "slstm": ssm.init_slstm}
+_MIXER_SPECS = {"attn": attention_specs, "mla": mla_specs,
+                "mamba": ssm.mamba_specs, "mlstm": ssm.mlstm_specs,
+                "slstm": ssm.slstm_specs}
+
+
+def init_block(key, spec: BlockSpec, cfg: ModelConfig, dtype):
+    ks = jax.random.split(key, 6)
+    p = {"norm1": init_norm(ks[0], cfg.d_model, cfg.norm, dtype),
+         "mixer": _MIXER_INIT[spec.mixer](ks[1], cfg, dtype)}
+    if getattr(spec, "cross", False):
+        p["norm_cross"] = init_norm(ks[2], cfg.d_model, cfg.norm, dtype)
+        p["cross"] = init_cross_attention(ks[3], cfg, dtype)
+    if spec.mlp != "none":
+        p["norm2"] = init_norm(ks[4], cfg.d_model, cfg.norm, dtype)
+        p["mlp"] = (moe_lib.init_moe(ks[5], cfg, dtype) if spec.mlp == "moe"
+                    else init_mlp(ks[5], cfg.d_model, cfg.d_ff, cfg.act, dtype))
+    return p
+
+
+def block_specs(spec: BlockSpec, cfg: ModelConfig):
+    s = {"norm1": norm_specs(cfg.norm),
+         "mixer": _MIXER_SPECS[spec.mixer](cfg)}
+    if getattr(spec, "cross", False):
+        s["norm_cross"] = norm_specs(cfg.norm)
+        s["cross"] = attention_specs(cfg)
+    if spec.mlp != "none":
+        s["norm2"] = norm_specs(cfg.norm)
+        s["mlp"] = (moe_lib.moe_specs(cfg) if spec.mlp == "moe"
+                    else mlp_specs(cfg.act))
+    return s
+
+
+def _cast_floats(tree, dtype):
+    """Compute-dtype cast (flax 'dtype' semantics): float params are cast to
+    the activation dtype at application time; int/bool left alone."""
+    return jax.tree.map(
+        lambda p: p.astype(dtype) if jnp.issubdtype(p.dtype, jnp.floating)
+        else p, tree)
+
+
+def block_apply(params, x, spec: BlockSpec, cfg: ModelConfig, *, positions,
+                causal=True, cache=None, memory=None):
+    params = _cast_floats(params, jnp.dtype(cfg.activation_dtype))
+    if cfg.fsdp_gather_weights:
+        from repro.sharding.rules import constrain_gathered
+        params = constrain_gathered(params, block_specs(spec, cfg))
+    h = norm_apply(params["norm1"], x, cfg.norm)
+    if spec.mixer in ("attn", "mla"):
+        fn = attention_apply if spec.mixer == "attn" else mla_apply
+        out, new_cache = fn(params["mixer"], h, cfg, positions=positions,
+                            causal=causal, cache=cache)
+    elif spec.mixer == "mamba":
+        out, new_cache = ssm.mamba_apply(params["mixer"], h, cfg, cache=cache)
+    elif spec.mixer == "mlstm":
+        out, new_cache = ssm.mlstm_apply(params["mixer"], h, cfg, cache=cache)
+    else:
+        out, new_cache = ssm.slstm_apply(params["mixer"], h, cfg, cache=cache)
+    def _settle(o):
+        o = o.astype(x.dtype)
+        if cfg.tp_bf16_payload:
+            o = jax.lax.optimization_barrier(o)
+        return o
+
+    x = x + _settle(out)
+
+    if getattr(spec, "cross", False):
+        h = norm_apply(params["norm_cross"], x, cfg.norm)
+        x = x + _settle(cross_attention_apply(params["cross"], h, memory,
+                                              cfg, positions=positions))
+
+    aux = None
+    if spec.mlp != "none":
+        h = norm_apply(params["norm2"], x, cfg.norm)
+        if spec.mlp == "moe":
+            out, aux = moe_lib.moe_apply(params["mlp"], h, cfg)
+        else:
+            out = mlp_apply(params["mlp"], h, cfg.act)
+        x = x + _settle(out)
+    return x, new_cache, aux
+
+
+def block_cache_shape(spec: BlockSpec, cfg: ModelConfig, batch, max_len,
+                      dtype):
+    if spec.mixer == "attn":
+        return attention_cache_shape(cfg, batch, max_len, dtype)
+    if spec.mixer == "mla":
+        return mla_cache_shape(cfg, batch, max_len, dtype)
+    if spec.mixer == "mamba":
+        return ssm.mamba_cache_shape(cfg, batch, dtype)
+    if spec.mixer == "mlstm":
+        return ssm.mlstm_cache_shape(cfg, batch, dtype)
+    return ssm.slstm_cache_shape(cfg, batch, dtype)
+
+
+# --------------------------------------------------------------------------- #
+# full model
+# --------------------------------------------------------------------------- #
+def _stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def init_model(key, cfg: ModelConfig):
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 10)
+    params: dict[str, Any] = {
+        "embed": _dense_init(ks[0], (cfg.vocab, cfg.d_model), cfg.d_model,
+                             dtype),
+        "final_norm": init_norm(ks[1], cfg.d_model, cfg.norm, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = _dense_init(ks[2], (cfg.d_model, cfg.vocab),
+                                        cfg.d_model, dtype)
+    # scan groups: list over groups of list over pattern positions of
+    # repeat-stacked block params
+    params["blocks"] = []
+    for gi, (pattern, n_rep) in enumerate(cfg.scan_groups()):
+        kg = jax.random.fold_in(ks[3], gi)
+        reps = []
+        for r in range(n_rep):
+            kr = jax.random.fold_in(kg, r)
+            reps.append([init_block(jax.random.fold_in(kr, i), s, cfg, dtype)
+                         for i, s in enumerate(pattern)])
+        params["blocks"].append(
+            [_stack([reps[r][i] for r in range(n_rep)])
+             for i in range(len(pattern))])
+
+    if cfg.n_enc_layers:
+        enc_spec = BlockSpec(mixer="attn", mlp="dense")
+        enc = [init_block(jax.random.fold_in(ks[4], r), enc_spec, cfg, dtype)
+               for r in range(cfg.n_enc_layers)]
+        params["encoder"] = [_stack(enc)]
+        params["enc_norm"] = init_norm(ks[5], cfg.d_model, cfg.norm, dtype)
+    if cfg.frontend:
+        fdim = cfg.frontend_dim or cfg.d_model
+        params["frontend_adapter"] = _dense_init(ks[6], (fdim, cfg.d_model),
+                                                 fdim, dtype)
+    if cfg.mtp_depth:
+        params["mtp_proj"] = _dense_init(ks[7], (2 * cfg.d_model, cfg.d_model),
+                                         2 * cfg.d_model, dtype)
+        params["mtp_block"] = init_block(ks[8],
+                                         BlockSpec(mixer="attn", mlp="dense"),
+                                         cfg, dtype)
+        params["mtp_norm"] = init_norm(ks[9], cfg.d_model, cfg.norm, dtype)
+    return params
+
+
+def model_specs(cfg: ModelConfig):
+    """Logical-axis pytree matching init_model's structure (leading 'layers'
+    axis on stacked blocks)."""
+
+    def _with_layers(tree):
+        return jax.tree.map(lambda axes: ("layers",) + tuple(axes), tree,
+                            is_leaf=lambda x: isinstance(x, tuple))
+
+    specs: dict[str, Any] = {
+        "embed": ("vocab", "embed"),
+        "final_norm": norm_specs(cfg.norm),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = ("embed", "vocab")
+    specs["blocks"] = [[_with_layers(block_specs(s, cfg)) for s in pattern]
+                       for pattern, _ in cfg.scan_groups()]
+    if cfg.n_enc_layers:
+        enc_spec = BlockSpec(mixer="attn", mlp="dense")
+        specs["encoder"] = [_with_layers(block_specs(enc_spec, cfg))]
+        specs["enc_norm"] = norm_specs(cfg.norm)
+    if cfg.frontend:
+        specs["frontend_adapter"] = ("frontend", "embed")
+    if cfg.mtp_depth:
+        specs["mtp_proj"] = ("embed", "embed")
+        specs["mtp_block"] = block_specs(BlockSpec(mixer="attn", mlp="dense"),
+                                         cfg)
+        specs["mtp_norm"] = norm_specs(cfg.norm)
+    return specs
+
+
+# --------------------------------------------------------------------------- #
+def _apply_stack(stacked_list, pattern, x, cfg, *, positions, causal,
+                 caches=None, memory=None, remat=True):
+    """Apply n_rep x pattern layers via scan. caches: list (per pattern pos)
+    of stacked cache pytrees or None."""
+    n_pos = len(pattern)
+    scanned = {"p": stacked_list}
+    if caches is not None:
+        scanned["c"] = caches
+
+    def body(x, per_rep):
+        new_caches = []
+        aux_sum = jnp.zeros((), jnp.float32)
+        for i in range(n_pos):
+            c = per_rep["c"][i] if caches is not None else None
+            x, nc, aux = block_apply(per_rep["p"][i], x, pattern[i], cfg,
+                                     positions=positions, causal=causal,
+                                     cache=c, memory=memory)
+            new_caches.append(nc)
+            if aux is not None:
+                aux_sum = aux_sum + aux["dropped"]
+        return x, (new_caches if caches is not None else None, aux_sum)
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, (new_caches, aux) = jax.lax.scan(body, x, scanned)
+    return x, new_caches, jnp.sum(aux)
+
+
+def _embed_inputs(params, batch, cfg):
+    dtype = jnp.dtype(cfg.activation_dtype)
+    x = params["embed"][batch["tokens"]].astype(dtype)
+    if cfg.frontend and "frontend" in batch:
+        pre = jnp.einsum("bld,de->ble", batch["frontend"].astype(dtype),
+                         params["frontend_adapter"].astype(dtype))
+        x = jnp.concatenate([pre, x], axis=1)
+    # activations: batch over the DP axes, d_model replicated
+    return maybe_constrain(x, ("pod", "data"), None, None)
+
+
+def _encode(params, batch, cfg):
+    dtype = jnp.dtype(cfg.activation_dtype)
+    enc_in = jnp.einsum("bld,de->ble", batch["frontend"].astype(dtype),
+                        params["frontend_adapter"].astype(dtype))
+    enc_in = maybe_constrain(enc_in, ("pod", "data"), None, None)
+    pos = jnp.arange(enc_in.shape[1])
+    enc_spec = (BlockSpec(mixer="attn", mlp="dense"),)
+    h, _, _ = _apply_stack(params["encoder"], enc_spec, enc_in, cfg,
+                           positions=pos, causal=False)
+    h = norm_apply(params["enc_norm"], h, cfg.norm)
+    return maybe_constrain(h, ("pod", "data"), None, None)
+
+
+def _apply_groups(params, x, cfg, *, positions, causal, caches=None,
+                  memory=None, remat=True):
+    new_caches, aux_tot = [], jnp.zeros((), jnp.float32)
+    for gi, (pattern, _) in enumerate(cfg.scan_groups()):
+        c = caches[gi] if caches is not None else None
+        x, nc, aux = _apply_stack(params["blocks"][gi], pattern, x, cfg,
+                                  positions=positions, causal=causal,
+                                  caches=c, memory=memory, remat=remat)
+        new_caches.append(nc)
+        aux_tot = aux_tot + aux
+    return x, (new_caches if caches is not None else None), aux_tot
+
+
+def forward(params, batch, cfg: ModelConfig):
+    """Full-sequence forward -> (logits [B,S,V], aux dict). For enc-dec,
+    encodes batch['frontend'] and decodes batch['tokens']."""
+    memory = _encode(params, batch, cfg) if cfg.n_enc_layers else None
+    x = _embed_inputs(params, batch, cfg) if not cfg.n_enc_layers else \
+        maybe_constrain(
+            params["embed"][batch["tokens"]].astype(
+                jnp.dtype(cfg.activation_dtype)),
+            ("pod", "data"), None, None)
+    pos = jnp.arange(x.shape[1])
+    x, _, aux = _apply_groups(params, x, cfg, positions=pos, causal=True,
+                              memory=memory)
+    h = norm_apply(params["final_norm"], x, cfg.norm)
+    logits = _lm_logits(params, h, cfg)
+    out_aux = {"moe_dropped": aux}
+    if cfg.mtp_depth:
+        out_aux["mtp_hidden"] = h  # consumed by the MTP loss in train.py
+    return logits, out_aux
+
+
+def _lm_logits(params, h, cfg):
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return jnp.einsum("btd,dv->btv", h, head.astype(h.dtype))
+
+
+def mtp_logits(params, h, next_embed, cfg):
+    """DeepSeek MTP module: combine current hidden with next-token embedding,
+    one extra block, shared head -> depth-2 prediction logits."""
+    dtype = h.dtype
+    z = jnp.concatenate([h, next_embed.astype(dtype)], -1)
+    z = jnp.einsum("btd,de->bte", z, params["mtp_proj"].astype(dtype))
+    pos = jnp.arange(z.shape[1])
+    z, _, _ = block_apply(params["mtp_block"], z,
+                          BlockSpec(mixer="attn", mlp="dense"), cfg,
+                          positions=pos)
+    z = norm_apply(params["mtp_norm"], z, cfg.norm)
+    return _lm_logits(params, z, cfg)
+
+
+# --------------------------------------------------------------------------- #
+# decode
+# --------------------------------------------------------------------------- #
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    """ShapeDtypeStruct pytree of the decode cache (also used to allocate).
+    Structure: list over scan groups of list over pattern positions of
+    repeat-stacked cache pytrees."""
+    dtype = jnp.dtype(cfg.activation_dtype)
+    out = []
+    for pattern, n_rep in cfg.scan_groups():
+        def _stacked(shape_tree, n=n_rep):
+            return jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype),
+                shape_tree)
+        out.append([_stacked(block_cache_shape(s, cfg, batch, max_len, dtype))
+                    for s in pattern])
+    return out
+
+
+def _one_cache_spec(s: BlockSpec):
+    if s.mixer == "attn":
+        return {"k": ("layers", "batch", "kv_seq", "kv_heads", None),
+                "v": ("layers", "batch", "kv_seq", "kv_heads", None),
+                "idx": ("layers",)}
+    if s.mixer == "mla":
+        return {"ckv": ("layers", "batch", "kv_seq", None),
+                "kr": ("layers", "batch", "kv_seq", None),
+                "idx": ("layers",)}
+    if s.mixer == "mamba":
+        return {"conv": ("layers", "batch", None, "inner"),
+                "h": ("layers", "batch", "inner", None),
+                "idx": ("layers",)}
+    if s.mixer == "mlstm":
+        return {"C": ("layers", "batch", "heads", None, None),
+                "n": ("layers", "batch", "heads", None),
+                "m": ("layers", "batch", "heads"), "idx": ("layers",)}
+    return {"h": ("layers", "batch", "embed"),
+            "c": ("layers", "batch", "embed"),
+            "n": ("layers", "batch", "embed"),
+            "m": ("layers", "batch", "embed"), "idx": ("layers",)}
+
+
+def cache_specs(cfg: ModelConfig):
+    """Logical axes for the cache pytree (leading 'layers')."""
+    return [[_one_cache_spec(s) for s in pattern]
+            for pattern, _ in cfg.scan_groups()]
+
+
+def decode_step(params, caches, batch, cfg: ModelConfig):
+    """One-token decode: batch['tokens'] [B,1] (+ 'memory' for enc-dec).
+    Returns (logits [B,1,V], new_caches)."""
+    dtype = jnp.dtype(cfg.activation_dtype)
+    x = params["embed"][batch["tokens"]].astype(dtype)
+    # positions from the first layer-stack's idx (uniform across batch)
+    pos = caches[0][0]["idx"][0][None]
+    memory = batch.get("memory")
+    x, new_caches, _ = _apply_groups(params, x, cfg, positions=pos,
+                                     causal=True, caches=caches,
+                                     memory=memory, remat=False)
+    h = norm_apply(params["final_norm"], x, cfg.norm)
+    return _lm_logits(params, h, cfg), new_caches
+
+
+def prefill(params, batch, cfg: ModelConfig, max_len: int):
+    """Run the full prompt, building a decode cache of capacity max_len.
+    Returns (last-position logits, caches)."""
+    dtype = jnp.dtype(cfg.activation_dtype)
+    B, S = batch["tokens"].shape
+    caches = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                          init_cache(cfg, B, max_len))
+    memory = _encode(params, batch, cfg) if cfg.n_enc_layers else None
+    x = _embed_inputs(params, batch, cfg) if not cfg.n_enc_layers else \
+        maybe_constrain(params["embed"][batch["tokens"]].astype(dtype),
+                        ("pod", "data"), None, None)
+    pos = jnp.arange(x.shape[1])
+    x, new_caches, _ = _apply_groups(params, x, cfg, positions=pos,
+                                     causal=True, caches=caches,
+                                     memory=memory, remat=False)
+    h = norm_apply(params["final_norm"], x[:, -1:], cfg.norm)
+    return _lm_logits(params, h, cfg), new_caches

@@ -1,0 +1,392 @@
+"""Sequence-mixing recurrences: Mamba (selective SSM) for Jamba, and
+xLSTM's mLSTM (matrix memory, attention-like parallel form) + sLSTM (scalar
+memory, strictly sequential scan).
+
+Train paths use parallel forms (associative_scan / masked-matrix); decode
+paths carry explicit recurrent state — which is what makes the hybrid/ssm
+archs eligible for the ``long_500k`` cell (O(1) state per step).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _dense_init, init_norm, norm_apply
+
+# --------------------------------------------------------------------------- #
+# Mamba (selective SSM), diagonal A
+# --------------------------------------------------------------------------- #
+def init_mamba(key, cfg, dtype):
+    mc = cfg.mamba
+    d = cfg.d_model
+    di = int(mc.expand * d)
+    dt_rank = max(d // 16, 1)
+    ks = jax.random.split(key, 7)
+    return {
+        "in_proj": _dense_init(ks[0], (d, 2 * di), d, dtype),
+        "conv_w": _dense_init(ks[1], (mc.d_conv, di), mc.d_conv, dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": _dense_init(ks[2], (di, dt_rank + 2 * mc.d_state), di, dtype),
+        "dt_proj": _dense_init(ks[3], (dt_rank, di), dt_rank, dtype),
+        "dt_bias": jnp.zeros((di,), dtype),
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, mc.d_state + 1, dtype=jnp.float32), (di, mc.d_state))),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": _dense_init(ks[4], (di, d), di, dtype),
+    }
+
+
+def mamba_specs(cfg):
+    return {"in_proj": ("embed", "inner"), "conv_w": (None, "inner"),
+            "conv_b": ("inner",), "x_proj": ("inner", None),
+            "dt_proj": (None, "inner"), "dt_bias": ("inner",),
+            "A_log": ("inner", None), "D": ("inner",),
+            "out_proj": ("inner", "embed")}
+
+
+_MAMBA_CHUNK = 512
+
+
+def _assoc_combine(a, b):
+    (ga, xa), (gb, xb) = a, b
+    return ga * gb, xa * gb + xb
+
+
+def _mamba_scan(u, dt, B, C, A, D, chunk=_MAMBA_CHUNK):
+    """u [b,s,di], dt [b,s,di], B/C [b,s,n], A [di,n] -> (y [b,s,di],
+    h_last [b,di,n]).  h_t = exp(dt*A) h_{t-1} + dt * B_t * u_t.
+
+    Chunked: sequential scan over S/chunk chunks carrying h, associative
+    scan inside each chunk — O(b * chunk * di * n) live memory instead of
+    O(b * S * di * n) (the 32k/500k-context enabling layout; the fused
+    Mamba kernel's dataflow)."""
+    b, s, di = u.shape
+    n = B.shape[-1]
+    if s <= chunk:
+        dA = jnp.exp(dt[..., None] * A)
+        dBu = dt[..., None] * B[..., None, :] * u[..., None]
+        cumA, h = jax.lax.associative_scan(_assoc_combine, (dA, dBu), axis=1)
+        y = jnp.einsum("bsdn,bsn->bsd", h, C)
+        return y + D * u, h[:, -1]
+
+    nb = -(-s // chunk)
+    pad = nb * chunk - s
+    def _pad(x):
+        return jnp.pad(x, ((0, 0), (0, pad)) + ((0, 0),) * (x.ndim - 2))
+    uc = _pad(u).reshape(b, nb, chunk, di).transpose(1, 0, 2, 3)
+    dtc = _pad(dt).reshape(b, nb, chunk, di).transpose(1, 0, 2, 3)
+    Bc = _pad(B).reshape(b, nb, chunk, n).transpose(1, 0, 2, 3)
+    Cc = _pad(C).reshape(b, nb, chunk, n).transpose(1, 0, 2, 3)
+
+    def body(h_in, inp):
+        uj, dtj, Bj, Cj = inp
+        dA = jnp.exp(dtj[..., None] * A)                     # [b,c,di,n]
+        dBu = dtj[..., None] * Bj[..., None, :] * uj[..., None]
+        cumA, hloc = jax.lax.associative_scan(_assoc_combine, (dA, dBu),
+                                              axis=1)
+        h = hloc + cumA * h_in[:, None]                      # carry folded in
+        y = jnp.einsum("bcdn,bcn->bcd", h, Cj) + D * uj
+        return h[:, -1], y
+
+    h_last, ys = jax.lax.scan(body, jnp.zeros((b, di, n), u.dtype),
+                              (uc, dtc, Bc, Cc))
+    y = ys.transpose(1, 0, 2, 3).reshape(b, nb * chunk, di)[:, :s]
+    return y, h_last
+
+
+def mamba_apply(params, x, cfg, *, cache=None):
+    """x [B,S,d]. cache (decode): dict(conv [B,K-1,di], h [B,di,n], idx)."""
+    mc = cfg.mamba
+    di = params["in_proj"].shape[1] // 2
+    dt_rank = params["dt_proj"].shape[0]
+    xz = jnp.einsum("bsd,de->bse", x, params["in_proj"])
+    u, z = xz[..., :di], xz[..., di:]
+
+    A = -jnp.exp(params["A_log"])
+    if cache is None or x.shape[1] > 1:
+        # full-sequence path (training, or prefill when cache is given)
+        K = mc.d_conv
+        up = jnp.pad(u, ((0, 0), (K - 1, 0), (0, 0)))
+        uc = sum(up[:, i:i + u.shape[1]] * params["conv_w"][i]
+                 for i in range(K)) + params["conv_b"]
+        uc = jax.nn.silu(uc)
+        proj = jnp.einsum("bsd,de->bse", uc, params["x_proj"])
+        dt = jax.nn.softplus(
+            jnp.einsum("bsr,rd->bsd", proj[..., :dt_rank], params["dt_proj"])
+            + params["dt_bias"])
+        Bm = proj[..., dt_rank:dt_rank + mc.d_state]
+        Cm = proj[..., dt_rank + mc.d_state:]
+        y, h_last = _mamba_scan(uc, dt, Bm, Cm, A, params["D"])
+        new_cache = None
+        if cache is not None:   # prefill: hand the final state to decode
+            new_cache = {"conv": up[:, -(K - 1):] if K > 1 else u[:, :0],
+                         "h": h_last,
+                         "idx": cache["idx"] + x.shape[1]}
+    else:
+        # single-token decode: S == 1
+        K = mc.d_conv
+        conv_hist = jnp.concatenate([cache["conv"], u], axis=1)  # [B,K,di]
+        uc = jnp.einsum("bkd,kd->bd", conv_hist, params["conv_w"]) \
+            + params["conv_b"]
+        uc = jax.nn.silu(uc)[:, None]
+        proj = jnp.einsum("bsd,de->bse", uc, params["x_proj"])
+        dt = jax.nn.softplus(
+            jnp.einsum("bsr,rd->bsd", proj[..., :dt_rank], params["dt_proj"])
+            + params["dt_bias"])
+        Bm = proj[..., dt_rank:dt_rank + mc.d_state]
+        Cm = proj[..., dt_rank + mc.d_state:]
+        dA = jnp.exp(dt[:, 0, :, None] * A)
+        h = dA * cache["h"] + dt[:, 0, :, None] * Bm[:, 0, None, :] * uc[:, 0, :, None]
+        y = jnp.einsum("bdn,bn->bd", h, Cm[:, 0])[:, None] + params["D"] * uc
+        new_cache = {"conv": conv_hist[:, 1:], "h": h,
+                     "idx": cache["idx"] + 1}
+    y = y * jax.nn.silu(z)
+    return jnp.einsum("bsd,do->bso", y, params["out_proj"]), new_cache
+
+
+def mamba_cache_shape(cfg, batch, dtype):
+    mc = cfg.mamba
+    di = int(mc.expand * cfg.d_model)
+    return {"conv": jax.ShapeDtypeStruct((batch, mc.d_conv - 1, di), dtype),
+            "h": jax.ShapeDtypeStruct((batch, di, mc.d_state), jnp.float32),
+            "idx": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+# --------------------------------------------------------------------------- #
+# mLSTM (xLSTM matrix-memory cell) — parallel (train) + recurrent (decode)
+# --------------------------------------------------------------------------- #
+def init_mlstm(key, cfg, dtype):
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    ks = jax.random.split(key, 6)
+    return {"wq": _dense_init(ks[0], (d, H, dh), d, dtype),
+            "wk": _dense_init(ks[1], (d, H, dh), d, dtype),
+            "wv": _dense_init(ks[2], (d, H, dh), d, dtype),
+            "wi": _dense_init(ks[3], (d, H), d, jnp.float32),
+            "wf": _dense_init(ks[4], (d, H), d, jnp.float32),
+            "wo": _dense_init(ks[5], (H, dh, d), d, dtype),
+            "og": _dense_init(jax.random.fold_in(key, 9), (d, H, dh), d, dtype)}
+
+
+def mlstm_specs(cfg):
+    return {"wq": ("embed", "heads", "qkv"), "wk": ("embed", "heads", "qkv"),
+            "wv": ("embed", "heads", "qkv"), "wi": ("embed", "heads"),
+            "wf": ("embed", "heads"), "wo": ("heads", "qkv", "embed"),
+            "og": ("embed", "heads", "qkv")}
+
+
+_MLSTM_CHUNK = 512
+
+
+def _mlstm_chunked(q, k, v, i_pre, f_pre, chunk=_MLSTM_CHUNK):
+    """Chunkwise mLSTM (xLSTM chunkwise backend dataflow): sequential scan
+    over S/chunk chunks carrying the (C, n, m) matrix-memory state, masked
+    parallel form within each chunk — O(B*chunk^2*H) live memory instead of
+    the O(B*S^2*H) of the fully-parallel form. Returns (h, final_state)."""
+    B, S, H, dh = q.shape
+    nb = -(-S // chunk)
+    pad = nb * chunk - S
+
+    def _pad(x, fill=0.0):
+        return jnp.pad(x, ((0, 0), (0, pad)) + ((0, 0),) * (x.ndim - 2),
+                       constant_values=fill)
+
+    lf = jax.nn.log_sigmoid(f_pre)                       # [B,S,H]
+    qc = _pad(q).reshape(B, nb, chunk, H, dh).transpose(1, 0, 2, 3, 4)
+    kc = _pad(k).reshape(B, nb, chunk, H, dh).transpose(1, 0, 2, 3, 4)
+    vc = _pad(v).reshape(B, nb, chunk, H, dh).transpose(1, 0, 2, 3, 4)
+    lfc = _pad(lf, 0.0).reshape(B, nb, chunk, H).transpose(1, 0, 2, 3)
+    ic = _pad(i_pre, -1e30).reshape(B, nb, chunk, H).transpose(1, 0, 2, 3)
+
+    tri = (jnp.arange(chunk)[:, None] >= jnp.arange(chunk)[None, :])
+
+    def _f32(x):
+        return x.astype(jnp.float32)
+
+    def body(carry, inp):
+        Cst, nst, m_in = carry                           # [B,H,dh,dh] ...
+        qj, kj, vj, lfj, ij = inp
+        a = jnp.cumsum(lfj, axis=1)                      # [B,C,H]
+        logw = a[:, :, None, :] - a[:, None, :, :] + ij[:, None, :, :]
+        logw = jnp.where(tri[None, :, :, None], logw, -jnp.inf)
+        inter = a + m_in[:, None, :]                     # [B,C,H]
+        m_t = jnp.maximum(jnp.max(logw, axis=2), inter)  # [B,C,H]
+        m_t = jnp.maximum(m_t, -1e30)
+        wD = jnp.exp(logw - m_t[:, :, None, :])          # [B,C,C,H]
+        qk = jnp.einsum("bthd,bshd->btsh", qj, kj).astype(jnp.float32)
+        intra = jnp.einsum("btsh,bshe->bthe", (qk * wD).astype(vj.dtype), vj)
+        winter = jnp.exp(inter - m_t)                    # [B,C,H]
+        qC = jnp.einsum("bthd,bhde->bthe", qj.astype(jnp.float32), Cst)
+        num = winter[..., None] * qC + intra.astype(jnp.float32)
+        qn = jnp.einsum("bthd,bhd->bth", qj.astype(jnp.float32), nst)
+        n_t = winter * qn + (qk * wD).sum(axis=2)
+        den = jnp.maximum(jnp.abs(n_t), jnp.exp(-m_t))
+        h = (num / den[..., None]).astype(vj.dtype)      # [B,C,H,dh]
+        # chunk-end state
+        a_end = a[:, -1]                                 # [B,H]
+        w_end = a_end[:, None, :] - a + ij               # [B,C,H]
+        m_out = jnp.maximum(a_end + m_in, jnp.max(w_end, axis=1))
+        m_out = jnp.maximum(m_out, -1e30)
+        carry_scale = jnp.exp(a_end + m_in - m_out)
+        we = jnp.exp(w_end - m_out[:, None, :])
+        Cst2 = carry_scale[..., None, None] * Cst + \
+            jnp.einsum("bsh,bshd,bshe->bhde", we, _f32(kj), _f32(vj))
+        nst2 = carry_scale[..., None] * nst + \
+            jnp.einsum("bsh,bshd->bhd", we, _f32(kj))
+        return (Cst2, nst2, m_out), h
+
+    C0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+    n0 = jnp.zeros((B, H, dh), jnp.float32)
+    m0 = jnp.full((B, H), -1e30, jnp.float32)
+    (Cs, ns, ms), hs = jax.lax.scan(body, (C0, n0, m0),
+                                    (qc, kc, vc, lfc, ic))
+    h = hs.transpose(1, 0, 2, 3, 4).reshape(B, nb * chunk, H, dh)[:, :S]
+    return h, (Cs, ns, ms)
+
+
+def mlstm_apply(params, x, cfg, *, cache=None):
+    H = cfg.n_heads
+    B, S, d = x.shape
+    dh = d // H
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"]) / math.sqrt(dh)
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"]) / math.sqrt(dh)
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    i_pre = jnp.einsum("bsd,dh->bsh", x.astype(jnp.float32), params["wi"])
+    f_pre = jnp.einsum("bsd,dh->bsh", x.astype(jnp.float32), params["wf"])
+    og = jax.nn.sigmoid(jnp.einsum("bsd,dhk->bshk", x, params["og"]))
+
+    if (cache is None or S > 1) and S > _MLSTM_CHUNK:
+        h, (Cs, ns, ms) = _mlstm_chunked(q, k, v, i_pre, f_pre)
+        new_cache = None
+        if cache is not None:
+            new_cache = {"C": Cs, "n": ns, "m": ms, "idx": cache["idx"] + S}
+        y = jnp.einsum("bshk,hkd->bsd", h * og, params["wo"])
+        return y, new_cache
+
+    if cache is None or S > 1:
+        logf = jax.nn.log_sigmoid(f_pre)                    # [B,S,H]
+        a = jnp.cumsum(logf, axis=1)
+        # log D[t, s] = a[t] - a[s] + i_pre[s], s <= t
+        logD = a[:, :, None, :] - a[:, None, :, :] + i_pre[:, None, :, :]
+        tpos = jnp.arange(S)[:, None]
+        causal = tpos >= jnp.arange(S)[None, :]
+        logD = jnp.where(causal[None, :, :, None], logD, -jnp.inf)
+        mrow = jnp.max(logD, axis=2, keepdims=True)          # [B,S,1,H]
+        mrow = jnp.maximum(mrow, -1e30)
+        Dmat = jnp.exp(logD - mrow)                          # [B,S,S,H]
+        scores = jnp.einsum("bthk,bshk->btsh", q, k).astype(jnp.float32) * Dmat
+        # stabilized-domain floor exp(-m) == true-scale floor 1.0 (paper eq.)
+        norm = jnp.maximum(jnp.abs(scores.sum(2)),
+                           jnp.exp(-mrow[:, :, 0, :]))       # [B,S,H]
+        h = jnp.einsum("btsh,bshk->bthk", scores.astype(v.dtype), v)
+        h = h / norm[..., None].astype(v.dtype)
+        new_cache = None
+        if cache is not None:   # prefill: fold the sequence into the state
+            w = (a[:, -1:, :] - a) + i_pre                   # [B,S,H]
+            m_fin = jnp.max(w, axis=1)                       # [B,H]
+            wt = jnp.exp(w - m_fin[:, None, :])
+            Cs = jnp.einsum("bsh,bshk,bshl->bhkl", wt,
+                            k.astype(jnp.float32), v.astype(jnp.float32))
+            ns = jnp.einsum("bsh,bshk->bhk", wt, k.astype(jnp.float32))
+            new_cache = {"C": Cs, "n": ns, "m": m_fin,
+                         "idx": cache["idx"] + S}
+    else:
+        # recurrent step: C [B,H,dh,dh], n [B,H,dh], m [B,H]
+        C, n, m, idx = cache["C"], cache["n"], cache["m"], cache["idx"]
+        # an empty (zero-allocated) cache means "no state": log-scale m = -inf
+        m = jnp.where(idx == 0, -1e30, m)
+        logf = jax.nn.log_sigmoid(f_pre[:, 0])               # [B,H]
+        m_new = jnp.maximum(logf + m, i_pre[:, 0])
+        fg = jnp.exp(logf + m - m_new)
+        ig = jnp.exp(i_pre[:, 0] - m_new)
+        k0, v0, q0 = k[:, 0], v[:, 0], q[:, 0]
+        C = fg[..., None, None] * C + ig[..., None, None] * \
+            jnp.einsum("bhk,bhl->bhkl", k0.astype(jnp.float32),
+                       v0.astype(jnp.float32))
+        n = fg[..., None] * n + ig[..., None] * k0.astype(jnp.float32)
+        num = jnp.einsum("bhk,bhkl->bhl", q0.astype(jnp.float32), C)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", q0.astype(jnp.float32), n)),
+                          jnp.exp(-m_new))
+        h = (num / den[..., None]).astype(v.dtype)[:, None]
+        new_cache = {"C": C, "n": n, "m": m_new, "idx": idx + 1}
+        h = h.reshape(B, 1, H, dh)
+    y = jnp.einsum("bshk,hkd->bsd", h * og, params["wo"])
+    return y, new_cache
+
+
+def mlstm_cache_shape(cfg, batch, dtype):
+    H = cfg.n_heads
+    dh = cfg.d_model // H
+    return {"C": jax.ShapeDtypeStruct((batch, H, dh, dh), jnp.float32),
+            "n": jax.ShapeDtypeStruct((batch, H, dh), jnp.float32),
+            "m": jax.ShapeDtypeStruct((batch, H), jnp.float32),
+            "idx": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+# --------------------------------------------------------------------------- #
+# sLSTM (scalar memory, exponential gating) — sequential scan
+# --------------------------------------------------------------------------- #
+def init_slstm(key, cfg, dtype):
+    d = cfg.d_model
+    ks = jax.random.split(key, 2)
+    # gates i,f,z,o from input and recurrent h
+    return {"w": _dense_init(ks[0], (d, 4 * d), d, dtype),
+            "r": _dense_init(ks[1], (d, 4 * d), d, dtype),
+            "b": jnp.zeros((4 * d,), jnp.float32)}
+
+
+def slstm_specs(cfg):
+    return {"w": ("embed", "ff"), "r": ("embed", "ff"), "b": ("ff",)}
+
+
+def _slstm_step(params, carry, xw):
+    h, c, n, m = carry
+    gates = xw + jnp.einsum("bd,de->be", h, params["r"]).astype(jnp.float32) \
+        + params["b"]
+    d = h.shape[-1]
+    i_pre, f_pre, z_pre, o_pre = jnp.split(gates, 4, -1)
+    m_new = jnp.maximum(jax.nn.log_sigmoid(f_pre) + m, i_pre)
+    ig = jnp.exp(i_pre - m_new)
+    fg = jnp.exp(jax.nn.log_sigmoid(f_pre) + m - m_new)
+    c = fg * c + ig * jnp.tanh(z_pre)
+    n = fg * n + ig
+    # stabilized-domain floor exp(-m) == true-scale floor 1.0
+    h_new = jax.nn.sigmoid(o_pre) * c / jnp.maximum(n, jnp.exp(-m_new))
+    return (h_new.astype(h.dtype), c, n, m_new), h_new
+
+
+def slstm_apply(params, x, cfg, *, cache=None):
+    B, S, d = x.shape
+    xw = jnp.einsum("bsd,de->bse", x, params["w"]).astype(jnp.float32)
+    if cache is None:
+        carry = (jnp.zeros((B, d), x.dtype), jnp.zeros((B, d), jnp.float32),
+                 jnp.zeros((B, d), jnp.float32),
+                 jnp.full((B, d), -1e30, jnp.float32))
+    else:
+        # zero-allocated cache == empty state: log-scale stabilizer -> -inf
+        m0 = jnp.where(cache["idx"] == 0, -1e30, cache["m"])
+        carry = (cache["h"], cache["c"], cache["n"], m0)
+
+    def step(carry, xt):
+        return _slstm_step(params, carry, xt)
+
+    carry, hs = jax.lax.scan(step, carry, xw.swapaxes(0, 1))
+    y = hs.swapaxes(0, 1).astype(x.dtype)
+    new_cache = None
+    if cache is not None:
+        h, c, n, m = carry
+        new_cache = {"h": h.astype(x.dtype), "c": c, "n": n, "m": m,
+                     "idx": cache["idx"] + S}
+    return y, new_cache
+
+
+def slstm_cache_shape(cfg, batch, dtype):
+    d = cfg.d_model
+    return {"h": jax.ShapeDtypeStruct((batch, d), dtype),
+            "c": jax.ShapeDtypeStruct((batch, d), jnp.float32),
+            "n": jax.ShapeDtypeStruct((batch, d), jnp.float32),
+            "m": jax.ShapeDtypeStruct((batch, d), jnp.float32),
+            "idx": jax.ShapeDtypeStruct((), jnp.int32)}

@@ -1,0 +1,6 @@
+from repro.sharding.rules import (LOGICAL_RULES, MULTIPOD_RULES,
+                                  logical_to_spec, param_shardings,
+                                  batch_spec, cache_shardings)
+
+__all__ = ["LOGICAL_RULES", "MULTIPOD_RULES", "logical_to_spec",
+           "param_shardings", "batch_spec", "cache_shardings"]

@@ -1,0 +1,9 @@
+from repro.training.optimizer import (AdamWState, adamw_init, adamw_update,
+                                      clip_by_global_norm, lr_schedule)
+from repro.training.checkpoint import (latest_checkpoint, load_pytree,
+                                       save_pytree)
+from repro.training.data import synthetic_batches
+
+__all__ = ["AdamWState", "adamw_init", "adamw_update", "clip_by_global_norm",
+           "lr_schedule", "latest_checkpoint", "load_pytree", "save_pytree",
+           "synthetic_batches"]

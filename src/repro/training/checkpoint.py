@@ -1,0 +1,96 @@
+"""Fault-tolerant checkpointing (DESIGN.md §7).
+
+Atomic (.tmp + rename) npz checkpoints of arbitrary pytrees with a flattened
+keypath manifest. Used by the LM training loop (params + AdamW moments + data
+cursor + RNG) and by the graph engine's BSP superstep checkpoints. Resume is
+exact. Keys encode the tree structure so re-sharding onto a different mesh at
+load time is just a matter of providing new shardings (arrays are saved
+unsharded from the host's view — for multi-host, one file per host with a
+manifest, same format).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import tempfile
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+_SEP = "|"
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = _SEP.join(str(jax.tree_util.keystr((p,))) for p in path)
+        out[key] = np.asarray(leaf)
+    return out, treedef
+
+
+def save_pytree(path: str, tree: Any, *, extra_meta: Optional[dict] = None):
+    """Atomic write: serialize to <path>.tmp then rename."""
+    flat, _ = _flatten(tree)
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    meta = {"keys": sorted(flat.keys()), "meta": extra_meta or {}}
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(os.path.abspath(path)),
+                               suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            np.savez(f, __manifest__=np.frombuffer(
+                json.dumps(meta).encode(), dtype=np.uint8), **flat)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+    return path
+
+
+def load_pytree(path: str, like: Any = None):
+    """Load; if ``like`` is given, restore exactly that tree structure (and
+    cast/device-put onto its shardings if they are jax arrays)."""
+    with np.load(path) as z:
+        meta = json.loads(bytes(z["__manifest__"]).decode())
+        flat = {k: z[k] for k in meta["keys"]}
+    if like is None:
+        return flat, meta["meta"]
+    want, treedef = _flatten(like)
+    assert sorted(want.keys()) == sorted(flat.keys()), \
+        "checkpoint/tree structure mismatch"
+    leaves_like, td = jax.tree_util.tree_flatten(like)
+    flat_p, _ = jax.tree_util.tree_flatten_with_path(like)
+    restored = []
+    for (path_k, leaf) in flat_p:
+        key = _SEP.join(str(jax.tree_util.keystr((p,))) for p in path_k)
+        arr = flat[key]
+        if hasattr(leaf, "sharding") and hasattr(leaf, "dtype"):
+            arr = jax.device_put(arr.astype(leaf.dtype), leaf.sharding)
+        restored.append(arr)
+    return jax.tree_util.tree_unflatten(td, restored), meta["meta"]
+
+
+def latest_checkpoint(ckpt_dir: str, prefix: str = "step_") -> Optional[str]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    best, best_n = None, -1
+    for f in os.listdir(ckpt_dir):
+        m = re.fullmatch(rf"{re.escape(prefix)}(\d+)\.npz", f)
+        if m and int(m.group(1)) > best_n:
+            best, best_n = os.path.join(ckpt_dir, f), int(m.group(1))
+    return best
+
+
+def keep_last(ckpt_dir: str, n: int, prefix: str = "step_"):
+    """Retention: delete all but the newest n checkpoints."""
+    if not os.path.isdir(ckpt_dir):
+        return
+    files = []
+    for f in os.listdir(ckpt_dir):
+        m = re.fullmatch(rf"{re.escape(prefix)}(\d+)\.npz", f)
+        if m:
+            files.append((int(m.group(1)), f))
+    for _, f in sorted(files)[:-n]:
+        os.unlink(os.path.join(ckpt_dir, f))

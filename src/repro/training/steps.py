@@ -1,0 +1,102 @@
+"""train_step / serve_step builders — the functions the launcher jits (and
+the dry-run lowers) for every architecture.
+
+train_step: CE loss (+ DeepSeek MTP auxiliary term) -> grad -> global-norm
+clip -> AdamW. Remat/scan live inside the model. serve_step: one-token decode
+against a KV/state cache; prefill_step builds the cache from a prompt.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.training.optimizer import (AdamWState, adamw_init, adamw_update,
+                                      clip_by_global_norm, lr_schedule)
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+
+
+def make_train_state(key, cfg: ModelConfig) -> TrainState:
+    params = M.init_model(key, cfg)
+    return TrainState(params=params, opt=adamw_init(params))
+
+
+def cross_entropy(logits, labels, mask):
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    # gold logit via masked reduction, NOT take_along_axis: a gather along
+    # the vocab axis (model-sharded) makes GSPMD all-gather the full logits
+    # tensor (537 GiB for seamless train_4k); the iota-compare reduction
+    # keeps the contraction local + one tiny psum (§Perf).
+    onehot = labels[..., None] == jax.lax.broadcasted_iota(
+        jnp.int32, logits.shape, logits.ndim - 1)
+    gold = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+    nll = (logz - gold) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    logits, aux = M.forward(params, batch, cfg)
+    labels = batch["labels"]
+    # modality-prefix positions carry no labels
+    if cfg.frontend and not cfg.n_enc_layers:
+        logits = logits[:, cfg.frontend_len:]
+    mask = (labels >= 0).astype(jnp.float32)
+    labels = jnp.maximum(labels, 0)
+    loss = cross_entropy(logits, labels, mask)
+    metrics = {"loss": loss, "moe_dropped": aux.get("moe_dropped", 0.0)}
+    if cfg.mtp_depth:
+        # depth-2 multi-token prediction: predict labels shifted one more
+        h = aux["mtp_hidden"]
+        if cfg.frontend and not cfg.n_enc_layers:
+            h = h[:, cfg.frontend_len:]
+        nxt = jnp.pad(labels[:, 1:], ((0, 0), (0, 1)))
+        mtp_lg = M.mtp_logits(params, h, params["embed"][nxt], cfg)
+        lbl2 = jnp.pad(labels[:, 2:], ((0, 0), (0, 2)))
+        msk2 = jnp.pad(mask[:, 2:], ((0, 0), (0, 2)))
+        mtp_loss = cross_entropy(mtp_lg, lbl2, msk2)
+        metrics["mtp_loss"] = mtp_loss
+        loss = loss + 0.3 * mtp_loss
+    return loss, metrics
+
+
+def make_train_step(cfg: ModelConfig, *, peak_lr=3e-4, warmup=200,
+                    total=10_000, clip=1.0, weight_decay=0.1):
+    def train_step(state: TrainState, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state.params, batch, cfg)
+        grads, gnorm = clip_by_global_norm(grads, clip)
+        lr = lr_schedule(state.opt.step, peak_lr=peak_lr, warmup=warmup,
+                         total=total)
+        params, opt = adamw_update(state.params, grads, state.opt, lr=lr,
+                                   weight_decay=weight_decay)
+        metrics = dict(metrics, grad_norm=gnorm, lr=lr)
+        return TrainState(params=params, opt=opt), metrics
+
+    return train_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, caches, batch):
+        logits, caches = M.decode_step(params, caches, batch, cfg)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok, caches
+
+    return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig, max_len: int):
+    def prefill_step(params, batch):
+        logits, caches = M.prefill(params, batch, cfg, max_len)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok, caches
+
+    return prefill_step

@@ -1,0 +1,78 @@
+"""Dry-run machinery regression: one LM cell + one graph cell lower+compile
+on the production meshes (512 fake devices, subprocess), and the HLO walker's
+loop-aware FLOP accounting matches an analytic count."""
+import subprocess
+import sys
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import jax
+from repro.launch.dryrun import lower_cell
+from repro.launch.dryrun_graph import lower_graph_cell
+from repro.launch.mesh import make_production_mesh
+from repro.launch import hlo_walk
+
+mesh = make_production_mesh(multi_pod=True)
+lowered, compiled = lower_cell("olmo_1b", "decode_32k", mesh)
+w = hlo_walk.analyze(compiled.as_text())
+assert w["dot_flops_per_device"] > 0
+meta, n_parts, compiled_g = lower_graph_cell("kron26", "cc", True)
+assert n_parts == 32
+wg = hlo_walk.analyze(compiled_g.as_text())
+assert wg["collective_bytes_per_device"] > 0
+print("DRYRUN_OK")
+"""
+
+WALKER_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+import jax, jax.numpy as jnp
+from repro.configs import get_smoke_config
+from repro.models import model as M
+from repro.sharding import rules as R
+from repro.training import steps as S
+from repro.launch import hlo_walk
+
+cfg = get_smoke_config("olmo_1b")
+mesh = jax.make_mesh((4, 4), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+p_shapes = jax.eval_shape(lambda k: M.init_model(k, cfg),
+                          jax.ShapeDtypeStruct((2,), jnp.uint32))
+p_shard = R.param_shardings(mesh, M.model_specs(cfg), p_shapes)
+params_in = jax.tree.map(lambda sh, sd: jax.ShapeDtypeStruct(
+    sd.shape, sd.dtype, sharding=sh), p_shard, p_shapes)
+batch_in = {k: jax.ShapeDtypeStruct(
+    (8, 64), jnp.int32,
+    sharding=jax.NamedSharding(mesh, jax.sharding.PartitionSpec("data", None)))
+    for k in ("tokens", "labels")}
+
+
+def fwd(params, batch):
+    return S.loss_fn(params, batch, cfg)[0]
+
+
+with jax.set_mesh(mesh):
+    compiled = jax.jit(fwd).lower(params_in, batch_in).compile()
+w = hlo_walk.analyze(compiled.as_text())
+B, S_, d, ff, V, L = 8, 64, 64, 256, 128, 2
+per_layer = 2*B*S_*d*(4*d) + 2*B*S_*d*(3*ff) + 2*2*B*S_*S_*d
+total = L * per_layer + 2*B*S_*d*V
+got = w["dot_flops_per_device"] * 16
+assert abs(got - total) / total < 0.02, (got, total)
+print("WALKER_OK")
+"""
+
+
+def test_dryrun_cells_compile():
+    res = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
+                         text=True, timeout=1200)
+    assert res.returncode == 0, res.stderr[-3000:]
+    assert "DRYRUN_OK" in res.stdout
+
+
+def test_hlo_walker_matches_analytic_flops():
+    res = subprocess.run([sys.executable, "-c", WALKER_SCRIPT],
+                         capture_output=True, text=True, timeout=900)
+    assert res.returncode == 0, res.stderr[-3000:]
+    assert "WALKER_OK" in res.stdout

@@ -1,0 +1,87 @@
+"""shard_map backend == simulator backend, run in a subprocess with 8 fake
+host devices (2 pods x 2 data x 2 model: 4 subgraphs, edge lists sharded
+2-way over the model axis — the hierarchical SVHM mapping of DESIGN.md §2)."""
+import subprocess
+import sys
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np
+import jax
+from repro.core import partition_and_build, run_sim, run_shard_map, EngineConfig
+from repro.graphgen import powerlaw_graph, grid_graph
+from repro.algos import ConnectedComponents, SSSP, PageRank
+from repro.algos.gsim import make_gsim
+
+mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 3)
+cfg_sim = EngineConfig(mode="sc")
+cfg_shard = EngineConfig(mode="sc", backend="shard_map",
+                         subgraph_axes=("pod", "data"), edge_axes=("model",))
+
+g = powerlaw_graph(300, seed=5).as_undirected()
+pg = partition_and_build(g, 4, "cdbh")
+cc = ConnectedComponents()
+r1, s1 = run_sim(cc, pg, None, cfg_sim)
+r2, s2 = run_shard_map(cc, pg, mesh, None, cfg_shard)
+assert (r1 == r2).all(), "CC mismatch"
+assert s1.supersteps == s2.supersteps and s1.total_messages == s2.total_messages
+
+g2 = grid_graph(12, weighted=True, seed=3)
+pg2 = partition_and_build(g2, 4, "cdbh")
+r1, _ = run_sim(SSSP(), pg2, {"source": 0}, cfg_sim)
+r2, _ = run_shard_map(SSSP(), pg2, mesh, {"source": 0}, cfg_shard)
+assert np.allclose(r1, r2), "SSSP mismatch"
+
+gd = powerlaw_graph(300, seed=6)
+pg3 = partition_and_build(gd, 4, "cdbh")
+pr = PageRank(tol=1e-9)
+r1, _ = run_sim(pr, pg3, {"n_vertices": gd.n_vertices}, cfg_sim)
+r2, _ = run_shard_map(pr, pg3, mesh, {"n_vertices": gd.n_vertices}, cfg_shard)
+assert np.allclose(r1, r2, atol=1e-6), "PR mismatch"
+
+labels = np.random.default_rng(0).integers(0, 3, size=gd.n_vertices).astype(np.int32)
+pg4 = partition_and_build(gd, 4, "cdbh")
+pg4.set_vertex_labels(labels)
+prog, params = make_gsim(np.array([[0,1,0],[0,0,1],[0,0,0]], np.int32),
+                         np.array([0,1,2], np.int32))
+r1, _ = run_sim(prog, pg4, params, cfg_sim)
+r2, _ = run_shard_map(prog, pg4, mesh, params, cfg_shard)
+assert (r1 == r2).all(), "GSim mismatch"
+
+# compacted sparse SBS == dense SBS
+cfg_sparse = EngineConfig(mode="sc", backend="shard_map",
+                          subgraph_axes=("pod", "data"), edge_axes=("model",),
+                          sparse_sync_capacity=pg.n_slots + 1)
+r3, _ = run_shard_map(cc, pg, mesh, None, cfg_sparse)
+r4, _ = run_sim(cc, pg, None, cfg_sim)
+assert (r3 == r4).all(), "sparse-sync mismatch"
+
+# sharded-SBS (slot shards over the model axis) == dense SBS
+cfg_ss = EngineConfig(mode="sc", backend="shard_map",
+                      subgraph_axes=("pod", "data"), edge_axes=("model",),
+                      shard_slots=True)
+r7, s7 = run_shard_map(cc, pg, mesh, None, cfg_ss)
+assert (r7 == run_sim(cc, pg, None, cfg_sim)[0]).all(), "shard_slots CC"
+r8, _ = run_shard_map(pr, pg3, mesh, {"n_vertices": gd.n_vertices}, cfg_ss)
+r9, _ = run_sim(pr, pg3, {"n_vertices": gd.n_vertices}, cfg_sim)
+assert np.allclose(r8, r9, atol=1e-6), "shard_slots PR"
+
+# 2D mesh without edge sharding (subgraph axes only)
+mesh2 = jax.make_mesh((8,), ("sub",),
+                      axis_types=(jax.sharding.AxisType.Auto,))
+pg8 = partition_and_build(g, 8, "cdbh")
+cfg8 = EngineConfig(mode="sc", backend="shard_map", subgraph_axes=("sub",))
+r5, _ = run_shard_map(cc, pg8, mesh2, None, cfg8)
+r6, _ = run_sim(cc, pg8, None, cfg_sim)
+assert (r5 == r6).all(), "8-way mismatch"
+print("SHARD_BACKEND_OK")
+"""
+
+
+def test_shard_map_backend_matches_sim():
+    res = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
+                         text=True, timeout=900)
+    assert res.returncode == 0, res.stderr[-4000:]
+    assert "SHARD_BACKEND_OK" in res.stdout
