@@ -1,0 +1,68 @@
+"""Continuously-updating workload: out-of-core ingest, live edge inserts,
+warm-start incremental SSSP (docs/STREAMING.md).
+
+A producer appends edges to a chunked on-disk edge log; the two-pass
+streaming pipeline builds the PartitionedGraph with peak edge memory bounded
+by the chunk size; then batches of new edges are routed through the same
+frozen pure hashes and patched into the affected partitions, and SSSP
+restarts from the previous converged distances instead of from scratch.
+
+    PYTHONPATH=src python examples/streaming_updates.py
+"""
+import tempfile
+
+import numpy as np
+
+from repro.algos import SSSP
+from repro.core import EngineConfig, run_sim
+from repro.graphgen import powerlaw_graph
+from repro.stream import (EdgeDelta, apply_delta, streaming_ingest,
+                          write_edge_log)
+
+
+def main():
+    g = powerlaw_graph(20_000, avg_degree=8, seed=0,
+                       weighted=True).as_undirected()
+    log_dir = tempfile.mkdtemp(prefix="drone_edgelog_")
+    meta = write_edge_log(g, log_dir, chunk_size=32_768)
+    print(f"edge log: {meta.n_edges} edges in {meta.n_chunks} chunks "
+          f"of {meta.chunk_size}")
+
+    pg, ctx, st = streaming_ingest(log_dir, 8, "cdbh")
+    print(f"ingest: {st.ingest_edges_per_s/1e6:.2f} Medges/s, "
+          f"peak stream mem {st.peak_stream_bytes/2**20:.1f} MiB "
+          f"(bound {st.stream_bound_bytes/2**20:.1f} MiB, "
+          f"full edge list would be "
+          f"{meta.n_edges * 20/2**20:.1f} MiB)")
+
+    res, stats = run_sim(SSSP(), pg, {"source": 0}, EngineConfig())
+    prev = pg.collect(res, fill=np.float32(np.inf))
+    print(f"initial SSSP: {stats.supersteps} supersteps")
+
+    rng = np.random.default_rng(1)
+    for batch in range(3):
+        n = g.n_edges // 200
+        s = rng.integers(0, pg.n_vertices, n)
+        d = rng.integers(0, pg.n_vertices, n)
+        keep = s != d
+        s, d = s[keep], d[keep]
+        w = rng.uniform(5, 10, s.size).astype(np.float32)
+        dst = apply_delta(pg, ctx, EdgeDelta(
+            add_src=np.concatenate([s, d]), add_dst=np.concatenate([d, s]),
+            add_w=np.concatenate([w, w])))
+        cold, st_c = run_sim(SSSP(), pg, {"source": 0}, EngineConfig())
+        warm, st_w = run_sim(SSSP(), pg, {"source": 0}, EngineConfig(),
+                             init_state=prev)
+        ok = np.allclose(
+            np.nan_to_num(pg.collect(warm, fill=np.float32(np.inf)), posinf=-1),
+            np.nan_to_num(pg.collect(cold, fill=np.float32(np.inf)), posinf=-1))
+        print(f"batch {batch}: +{dst.n_added} edges "
+              f"({dst.parts_patched} partitions patched, "
+              f"slots {dst.n_slots_before}->{dst.n_slots_after}) | "
+              f"cold {st_c.supersteps} supersteps, warm {st_w.supersteps} "
+              f"| allclose={ok}")
+        prev = pg.collect(warm, fill=np.float32(np.inf))
+
+
+if __name__ == "__main__":
+    main()

@@ -24,6 +24,8 @@ class ConnectedComponents(VertexProgram):
     payload: int = 1
     dtype: object = jnp.int32
     delta_based: bool = False
+    monotone: bool = True       # labels only decrease -> warm-startable
+    value_key: str = "label"
 
     def init(self, sg: DeviceSubgraph, params, ec):
         return {"label": jnp.where(sg.vmask, sg.vid32, _IMAX)}

@@ -23,6 +23,8 @@ class MultiSourceSSSP(VertexProgram):
     payload: int = 4            # K sources; set at construction
     dtype: object = jnp.float32
     delta_based: bool = False
+    monotone: bool = True       # distances only tighten -> warm-startable
+    value_key: str = "dist"
 
     def init(self, sg: DeviceSubgraph, params, ec):
         sources = params["sources"]          # [K] global vertex ids

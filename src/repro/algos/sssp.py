@@ -26,6 +26,8 @@ class SSSP(VertexProgram):
     payload: int = 1
     dtype: object = jnp.float32
     delta_based: bool = False
+    monotone: bool = True          # distances only tighten -> warm-startable
+    value_key: str = "dist"
 
     def init(self, sg: DeviceSubgraph, params, ec):
         src = params["source"]  # global vertex id (replicated scalar)

@@ -1,0 +1,47 @@
+"""Version-compat shims for jax APIs that moved between releases.
+
+The repo targets current jax (``jax.shard_map``, ``jax.sharding.AxisType``,
+``jax.sharding.get_abstract_mesh``) but must also run on 0.4.x images where
+those still live under ``jax.experimental`` / don't exist. Everything here is
+a thin alias — no behaviour differences beyond disabling the replication
+check (``check_vma``/``check_rep``), which the engine's collectives violate
+intentionally (per-shard scalars are returned unreplicated).
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_mesh", "set_mesh", "shard_map"]
+
+
+def make_mesh(shape, axes):
+    """``jax.make_mesh`` that tolerates jax versions without ``axis_types``
+    (explicit-sharding AxisType only exists on newer jax; Auto is the
+    default behaviour on older releases anyway)."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(tuple(shape), tuple(axes))
+    return jax.make_mesh(tuple(shape), tuple(axes),
+                         axis_types=(axis_type.Auto,) * len(axes))
+
+
+def set_mesh(mesh):
+    """``with set_mesh(mesh):`` — ambient-mesh context on any jax version
+    (``jax.set_mesh`` on new releases; Mesh is itself the context manager on
+    0.4.x, where it sets the thread-local resource env)."""
+    fn = getattr(jax, "set_mesh", None)
+    if fn is not None:
+        return fn(mesh)
+    return mesh
+
+
+if hasattr(jax, "shard_map"):
+    def shard_map(f, *, mesh, in_specs, out_specs):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+else:  # jax <= 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map_legacy
+
+    def shard_map(f, *, mesh, in_specs, out_specs):
+        return _shard_map_legacy(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_rep=False)

@@ -2,17 +2,22 @@ from repro.core.api import DeviceSubgraph, VertexProgram
 from repro.core.engine import EdgeCombine, EngineConfig, run, run_sim, run_shard_map
 from repro.core.graph import Graph
 from repro.core.metrics import ExecutionStats, PartitionMetrics, partition_metrics
-from repro.core.partition import (PARTITIONERS, cdbh_vertex_cut, greedy_edge_cut,
+from repro.core.partition import (PARTITIONERS, STREAM_ROUTERS,
+                                  cdbh_vertex_cut, greedy_edge_cut,
                                   grid_vertex_cut, random_hash_edge_cut,
                                   random_hash_vertex_cut)
-from repro.core.subgraph import PartitionedGraph, build_partitioned_graph
+from repro.core.subgraph import (PartitionedGraph, assemble_partitioned_graph,
+                                 build_partitioned_graph, frontier_election,
+                                 recompute_frontier)
 
 __all__ = [
     "DeviceSubgraph", "VertexProgram", "EdgeCombine", "EngineConfig", "run",
     "run_sim", "run_shard_map", "Graph", "ExecutionStats", "PartitionMetrics",
-    "partition_metrics", "PARTITIONERS", "cdbh_vertex_cut", "greedy_edge_cut",
-    "grid_vertex_cut", "random_hash_edge_cut", "random_hash_vertex_cut",
-    "PartitionedGraph", "build_partitioned_graph", "partition_and_build",
+    "partition_metrics", "PARTITIONERS", "STREAM_ROUTERS", "cdbh_vertex_cut",
+    "greedy_edge_cut", "grid_vertex_cut", "random_hash_edge_cut",
+    "random_hash_vertex_cut", "PartitionedGraph", "build_partitioned_graph",
+    "assemble_partitioned_graph", "frontier_election", "recompute_frontier",
+    "partition_and_build",
 ]
 
 

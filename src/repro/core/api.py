@@ -84,6 +84,14 @@ class VertexProgram:
                  PageRank accumulator); False if it is the value itself
                  (min/max-combined, e.g. CC labels / SSSP distances).
     tol:         significance threshold for float change detection.
+    monotone:    True if per-vertex values only ever tighten under the
+                 combiner (SSSP/MSSP/CC). Such programs can warm-start from a
+                 previous converged result after graph growth: seeding old
+                 values is always sound because extra edges can only improve
+                 them further. Non-monotone programs (PageRank) must cold
+                 start — the engine enforces that fallback.
+    value_key:   state entry holding the per-vertex values ``warm_init``
+                 tightens (required when ``monotone``).
     """
 
     combiner: str = "min"
@@ -91,6 +99,8 @@ class VertexProgram:
     dtype: Any = jnp.float32
     delta_based: bool = False
     tol: float = 0.0
+    monotone: bool = False
+    value_key: Optional[str] = None
 
     # -------------------------------------------------------------- #
     def init(self, sg: DeviceSubgraph, params, ec) -> Any:
@@ -114,6 +124,25 @@ class VertexProgram:
     def result(self, sg: DeviceSubgraph, params, state) -> jnp.ndarray:
         """Per-vertex output [v_max, ...] for collection from masters."""
         raise NotImplementedError
+
+    def warm_init(self, sg: DeviceSubgraph, params, state, warm: jnp.ndarray):
+        """Fold a previous converged result into a fresh ``init`` state
+        (incremental recompute, stream/delta.py). ``warm`` is [v_max, K] in
+        this partition's local layout, combiner-identity at padded rows.
+        Default: tighten ``state[value_key]`` with the combiner — correct for
+        any monotone value-typed program."""
+        assert self.monotone and self.value_key, \
+            "warm_init requires a monotone program with value_key set"
+        assert self.combiner in ("min", "max"), \
+            "default warm_init only knows min/max tightening; override it"
+        cur = state[self.value_key]
+        w = warm if cur.ndim == warm.ndim else warm[..., 0]
+        op = jnp.minimum if self.combiner == "min" else jnp.maximum
+        mask = sg.vmask if cur.ndim == 1 else sg.vmask[..., None]
+        state = dict(state)
+        state[self.value_key] = jnp.where(mask, op(cur, w.astype(cur.dtype)),
+                                          cur)
+        return state
 
     # -------------------------------------------------------------- #
     @property

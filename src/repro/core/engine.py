@@ -27,6 +27,7 @@ Backends:
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 from functools import partial
 from typing import Any, Optional, Sequence
@@ -36,6 +37,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core import sbs
 from repro.core.api import DeviceSubgraph, VertexProgram
 from repro.core.metrics import ExecutionStats
@@ -66,8 +68,12 @@ class EdgeCombine:
         return jax.lax.pmax(x, self.axis_names) if self.axis_names else x
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(frozen=True)
 class EngineConfig:
+    """Static engine configuration. Frozen so the module-level default
+    instances in ``run``/``run_sim`` signatures stay shared-state-free
+    (params travel as explicit arguments, never stashed on the config)."""
+
     mode: str = "sc"                  # 'sc' | 'vc'
     max_local_iters: int = 10_000     # straggler bound (DESIGN.md §7)
     max_supersteps: int = 100_000
@@ -145,9 +151,17 @@ def _pack(program: VertexProgram, sg: DeviceSubgraph, out, last_out,
 # Simulator backend
 # --------------------------------------------------------------------------- #
 def run_sim(program: VertexProgram, pg: PartitionedGraph, params=None,
-            cfg: EngineConfig = EngineConfig(), *, resume_from=None):
+            cfg: EngineConfig = EngineConfig(), *, resume_from=None,
+            init_state=None):
     """``resume_from``: path to a BSP checkpoint written by a previous trace
-    run (cfg.checkpoint_every) — restart mid-job (DESIGN.md §7)."""
+    run (cfg.checkpoint_every) — restart mid-job (DESIGN.md §7).
+
+    ``init_state``: global per-vertex values [n_vertices(, K)] from a
+    previous *converged* run (e.g. before a stream delta was applied) — a
+    warm start. Only sound for monotone programs (values tighten under the
+    combiner; SSSP/MSSP/CC after edge/vertex growth): non-monotone programs
+    (PageRank) silently fall back to a cold start. Shorter arrays (the graph
+    grew) are padded with the combiner identity."""
     sgs = _device_subgraph(pg)
     n_slots, K = pg.n_slots, program.payload
     ident = program.identity
@@ -155,6 +169,19 @@ def run_sim(program: VertexProgram, pg: PartitionedGraph, params=None,
     ex = sbs.SimExchange()
 
     v_init = jax.vmap(lambda sg: program.init(sg, params, ec))(sgs)
+    if init_state is not None and program.monotone:
+        warm = np.asarray(init_state)
+        if warm.ndim == 1:
+            warm = warm[:, None]
+        if warm.shape[0] < pg.n_vertices:      # graph grew since the run
+            warm = np.concatenate(
+                [warm, np.full((pg.n_vertices - warm.shape[0], warm.shape[1]),
+                               ident, dtype=warm.dtype)])
+        wv = np.full((pg.n_parts, pg.v_max, K), ident, dtype=warm.dtype)
+        wv[pg.vmask] = warm[pg.gvid[pg.vmask]]
+        v_init = jax.vmap(
+            lambda sg, st, w: program.warm_init(sg, params, st, w)
+        )(sgs, v_init, jnp.asarray(wv))
     last0 = jnp.full((pg.n_parts, pg.v_max, K), ident, dtype=program.dtype)
     merged0 = jnp.full((n_slots + 1, K), ident, dtype=program.dtype)
     start_step = 0
@@ -203,6 +230,7 @@ def run_sim(program: VertexProgram, pg: PartitionedGraph, params=None,
             if cfg.checkpoint_every and (step + 1) % cfg.checkpoint_every == 0 \
                     and cfg.checkpoint_dir:
                 from repro.training.checkpoint import save_pytree
+                os.makedirs(cfg.checkpoint_dir, exist_ok=True)
                 save_pytree(f"{cfg.checkpoint_dir}/bsp_{step + 1:06d}.npz",
                             dict(state=state, last_out=last_out,
                                  merged=merged_buf, step=step + 1))
@@ -242,16 +270,19 @@ def run_sim(program: VertexProgram, pg: PartitionedGraph, params=None,
 # shard_map backend
 # --------------------------------------------------------------------------- #
 def make_bsp_runner(program: VertexProgram, mesh: Mesh,
-                    cfg: EngineConfig, n_slots: int, *, has_vlabel=False):
+                    cfg: EngineConfig, n_slots: int, *, params=None,
+                    has_vlabel=False):
     """Build the shard_map'd BSP loop (shared by run_shard_map and the
-    graph-engine dry-run, which lowers it against ShapeDtypeStructs)."""
+    graph-engine dry-run, which lowers it against ShapeDtypeStructs).
+
+    ``params`` is the program's static parameter pytree, closed over at
+    trace time (EngineConfig is frozen and never carries it)."""
     sub_axes = tuple(cfg.subgraph_axes)
     edge_axes = tuple(cfg.edge_axes)
     K = program.payload
     ident = program.identity
     ec = EdgeCombine(edge_axes)
     ex = sbs.ShardExchange(sub_axes)
-    params = cfg._params  # stashed by callers (static pytree closure)
 
     edge_spec = P(sub_axes, edge_axes if edge_axes else None)
     vert_spec = P(sub_axes, None)
@@ -271,10 +302,9 @@ def make_bsp_runner(program: VertexProgram, mesh: Mesh,
     shard_slots = cfg.shard_slots and n_edge_shards > 1
     n_loc = -(-(n_slots + 1) // n_edge_shards) if shard_slots else n_slots + 1
 
-    @partial(jax.shard_map, mesh=mesh,
+    @partial(shard_map, mesh=mesh,
              in_specs=(sg_specs,),
-             out_specs=(vert_spec, P(), P(), P(sub_axes)),
-             check_vma=False)
+             out_specs=(vert_spec, P(), P(), P(sub_axes)))
     def go(sg_block):
         sg = DeviceSubgraph(*[_squeeze(x) for x in sg_block])
         state = program.init(sg, params, ec)
@@ -373,9 +403,7 @@ def run_shard_map(program: VertexProgram, pg: PartitionedGraph, mesh: Mesh,
     assert pg.e_max % n_edge == 0, "pad edges to a multiple of the edge axes"
 
     n_slots, K = pg.n_slots, program.payload
-    cfg = dataclasses.replace(cfg)
-    cfg._params = params
-    go = make_bsp_runner(program, mesh, cfg, n_slots,
+    go = make_bsp_runner(program, mesh, cfg, n_slots, params=params,
                          has_vlabel=pg.vlabel is not None)
     sgs = _device_subgraph(pg)
 
@@ -396,8 +424,12 @@ def run_shard_map(program: VertexProgram, pg: PartitionedGraph, mesh: Mesh,
 
 
 def run(program: VertexProgram, pg: PartitionedGraph, params=None,
-        cfg: EngineConfig = EngineConfig(), mesh: Optional[Mesh] = None):
+        cfg: EngineConfig = EngineConfig(), mesh: Optional[Mesh] = None,
+        *, init_state=None):
     if cfg.backend == "sim":
-        return run_sim(program, pg, params, cfg)
+        return run_sim(program, pg, params, cfg, init_state=init_state)
     assert mesh is not None, "shard_map backend needs a mesh"
+    # Warm start is a host-side state rewrite; the shard_map runner inits
+    # on-device, so incremental recompute currently runs on the simulator
+    # backend (cold start here keeps results correct either way).
     return run_shard_map(program, pg, mesh, params, cfg)

@@ -18,6 +18,14 @@ stored with its source's partition and remote endpoints become ghosts:
 
 All functions are pure in (graph, n_parts, seed): the elasticity story
 (DESIGN.md §7) depends on deterministic re-partitioning.
+
+The hash partitioners are layered over *chunk-reusable pure routing
+functions* (``route_edges_*``) that take raw endpoint arrays — no ``Graph``
+object. The streaming subsystem (repro.stream) routes edge chunks and delta
+batches through exactly these functions, which is what makes out-of-core
+ingestion and incremental re-routing bit-identical to the one-shot path.
+``STREAM_ROUTERS`` lists the partitioners that are pure per-edge (chunkable);
+``greedy_edge_cut`` is stateful-streaming (order-dependent) and is not.
 """
 from __future__ import annotations
 
@@ -28,6 +36,9 @@ from repro.core.graph import Graph, splitmix64
 __all__ = [
     "random_hash_vertex_cut", "cdbh_vertex_cut", "grid_vertex_cut",
     "random_hash_edge_cut", "greedy_edge_cut", "PARTITIONERS",
+    "route_edges_rh_vc", "route_edges_cdbh", "route_edges_grid",
+    "route_edges_range", "route_edges_rh_ec", "route_vertices_rh",
+    "STREAM_ROUTERS",
 ]
 
 
@@ -38,14 +49,89 @@ def _canonical(src: np.ndarray, dst: np.ndarray):
 
 
 # --------------------------------------------------------------------------- #
+# Pure per-edge routing (chunk-reusable)
+#
+# Each router maps raw endpoint arrays to an int32 partition id per edge and
+# is pure in (edge, n_parts, seed[, degrees]) — independent of chunking,
+# ordering, and of every other edge. ``degrees`` is the FULL-graph degree
+# table (only CDBH consults it; streaming ingest computes it in pass 1 and
+# the delta path reuses the frozen ingest-time snapshot so patches land in
+# the same partition as an identical ingest-time edge would).
+# --------------------------------------------------------------------------- #
+def route_edges_rh_vc(src: np.ndarray, dst: np.ndarray, n_parts: int,
+                      *, seed: int = 0) -> np.ndarray:
+    """RH vertex-cut: uniformly hash the canonical edge key."""
+    lo, hi = _canonical(src, dst)
+    key = splitmix64(lo.astype(np.uint64) * np.uint64(0x9E3779B1)
+                     ^ splitmix64(hi.astype(np.uint64) + np.uint64(seed)))
+    return (key % np.uint64(n_parts)).astype(np.int32)
+
+
+def route_edges_cdbh(src: np.ndarray, dst: np.ndarray, degrees: np.ndarray,
+                     n_parts: int, *, seed: int = 0) -> np.ndarray:
+    """CDBH: hash the endpoint with the smaller full degree (canonically
+    ordered pair; ties broken on id)."""
+    lo, hi = _canonical(src, dst)
+    dl, dh = degrees[lo], degrees[hi]
+    pick_lo = (dl < dh) | ((dl == dh) & (lo <= hi))
+    chosen = np.where(pick_lo, lo, hi)
+    key = splitmix64(chosen.astype(np.uint64) + np.uint64(seed))
+    return (key % np.uint64(n_parts)).astype(np.int32)
+
+
+def route_edges_range(src: np.ndarray, dst: np.ndarray, n_vertices: int,
+                      n_parts: int) -> np.ndarray:
+    """Id-range block of the canonical lower endpoint."""
+    lo, _ = _canonical(src, dst)
+    return ((lo.astype(np.uint64) * np.uint64(n_parts))
+            // np.uint64(max(n_vertices, 1))).astype(np.int32)
+
+
+def route_edges_grid(src: np.ndarray, dst: np.ndarray, n_parts: int,
+                     *, seed: int = 0) -> np.ndarray:
+    """2D grid-constrained placement in a sqrt(P) x sqrt(P) layout."""
+    q = int(np.floor(np.sqrt(n_parts)))
+    q = max(q, 1)
+    lo, hi = _canonical(src, dst)
+    hu = splitmix64(lo.astype(np.uint64) + np.uint64(seed)) % np.uint64(q)
+    hv = splitmix64(hi.astype(np.uint64) + np.uint64(seed ^ 0xABCDEF)) % np.uint64(q)
+    part = (hu * np.uint64(q) + hv).astype(np.int64)
+    # Spill any remainder partitions (if n_parts isn't a perfect square) by
+    # folding the grid id into [0, n_parts).
+    return (part % n_parts).astype(np.int32)
+
+
+def route_vertices_rh(vids: np.ndarray, n_parts: int,
+                      *, seed: int = 0) -> np.ndarray:
+    """RH vertex->partition hash (edge-cut placement + isolated vertices)."""
+    return (splitmix64(vids.astype(np.uint64) + np.uint64(seed))
+            % np.uint64(n_parts)).astype(np.int32)
+
+
+def route_edges_rh_ec(src: np.ndarray, dst: np.ndarray, n_parts: int,
+                      *, seed: int = 0) -> np.ndarray:
+    """RH edge-cut: an edge follows its source's vertex hash (Pregel-style)."""
+    del dst
+    return route_vertices_rh(src, n_parts, seed=seed)
+
+
+# Streamable routers under a uniform chunk signature:
+#   router(src, dst, degrees, n_vertices, n_parts, seed) -> int32[chunk]
+STREAM_ROUTERS = {
+    "rh-vc": lambda s, d, deg, nv, p, seed: route_edges_rh_vc(s, d, p, seed=seed),
+    "cdbh": lambda s, d, deg, nv, p, seed: route_edges_cdbh(s, d, deg, p, seed=seed),
+    "grid": lambda s, d, deg, nv, p, seed: route_edges_grid(s, d, p, seed=seed),
+    "range": lambda s, d, deg, nv, p, seed: route_edges_range(s, d, nv, p),
+    "rh-ec": lambda s, d, deg, nv, p, seed: route_edges_rh_ec(s, d, p, seed=seed),
+}
+
+
+# --------------------------------------------------------------------------- #
 # Vertex-cut partitioners: edge -> partition
 # --------------------------------------------------------------------------- #
 def random_hash_vertex_cut(g: Graph, n_parts: int, *, seed: int = 0) -> np.ndarray:
     """RH vertex-cut: uniformly hash the canonical edge key."""
-    lo, hi = _canonical(g.src, g.dst)
-    key = splitmix64(lo.astype(np.uint64) * np.uint64(0x9E3779B1)
-                     ^ splitmix64(hi.astype(np.uint64) + np.uint64(seed)))
-    return (key % np.uint64(n_parts)).astype(np.int32)
+    return route_edges_rh_vc(g.src, g.dst, n_parts, seed=seed)
 
 
 def cdbh_vertex_cut(g: Graph, n_parts: int, *, seed: int = 0,
@@ -61,13 +147,7 @@ def cdbh_vertex_cut(g: Graph, n_parts: int, *, seed: int = 0,
     """
     if degrees is None:
         degrees = g.total_degrees()
-    lo, hi = _canonical(g.src, g.dst)
-    dl, dh = degrees[lo], degrees[hi]
-    # Tie-break on id so the choice is deterministic.
-    pick_lo = (dl < dh) | ((dl == dh) & (lo <= hi))
-    chosen = np.where(pick_lo, lo, hi)
-    key = splitmix64(chosen.astype(np.uint64) + np.uint64(seed))
-    return (key % np.uint64(n_parts)).astype(np.int32)
+    return route_edges_cdbh(g.src, g.dst, degrees, n_parts, seed=seed)
 
 
 def range_vertex_cut(g: Graph, n_parts: int, *, seed: int = 0) -> np.ndarray:
@@ -78,9 +158,7 @@ def range_vertex_cut(g: Graph, n_parts: int, *, seed: int = 0) -> np.ndarray:
     with. On hashed/power-law ids it degrades to imbalanced cuts — which is
     the paper's argument for CDBH on power-law graphs."""
     del seed
-    lo, _ = _canonical(g.src, g.dst)
-    return ((lo.astype(np.uint64) * np.uint64(n_parts))
-            // np.uint64(max(g.n_vertices, 1))).astype(np.int32)
+    return route_edges_range(g.src, g.dst, g.n_vertices, n_parts)
 
 
 def grid_vertex_cut(g: Graph, n_parts: int, *, seed: int = 0) -> np.ndarray:
@@ -88,15 +166,7 @@ def grid_vertex_cut(g: Graph, n_parts: int, *, seed: int = 0) -> np.ndarray:
     (u,v) in the intersection of u's row-block and v's column-block of a
     sqrt(P) x sqrt(P) layout. Bounds each vertex's replication by
     2*sqrt(P) - 1. Beyond-paper partitioning option."""
-    q = int(np.floor(np.sqrt(n_parts)))
-    q = max(q, 1)
-    lo, hi = _canonical(g.src, g.dst)
-    hu = splitmix64(lo.astype(np.uint64) + np.uint64(seed)) % np.uint64(q)
-    hv = splitmix64(hi.astype(np.uint64) + np.uint64(seed ^ 0xABCDEF)) % np.uint64(q)
-    part = (hu * np.uint64(q) + hv).astype(np.int64)
-    # Spill any remainder partitions (if n_parts isn't a perfect square) by
-    # folding the grid id into [0, n_parts).
-    return (part % n_parts).astype(np.int32)
+    return route_edges_grid(g.src, g.dst, n_parts, seed=seed)
 
 
 # --------------------------------------------------------------------------- #
@@ -109,9 +179,7 @@ def _edges_from_vertex_assignment(g: Graph, vpart: np.ndarray) -> np.ndarray:
 def random_hash_edge_cut(g: Graph, n_parts: int, *, seed: int = 0) -> np.ndarray:
     """DRONE-EC-RH baseline: hash vertices to partitions; each edge is stored
     in its source's partition (Pregel-style placement)."""
-    vpart = (splitmix64(np.arange(g.n_vertices, dtype=np.uint64)
-                        + np.uint64(seed)) % np.uint64(n_parts)).astype(np.int32)
-    return _edges_from_vertex_assignment(g, vpart)
+    return route_edges_rh_ec(g.src, g.dst, n_parts, seed=seed)
 
 
 def greedy_edge_cut(g: Graph, n_parts: int, *, seed: int = 0,

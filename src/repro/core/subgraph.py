@@ -14,17 +14,34 @@ paper's master/mirror Aggregate+Disseminate (DESIGN.md §2). The paper's
 master designation survives as ``is_master`` (random replica election via
 hash, §4.3) and is used for result collection and the aggregation-balance
 statistic.
+
+The builder is split into composable layers so the streaming subsystem
+(repro.stream) can assemble partitions from per-partition spill shards
+without ever materializing the global edge list:
+
+  - ``frontier_election``        — slots + master election from per-partition
+                                   vertex membership alone (no edges);
+  - ``assemble_partitioned_graph`` — fill the padded arrays, pulling each
+                                   partition's edges through a loader
+                                   callback (one partition resident at a
+                                   time);
+  - ``build_partitioned_graph``  — the classic one-shot in-memory wrapper;
+  - ``recompute_frontier``       — re-derive slots/masters in place after a
+                                   membership patch (stream/delta.py).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Callable, Optional, Sequence
 
 import numpy as np
 
 from repro.core.graph import Graph, splitmix64
+from repro.core.partition import route_vertices_rh
 
-__all__ = ["PartitionedGraph", "build_partitioned_graph"]
+__all__ = ["PartitionedGraph", "build_partitioned_graph",
+           "frontier_election", "assemble_partitioned_graph",
+           "partition_vertex_sets", "recompute_frontier"]
 
 
 def _pad_to(arr: np.ndarray, n: int, fill) -> np.ndarray:
@@ -101,67 +118,91 @@ class PartitionedGraph:
         self.vlabel = lab
 
 
-def build_partitioned_graph(g: Graph, edge_part: np.ndarray, n_parts: int,
-                            *, pad_multiple: int = 8,
-                            include_isolated: bool = True) -> PartitionedGraph:
-    edge_part = np.asarray(edge_part, dtype=np.int32)
-    assert edge_part.shape == g.src.shape
-    P = n_parts
-
-    # ---- group edges by partition -------------------------------------- #
-    order = np.argsort(edge_part, kind="stable")
-    ps, pd = g.src[order], g.dst[order]
-    pw = g.weights[order]
-    counts = np.bincount(edge_part, minlength=P).astype(np.int64)
-    starts = np.concatenate([[0], np.cumsum(counts)])
-
-    # ---- per-partition vertex sets (endpoints of local edges) ---------- #
+# --------------------------------------------------------------------------- #
+# Layer 1 — vertex membership (in-memory path; streaming derives its own
+# membership incrementally from spill shards)
+# --------------------------------------------------------------------------- #
+def partition_vertex_sets(src: np.ndarray, dst: np.ndarray,
+                          edge_part: np.ndarray, n_parts: int,
+                          n_vertices: int, *,
+                          isolated: Optional[np.ndarray] = None
+                          ) -> list[np.ndarray]:
+    """Per-partition sorted unique vertex ids: the endpoints of each
+    partition's edges (Eq. 3), plus hash-round-robin isolated vertices."""
     pair_part = np.concatenate([edge_part, edge_part]).astype(np.int64)
-    pair_vid = np.concatenate([g.src, g.dst])
-    key = pair_part * np.int64(g.n_vertices) + pair_vid
+    pair_vid = np.concatenate([src, dst])
+    key = pair_part * np.int64(n_vertices) + pair_vid
     ukey = np.unique(key)
-    up = (ukey // g.n_vertices).astype(np.int32)
-    uv = (ukey % g.n_vertices).astype(np.int64)
+    up = (ukey // n_vertices).astype(np.int32)
+    uv = (ukey % n_vertices).astype(np.int64)
+    if isolated is not None and isolated.size:
+        iso_p = route_vertices_rh(isolated, n_parts)
+        up = np.concatenate([up, iso_p])
+        uv = np.concatenate([uv, isolated])
+        re = np.lexsort((uv, up))
+        up, uv = up[re], uv[re]
+    starts = np.searchsorted(up, np.arange(n_parts + 1))
+    return [uv[starts[p]:starts[p + 1]] for p in range(n_parts)]
 
-    # isolated vertices -> round-robin
-    if include_isolated:
-        iso = g.isolated_vertices()
-        if iso.size:
-            iso_p = (splitmix64(iso.astype(np.uint64)) % np.uint64(P)).astype(np.int32)
-            up = np.concatenate([up, iso_p])
-            uv = np.concatenate([uv, iso])
-            re = np.lexsort((uv, up))
-            up, uv = up[re], uv[re]
 
-    vcounts = np.bincount(up, minlength=P).astype(np.int64)
-    vstarts = np.concatenate([[0], np.cumsum(vcounts)])
+# --------------------------------------------------------------------------- #
+# Layer 2 — frontier slots + master election from membership alone
+# --------------------------------------------------------------------------- #
+def frontier_election(part_vertices: Sequence[np.ndarray], n_vertices: int):
+    """Slots and masters from per-partition vertex membership.
 
-    # ---- replica counts and frontier slots ------------------------------ #
-    replica_count = np.bincount(uv, minlength=g.n_vertices)
+    Returns ``(frontier_gvid, slot_of_gvid, masters)`` where ``masters[p]``
+    is a bool array aligned with ``part_vertices[p]``. The elected master of
+    v is its ``hash(v) % replica_count(v)``-th replica in partition-id order
+    (paper §4.3 random replica election) — a pure function of membership, so
+    streaming ingest, one-shot build and delta patching all agree."""
+    replica_count = np.zeros(n_vertices, dtype=np.int64)
+    for lv in part_vertices:
+        replica_count[lv] += 1
     frontier_gvid = np.nonzero(replica_count >= 2)[0].astype(np.int64)
     n_slots = int(frontier_gvid.shape[0])
-    slot_of_gvid = np.full(g.n_vertices, n_slots, dtype=np.int64)
+    slot_of_gvid = np.full(n_vertices, n_slots, dtype=np.int64)
     slot_of_gvid[frontier_gvid] = np.arange(n_slots)
 
-    # ---- master election (random replica via hash, paper §4.3) --------- #
-    # replicas of v appear consecutively in (uv sorted by (vid)); pick
-    # hash(v) % replica_count-th one.
-    v_sort = np.argsort(uv, kind="stable")
-    uv_s = uv[v_sort]
-    first_occ = np.concatenate([[True], uv_s[1:] != uv_s[:-1]])
-    group_start = np.maximum.accumulate(np.where(first_occ, np.arange(uv_s.size), 0))
-    rank_in_group = np.arange(uv_s.size) - group_start
-    pick = (splitmix64(uv_s.astype(np.uint64)) % replica_count[uv_s].astype(np.uint64)).astype(np.int64)
-    master_sorted = rank_in_group == pick
-    is_master_flat = np.zeros(uv.size, dtype=bool)
-    is_master_flat[v_sort] = master_sorted
+    pick = (splitmix64(np.arange(n_vertices, dtype=np.uint64))
+            % np.maximum(replica_count, 1).astype(np.uint64)).astype(np.int64)
+    seen = np.zeros(n_vertices, dtype=np.int64)   # replicas in partitions < p
+    masters = []
+    for lv in part_vertices:
+        masters.append(seen[lv] == pick[lv])
+        seen[lv] += 1
+    return frontier_gvid, slot_of_gvid, masters
 
-    # ---- padded sizes ---------------------------------------------------- #
+
+# --------------------------------------------------------------------------- #
+# Layer 3 — padded assembly, one partition resident at a time
+# --------------------------------------------------------------------------- #
+def assemble_partitioned_graph(
+        n_parts: int, n_vertices: int, n_edges: int,
+        part_vertices: Sequence[np.ndarray],
+        edge_counts: np.ndarray,
+        load_edges: Callable[[int], tuple],
+        out_degrees: np.ndarray, in_degrees: np.ndarray,
+        *, pad_multiple: int = 8,
+        edge_part: Optional[np.ndarray] = None) -> PartitionedGraph:
+    """Fill the dense padded arrays.
+
+    ``load_edges(p) -> (src, dst, w)`` supplies partition p's edges in global
+    ids, in their original stream order; only one partition's edge list is
+    resident at a time, so callers can stream from spill shards
+    (``edge_counts`` pre-sizes ``e_max`` without loading anything).
+    """
+    P = n_parts
+    frontier_gvid, slot_of_gvid, masters = frontier_election(
+        part_vertices, n_vertices)
+    n_slots = int(frontier_gvid.shape[0])
+
     def _round(n):
         return int(-(-max(n, 1) // pad_multiple) * pad_multiple)
 
-    v_max = _round(int(vcounts.max()))
-    e_max = _round(int(counts.max()))
+    vcounts = np.array([lv.shape[0] for lv in part_vertices], dtype=np.int64)
+    v_max = _round(int(vcounts.max()) if P else 1)
+    e_max = _round(int(np.max(edge_counts)) if P else 1)
 
     gvid = np.full((P, v_max), -1, dtype=np.int64)
     vmask = np.zeros((P, v_max), dtype=bool)
@@ -174,21 +215,20 @@ def build_partitioned_graph(g: Graph, edge_part: np.ndarray, n_parts: int,
     ew = np.zeros((P, e_max), dtype=np.float32)
     emask = np.zeros((P, e_max), dtype=bool)
 
-    g_out = g.out_degrees().astype(np.float32)
-    g_in = g.in_degrees().astype(np.float32)
+    g_out = out_degrees.astype(np.float32)
+    g_in = in_degrees.astype(np.float32)
 
     for p in range(P):
-        lv = uv[vstarts[p]:vstarts[p + 1]]           # sorted ascending
+        lv = part_vertices[p]                        # sorted ascending
         nv = lv.shape[0]
         gvid[p, :nv] = lv
         vmask[p, :nv] = True
         slot[p, :nv] = slot_of_gvid[lv]
-        is_master[p, :nv] = is_master_flat[vstarts[p]:vstarts[p + 1]]
+        is_master[p, :nv] = masters[p]
         out_deg[p, :nv] = g_out[lv]
         in_deg[p, :nv] = g_in[lv]
 
-        es, ed = ps[starts[p]:starts[p + 1]], pd[starts[p]:starts[p + 1]]
-        w = pw[starts[p]:starts[p + 1]]
+        es, ed, w = load_edges(p)
         ls = np.searchsorted(lv, es).astype(np.int32)
         ld = np.searchsorted(lv, ed).astype(np.int32)
         # sort local edges by destination (segment ops expect sorted ids)
@@ -196,14 +236,67 @@ def build_partitioned_graph(g: Graph, edge_part: np.ndarray, n_parts: int,
         ne = es.shape[0]
         esrc[p, :ne] = ls[eo]
         edst[p, :ne] = ld[eo]
-        ew[p, :ne] = w[eo]
+        ew[p, :ne] = np.asarray(w, dtype=np.float32)[eo]
         emask[p, :ne] = True
 
     return PartitionedGraph(
-        n_parts=P, n_vertices=g.n_vertices, n_edges=g.n_edges,
+        n_parts=P, n_vertices=n_vertices, n_edges=n_edges,
         n_slots=n_slots, v_max=v_max, e_max=e_max,
         gvid=gvid, vmask=vmask, esrc=esrc, edst=edst, ew=ew, emask=emask,
         slot=slot, is_frontier=(slot < n_slots) & vmask,
         out_deg=out_deg, in_deg=in_deg, is_master=is_master,
         frontier_gvid=frontier_gvid, edge_part=edge_part,
     )
+
+
+# --------------------------------------------------------------------------- #
+# One-shot in-memory wrapper (the classic path)
+# --------------------------------------------------------------------------- #
+def build_partitioned_graph(g: Graph, edge_part: np.ndarray, n_parts: int,
+                            *, pad_multiple: int = 8,
+                            include_isolated: bool = True) -> PartitionedGraph:
+    edge_part = np.asarray(edge_part, dtype=np.int32)
+    assert edge_part.shape == g.src.shape
+
+    # ---- group edges by partition -------------------------------------- #
+    order = np.argsort(edge_part, kind="stable")
+    ps, pd = g.src[order], g.dst[order]
+    pw = g.weights[order]
+    counts = np.bincount(edge_part, minlength=n_parts).astype(np.int64)
+    starts = np.concatenate([[0], np.cumsum(counts)])
+
+    iso = g.isolated_vertices() if include_isolated else None
+    part_vertices = partition_vertex_sets(g.src, g.dst, edge_part, n_parts,
+                                          g.n_vertices, isolated=iso)
+
+    def load_edges(p):
+        return (ps[starts[p]:starts[p + 1]], pd[starts[p]:starts[p + 1]],
+                pw[starts[p]:starts[p + 1]])
+
+    return assemble_partitioned_graph(
+        n_parts, g.n_vertices, g.n_edges, part_vertices, counts, load_edges,
+        g.out_degrees(), g.in_degrees(), pad_multiple=pad_multiple,
+        edge_part=edge_part)
+
+
+# --------------------------------------------------------------------------- #
+# Frontier maintenance after a membership patch (stream/delta.py)
+# --------------------------------------------------------------------------- #
+def recompute_frontier(pg: PartitionedGraph) -> None:
+    """Re-derive ``slot``/``is_frontier``/``is_master``/``frontier_gvid``
+    in place from the current ``gvid``/``vmask`` membership. Uses the same
+    hash election as the builders, so an unchanged membership round-trips
+    bit-identically; a patched membership gets consistent fresh slots."""
+    part_vertices = [pg.gvid[p][pg.vmask[p]] for p in range(pg.n_parts)]
+    frontier_gvid, slot_of_gvid, masters = frontier_election(
+        part_vertices, pg.n_vertices)
+    n_slots = int(frontier_gvid.shape[0])
+    pg.slot = np.full((pg.n_parts, pg.v_max), n_slots, dtype=np.int32)
+    pg.is_master = np.zeros((pg.n_parts, pg.v_max), dtype=bool)
+    for p in range(pg.n_parts):
+        nv = part_vertices[p].shape[0]
+        pg.slot[p, :nv] = slot_of_gvid[part_vertices[p]]
+        pg.is_master[p, :nv] = masters[p]
+    pg.n_slots = n_slots
+    pg.frontier_gvid = frontier_gvid
+    pg.is_frontier = (pg.slot < n_slots) & pg.vmask

@@ -12,6 +12,7 @@ import jax           # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import numpy as np   # noqa: E402
 
+from repro.compat import set_mesh                                 # noqa: E402
 from repro.configs import ARCHS, get_config                       # noqa: E402
 from repro.launch import hlo_stats                                # noqa: E402
 from repro.launch.mesh import make_production_mesh                # noqa: E402
@@ -106,7 +107,7 @@ def lower_cell(arch: str, shape_name: str, mesh, *, lower_only=False,
         fn = jax.jit(step, donate_argnums=(1,))
         args = (params_in, cache_in, batch_in)
 
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         lowered = fn.lower(*args)
         if lower_only:
             return lowered, None

@@ -16,7 +16,7 @@ from repro.algos import ConnectedComponents, PageRank, SSSP  # noqa: E402
 from repro.core.api import DeviceSubgraph                    # noqa: E402
 from repro.core.engine import EngineConfig, make_bsp_runner  # noqa: E402
 from repro.launch import hlo_stats, hlo_walk                 # noqa: E402
-from repro.launch.mesh import make_production_mesh           # noqa: E402
+from repro.launch.mesh import make_mesh, make_production_mesh  # noqa: E402
 
 """Graph-engine multi-pod dry-run — the paper's own workload on the
 production mesh, including the TRILLION-EDGE capability point (the paper's
@@ -97,8 +97,7 @@ def lower_graph_cell(scale_name: str, algo: str, multi_pod: bool,
             raise RuntimeError(
                 "trillion point needs a 2048-chip mesh: rerun with "
                 "DRYRUN_XLA_FLAGS=--xla_force_host_platform_device_count=2048")
-        mesh = jax.make_mesh(TRILLION_MESH, ("pod", "data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 3)
+        mesh = make_mesh(TRILLION_MESH, ("pod", "data", "model"))
         sub_axes = ("pod", "data")
     else:
         mesh = make_production_mesh(multi_pod=multi_pod)
@@ -119,8 +118,8 @@ def lower_graph_cell(scale_name: str, algo: str, multi_pod: bool,
                        subgraph_axes=sub_axes, edge_axes=edge_axes,
                        max_local_iters=max_local_iters,
                        shard_slots=not dense_slots, lean_frontier=lean)
-    cfg._params = params
-    go = make_bsp_runner(prog, mesh, cfg, meta["n_slots"], has_vlabel=False)
+    go = make_bsp_runner(prog, mesh, cfg, meta["n_slots"], params=params,
+                         has_vlabel=False)
     sgs = _sds_subgraph(meta, n_parts, mesh, sub_axes, edge_axes)
     with mesh:
         lowered = jax.jit(go).lower(sgs)

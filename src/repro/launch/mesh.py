@@ -6,14 +6,13 @@ set XLA_FLAGS before any jax initialization.
 """
 from __future__ import annotations
 
-import jax
+from repro.compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_graph_mesh(*, multi_pod: bool = False):
@@ -24,5 +23,4 @@ def make_graph_mesh(*, multi_pod: bool = False):
 
 def make_host_mesh(n: int = 1, axis: str = "data"):
     """Small CPU mesh for tests/examples."""
-    return jax.make_mesh((n,), (axis,),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    return make_mesh((n,), (axis,))

@@ -54,8 +54,8 @@ def moe_specs(cfg):
 def _dp_groups(total_tokens: int) -> int:
     """Number of DP shards in the ambient mesh that divide the token count
     (hierarchical dispatch group count; 1 when unsharded/CPU)."""
-    import jax
-    am = jax.sharding.get_abstract_mesh()
+    from repro.sharding.rules import get_abstract_mesh
+    am = get_abstract_mesh()
     if am is None or getattr(am, "empty", True):
         return 1
     g = 1

@@ -18,6 +18,24 @@ from __future__ import annotations
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+
+def get_abstract_mesh():
+    """Ambient-mesh lookup that works on both new and old jax.
+
+    Newer jax exposes ``jax.sharding.get_abstract_mesh()``; on older releases
+    (0.4.x) the equivalent ambient state set by ``with mesh:`` lives in the
+    thread-local resource env. Returns an object with ``empty``/``axis_names``
+    /``shape`` or None when no mesh is active.
+    """
+    fn = getattr(jax.sharding, "get_abstract_mesh", None)
+    if fn is not None:
+        return fn()
+    try:
+        from jax._src import mesh as _mesh_lib
+        return _mesh_lib.thread_resources.env.physical_mesh
+    except Exception:
+        return None
+
 LOGICAL_RULES = {
     "vocab": "model",
     "heads": "model",
@@ -117,7 +135,7 @@ def constrain_gathered(params_tree, logical_tree):
     """with_sharding_constraint that keeps tensor-parallel axes but drops the
     FSDP ('embed') mapping — materializes the per-layer weight all-gather
     (the FSDP dataflow) instead of GSPMD's activation-partial all-reduces."""
-    am = jax.sharding.get_abstract_mesh()
+    am = get_abstract_mesh()
     if am is None or getattr(am, "empty", True):
         return params_tree
     rules = dict(MULTIPOD_RULES if "pod" in am.axis_names else LOGICAL_RULES)
@@ -148,7 +166,7 @@ def maybe_constrain(x, *mesh_axes):
 
     mesh_axes: one mesh-axis name (or tuple of names, or None) per dim.
     """
-    am = jax.sharding.get_abstract_mesh()
+    am = get_abstract_mesh()
     if am is None or getattr(am, "empty", True):
         return x
     spec = []

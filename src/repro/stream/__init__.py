@@ -1,0 +1,18 @@
+"""Streaming graph subsystem: out-of-core ingestion, incremental partition
+patching, warm-start recompute (see docs/STREAMING.md).
+
+  - edgelog:  chunked on-disk edge log (reader/writer, spill shards)
+  - ingest:   two-pass streaming pipeline -> PartitionedGraph + StreamContext
+  - delta:    edge insert/delete batches patched through the frozen hashes
+"""
+from repro.stream.delta import DeltaStats, EdgeDelta, apply_delta
+from repro.stream.edgelog import (EdgeLogMeta, EdgeLogReader, EdgeLogWriter,
+                                  write_edge_log)
+from repro.stream.ingest import (ChunkAccountant, IngestStats, StreamContext,
+                                 streaming_ingest)
+
+__all__ = [
+    "EdgeLogMeta", "EdgeLogReader", "EdgeLogWriter", "write_edge_log",
+    "ChunkAccountant", "IngestStats", "StreamContext", "streaming_ingest",
+    "EdgeDelta", "DeltaStats", "apply_delta",
+]

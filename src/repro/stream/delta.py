@@ -1,0 +1,230 @@
+"""Incremental graph mutation: route edge deltas with the frozen pure
+hashes and patch the affected partitions in place.
+
+An ``EdgeDelta`` (insert + delete batches) is routed through the *same*
+``StreamContext`` the graph was ingested with, so every mutation lands in
+exactly the partition a full re-ingest would choose — no global re-shuffle,
+no re-routing of resident edges. Only partitions that actually receive a
+mutation are rebuilt (O(partition) each); a partition whose new edge count
+overflows ``e_max`` triggers a grow-and-re-pad of the dense arrays (the
+padded capacity is shared across partitions by construction). Vertex-level
+metadata (frontier slots, master election, full degrees) is recomputed from
+the patched membership — O(P * v_max), cheap next to any edge pass — using
+the same hash election as the builders.
+
+Membership is grow-only between compactions: a vertex whose last local edge
+was deleted stays a (edge-less) member of its partition. That is harmless —
+it contributes nothing to sweeps and only its own initial value to SBS — and
+keeps deletion O(partition). ``n_vertices`` grows automatically when a delta
+references ids beyond the current space.
+
+Warm-start pairing: after ``apply_delta``, monotone programs (SSSP/MSSP/CC)
+can restart from the previous converged result via ``run_sim(...,
+init_state=prev)`` — sound for *insert-only* deltas, where old values remain
+valid upper bounds. ``apply_delta`` reports ``warm_start_safe`` accordingly;
+deletions require a cold start (the engine also refuses warm starts for
+non-monotone programs on its own).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core.subgraph import PartitionedGraph, recompute_frontier
+from repro.stream.ingest import StreamContext
+
+__all__ = ["EdgeDelta", "DeltaStats", "apply_delta"]
+
+
+@dataclasses.dataclass
+class EdgeDelta:
+    """A batch of edge mutations in global vertex ids."""
+
+    add_src: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.empty(0, np.int64))
+    add_dst: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.empty(0, np.int64))
+    add_w: Optional[np.ndarray] = None       # None -> unit weights
+    del_src: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.empty(0, np.int64))
+    del_dst: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.empty(0, np.int64))
+
+    def __post_init__(self):
+        self.add_src = np.asarray(self.add_src, np.int64)
+        self.add_dst = np.asarray(self.add_dst, np.int64)
+        self.del_src = np.asarray(self.del_src, np.int64)
+        self.del_dst = np.asarray(self.del_dst, np.int64)
+        if self.add_w is not None:
+            self.add_w = np.asarray(self.add_w, np.float32)
+            assert self.add_w.shape == self.add_src.shape
+        assert self.add_src.shape == self.add_dst.shape
+        assert self.del_src.shape == self.del_dst.shape
+
+    @property
+    def n_adds(self) -> int:
+        return int(self.add_src.shape[0])
+
+    @property
+    def n_dels(self) -> int:
+        return int(self.del_src.shape[0])
+
+    @property
+    def max_id(self) -> int:
+        parts = [a.max() for a in (self.add_src, self.add_dst,
+                                   self.del_src, self.del_dst) if a.size]
+        return int(max(parts)) if parts else -1
+
+
+@dataclasses.dataclass
+class DeltaStats:
+    n_added: int = 0
+    n_deleted: int = 0               # edges actually found and removed
+    parts_patched: int = 0
+    repadded: bool = False           # e_max/v_max grew (dense arrays re-pad)
+    n_slots_before: int = 0
+    n_slots_after: int = 0
+    warm_start_safe: bool = False    # True for insert-only deltas
+
+
+def _round_up(n: int, m: int) -> int:
+    return int(-(-max(n, 1) // m) * m)
+
+
+def _grow_cols(arr: np.ndarray, n: int, fill) -> np.ndarray:
+    if arr.shape[1] >= n:
+        return arr
+    out = np.full((arr.shape[0], n) + arr.shape[2:], fill, dtype=arr.dtype)
+    out[:, :arr.shape[1]] = arr
+    return out
+
+
+def _edge_key(src: np.ndarray, dst: np.ndarray, n_vertices: int) -> np.ndarray:
+    # Collision-free for n_vertices < 2^31.5; the dense in-memory builder has
+    # the same id-space envelope (local indices are int32).
+    return src.astype(np.int64) * np.int64(n_vertices) + dst.astype(np.int64)
+
+
+def apply_delta(pg: PartitionedGraph, ctx: StreamContext, delta: EdgeDelta,
+                *, pad_multiple: int = 8) -> DeltaStats:
+    """Apply ``delta`` to ``pg`` in place, routing through ``ctx``.
+
+    Deletions remove *every* resident copy of a (src, dst) pair in the
+    partition the pair routes to; pairs that are not resident are ignored.
+    """
+    stats = DeltaStats(n_slots_before=pg.n_slots,
+                       warm_start_safe=delta.n_dels == 0)
+    if delta.n_adds == 0 and delta.n_dels == 0:
+        stats.n_slots_after = pg.n_slots
+        return stats
+
+    # ---- id-space growth ------------------------------------------------ #
+    new_v = max(pg.n_vertices, delta.max_id + 1)
+    ctx.grow(new_v)
+    pg.n_vertices = new_v
+
+    # ---- route mutations through the frozen hashes ----------------------- #
+    add_part = ctx.route(delta.add_src, delta.add_dst)
+    del_part = ctx.route(delta.del_src, delta.del_dst)
+    add_w = (np.ones(delta.n_adds, np.float32) if delta.add_w is None
+             else delta.add_w)
+    affected = np.unique(np.concatenate([add_part, del_part]))
+
+    # Current full degrees, reconstructed from replica rows while they are
+    # still aligned with gvid (all replicas agree on the value); the delta's
+    # shifts are folded in below — O(V + delta), no global edge re-scan.
+    g_out = np.zeros(new_v, np.float64)
+    g_in = np.zeros(new_v, np.float64)
+    sel = pg.vmask
+    g_out[pg.gvid[sel]] = pg.out_deg[sel]
+    g_in[pg.gvid[sel]] = pg.in_deg[sel]
+    g_out += np.bincount(delta.add_src, minlength=new_v)
+    g_in += np.bincount(delta.add_dst, minlength=new_v)
+
+    # ---- rebuild each affected partition's local arrays ------------------ #
+    # Rebuilt content is staged, then written after any capacity growth.
+    staged = {}
+    need_e = int(pg.e_max)
+    need_v = int(pg.v_max)
+    for p in affected.tolist():
+        m = pg.emask[p]
+        gs = pg.gvid[p][pg.esrc[p][m]]
+        gd = pg.gvid[p][pg.edst[p][m]]
+        w = pg.ew[p][m]
+
+        dsel = del_part == p
+        if dsel.any():
+            dkey = _edge_key(delta.del_src[dsel], delta.del_dst[dsel], new_v)
+            keep = ~np.isin(_edge_key(gs, gd, new_v), dkey)
+            stats.n_deleted += int(gs.shape[0] - keep.sum())
+            if not keep.all():   # only matched copies shift degrees
+                g_out -= np.bincount(gs[~keep], minlength=new_v)
+                g_in -= np.bincount(gd[~keep], minlength=new_v)
+            gs, gd, w = gs[keep], gd[keep], w[keep]
+
+        asel = add_part == p
+        if asel.any():
+            gs = np.concatenate([gs, delta.add_src[asel]])
+            gd = np.concatenate([gd, delta.add_dst[asel]])
+            w = np.concatenate([w, add_w[asel]])
+            stats.n_added += int(asel.sum())
+
+        # grow-only membership: old members stay, new endpoints join
+        lv = np.unique(np.concatenate([pg.gvid[p][pg.vmask[p]], gs, gd]))
+        staged[p] = (lv, gs, gd, w)
+        need_e = max(need_e, gs.shape[0])
+        need_v = max(need_v, lv.shape[0])
+
+    # ---- capacity growth (shared padded dims) ---------------------------- #
+    new_e_max = _round_up(need_e, pad_multiple) if need_e > pg.e_max else pg.e_max
+    new_v_max = _round_up(need_v, pad_multiple) if need_v > pg.v_max else pg.v_max
+    if new_e_max > pg.e_max or new_v_max > pg.v_max:
+        stats.repadded = True
+        pg.esrc = _grow_cols(pg.esrc, new_e_max, 0)
+        pg.edst = _grow_cols(pg.edst, new_e_max, 0)
+        pg.ew = _grow_cols(pg.ew, new_e_max, 0.0)
+        pg.emask = _grow_cols(pg.emask, new_e_max, False)
+        pg.gvid = _grow_cols(pg.gvid, new_v_max, -1)
+        pg.vmask = _grow_cols(pg.vmask, new_v_max, False)
+        pg.out_deg = _grow_cols(pg.out_deg, new_v_max, 0.0)
+        pg.in_deg = _grow_cols(pg.in_deg, new_v_max, 0.0)
+        # slot/is_frontier/is_master are rebuilt below at the new width
+        pg.e_max, pg.v_max = new_e_max, new_v_max
+        if pg.vlabel is not None:
+            pg.vlabel = _grow_cols(pg.vlabel, new_v_max, 0)
+
+    for p, (lv, gs, gd, w) in staged.items():
+        nv, ne = lv.shape[0], gs.shape[0]
+        pg.gvid[p] = -1
+        pg.gvid[p, :nv] = lv
+        pg.vmask[p] = False
+        pg.vmask[p, :nv] = True
+        ls = np.searchsorted(lv, gs).astype(np.int32)
+        ld = np.searchsorted(lv, gd).astype(np.int32)
+        eo = np.argsort(ld, kind="stable")
+        pg.esrc[p] = 0
+        pg.edst[p] = 0
+        pg.ew[p] = 0.0
+        pg.emask[p] = False
+        pg.esrc[p, :ne] = ls[eo]
+        pg.edst[p, :ne] = ld[eo]
+        pg.ew[p, :ne] = w[eo]
+        pg.emask[p, :ne] = True
+    stats.parts_patched = len(staged)
+    pg.n_edges += stats.n_added - stats.n_deleted
+    pg.edge_part = None   # host-side assignment is stale after a patch
+
+    # ---- write refreshed full degrees to every replica -------------------- #
+    # (rows of patched partitions were re-ordered and new members appeared,
+    # so every replica row re-reads the updated global table; ctx's
+    # routing_degrees stays frozen — that is the delta-routing contract)
+    sel = pg.vmask
+    pg.out_deg[sel] = g_out[pg.gvid[sel]].astype(np.float32)
+    pg.in_deg[sel] = g_in[pg.gvid[sel]].astype(np.float32)
+
+    # ---- frontier-slot + master maintenance ------------------------------ #
+    recompute_frontier(pg)
+    stats.n_slots_after = pg.n_slots
+    return stats

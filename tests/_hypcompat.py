@@ -1,0 +1,71 @@
+"""Optional-`hypothesis` shim for the property tests.
+
+With hypothesis installed this re-exports the real ``given``/``settings``/
+``st``. Without it (minimal CI images), a deterministic miniature stands in:
+each strategy draws from a seeded numpy Generator and ``@given`` replays the
+test body ``max_examples`` times. Coverage is narrower than real hypothesis
+(no shrinking, fixed seed) but keeps the suite runnable and meaningful with
+zero extra dependencies — install ``requirements-dev.txt`` for the real thing.
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is present
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+    import numpy as _np
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng):
+            return self._draw(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value)))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(
+                lambda rng: elements[int(rng.integers(0, len(elements)))])
+
+    st = _Strategies()
+
+    def settings(max_examples: int = 20, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strategies):
+        def deco(fn):
+            # NB: no functools.wraps — copying fn's signature would make
+            # pytest resolve the strategy parameters as fixtures.
+            def runner(*args, **kwargs):
+                # @settings may wrap either this runner (applied above
+                # @given) or the raw fn (applied below), so check both.
+                n = (getattr(runner, "_max_examples", None)
+                     or getattr(fn, "_max_examples", None) or 20)
+                rng = _np.random.default_rng(0)
+                for _ in range(n):
+                    vals = [s.draw(rng) for s in strategies]
+                    fn(*args, *vals, **kwargs)
+            runner.__name__ = fn.__name__
+            runner.__doc__ = fn.__doc__
+            return runner
+        return deco

@@ -35,8 +35,8 @@ from repro.training import steps as S
 from repro.launch import hlo_walk
 
 cfg = get_smoke_config("olmo_1b")
-mesh = jax.make_mesh((4, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.compat import make_mesh, set_mesh
+mesh = make_mesh((4, 4), ("data", "model"))
 p_shapes = jax.eval_shape(lambda k: M.init_model(k, cfg),
                           jax.ShapeDtypeStruct((2,), jnp.uint32))
 p_shard = R.param_shardings(mesh, M.model_specs(cfg), p_shapes)
@@ -52,7 +52,7 @@ def fwd(params, batch):
     return S.loss_fn(params, batch, cfg)[0]
 
 
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     compiled = jax.jit(fwd).lower(params_in, batch_in).compile()
 w = hlo_walk.analyze(compiled.as_text())
 B, S_, d, ff, V, L = 8, 64, 64, 256, 128, 2

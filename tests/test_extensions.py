@@ -49,3 +49,22 @@ def test_bsp_checkpoint_resume(tmp_path):
                               resume_from=ckpt)
     np.testing.assert_array_equal(full, resumed)
     assert st_res.supersteps <= st_full.supersteps
+
+
+def test_bsp_checkpoint_creates_missing_dir(tmp_path):
+    """Regression: checkpoint_dir that does not exist yet is created before
+    the first save, and the written checkpoint round-trips via resume_from."""
+    g = powerlaw_graph(800, seed=10).as_undirected()
+    pg = partition_and_build(g, 6, "cdbh")
+    cc = ConnectedComponents()
+    full, st_full = run_sim(cc, pg, None, EngineConfig(mode="vc", trace=True))
+    assert st_full.supersteps > 2
+
+    ckdir = tmp_path / "does" / "not" / "exist"   # never mkdir'd here
+    ck = EngineConfig(mode="vc", trace=True, checkpoint_every=2,
+                      checkpoint_dir=str(ckdir))
+    run_sim(cc, pg, None, ck)
+    assert (ckdir / "bsp_000002.npz").exists()
+    resumed, _ = run_sim(cc, pg, None, EngineConfig(mode="vc", trace=True),
+                         resume_from=str(ckdir / "bsp_000002.npz"))
+    np.testing.assert_array_equal(full, resumed)

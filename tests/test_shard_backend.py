@@ -14,8 +14,9 @@ from repro.graphgen import powerlaw_graph, grid_graph
 from repro.algos import ConnectedComponents, SSSP, PageRank
 from repro.algos.gsim import make_gsim
 
-mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 3)
+from repro.compat import make_mesh
+
+mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
 cfg_sim = EngineConfig(mode="sc")
 cfg_shard = EngineConfig(mode="sc", backend="shard_map",
                          subgraph_axes=("pod", "data"), edge_axes=("model",))
@@ -69,8 +70,7 @@ r9, _ = run_sim(pr, pg3, {"n_vertices": gd.n_vertices}, cfg_sim)
 assert np.allclose(r8, r9, atol=1e-6), "shard_slots PR"
 
 # 2D mesh without edge sharding (subgraph axes only)
-mesh2 = jax.make_mesh((8,), ("sub",),
-                      axis_types=(jax.sharding.AxisType.Auto,))
+mesh2 = make_mesh((8,), ("sub",))
 pg8 = partition_and_build(g, 8, "cdbh")
 cfg8 = EngineConfig(mode="sc", backend="shard_map", subgraph_axes=("sub",))
 r5, _ = run_shard_map(cc, pg8, mesh2, None, cfg8)

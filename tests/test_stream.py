@@ -1,0 +1,297 @@
+"""Streaming subsystem: edge-log IO, two-pass out-of-core ingest parity with
+the in-memory path (bit-identical per partition), chunk-bounded memory
+accounting, incremental delta patching, and warm-start recompute."""
+import numpy as np
+import pytest
+
+from repro.algos import ConnectedComponents, PageRank, SSSP
+from repro.core import EngineConfig, partition_and_build, run_sim
+from repro.core.graph import Graph
+from repro.graphgen import powerlaw_graph
+from repro.stream import (EdgeDelta, EdgeLogReader, EdgeLogWriter,
+                          apply_delta, streaming_ingest, write_edge_log)
+from repro.stream.edgelog import BYTES_PER_EDGE
+
+PARITY_ARRAYS = ("gvid", "vmask", "esrc", "edst", "ew", "emask", "slot",
+                 "is_frontier", "out_deg", "in_deg", "is_master",
+                 "frontier_gvid")
+
+
+@pytest.fixture(scope="module")
+def big_graph():
+    """Power-law graph with >= 100k edges (acceptance-criterion scale)."""
+    g = powerlaw_graph(20_000, alpha=2.2, avg_degree=8, seed=11,
+                       weighted=True)
+    assert g.n_edges >= 100_000, g.n_edges
+    return g
+
+
+@pytest.fixture(scope="module")
+def big_log(big_graph, tmp_path_factory):
+    d = str(tmp_path_factory.mktemp("edgelog"))
+    meta = write_edge_log(big_graph, d, chunk_size=16_384)
+    assert meta.n_edges == big_graph.n_edges
+    assert meta.n_chunks == -(-big_graph.n_edges // 16_384)
+    return d
+
+
+# --------------------------------------------------------------------------- #
+# edge log
+# --------------------------------------------------------------------------- #
+def test_edgelog_roundtrip(tmp_path):
+    rng = np.random.default_rng(0)
+    src = rng.integers(0, 500, 10_000).astype(np.int64)
+    dst = rng.integers(0, 500, 10_000).astype(np.int64)
+    w = rng.uniform(0, 1, 10_000).astype(np.float32)
+    with EdgeLogWriter(str(tmp_path / "log"), chunk_size=999,
+                       weighted=True) as wr:
+        for lo in range(0, 10_000, 1303):   # appends misaligned with chunks
+            hi = min(lo + 1303, 10_000)
+            wr.append(src[lo:hi], dst[lo:hi], w[lo:hi])
+    rd = EdgeLogReader(str(tmp_path / "log"))
+    assert rd.meta.n_edges == 10_000
+    assert rd.meta.n_vertices == int(max(src.max(), dst.max())) + 1
+    s, d, ww = rd.read_all()
+    np.testing.assert_array_equal(s, src)
+    np.testing.assert_array_equal(d, dst)
+    np.testing.assert_array_equal(ww, w)
+    # every chunk except the last is exactly chunk_size
+    sizes = [c[0].shape[0] for c in rd.chunks()]
+    assert all(n == 999 for n in sizes[:-1]) and sum(sizes) == 10_000
+
+
+def test_edgelog_empty(tmp_path):
+    with EdgeLogWriter(str(tmp_path / "log"), chunk_size=8) as wr:
+        pass
+    rd = EdgeLogReader(str(tmp_path / "log"))
+    assert rd.meta.n_edges == 0 and rd.meta.n_chunks == 0
+    s, d, w = rd.read_all()
+    assert s.size == 0 and w is None
+
+
+# --------------------------------------------------------------------------- #
+# two-pass ingest parity (acceptance criterion)
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("part", ["cdbh", "rh-ec"])
+def test_streaming_parity(big_graph, big_log, part):
+    """Chunked two-pass ingest == one-shot in-memory partitioning,
+    bit-identical per partition, on a >= 100k-edge power-law graph."""
+    n_parts = 8
+    pg_mem = partition_and_build(big_graph, n_parts, part)
+    pg_st, ctx, stats = streaming_ingest(big_log, n_parts, part)
+    assert (pg_st.n_parts, pg_st.n_vertices, pg_st.n_edges, pg_st.n_slots,
+            pg_st.v_max, pg_st.e_max) == \
+           (pg_mem.n_parts, pg_mem.n_vertices, pg_mem.n_edges,
+            pg_mem.n_slots, pg_mem.v_max, pg_mem.e_max)
+    for name in PARITY_ARRAYS:
+        np.testing.assert_array_equal(getattr(pg_st, name),
+                                      getattr(pg_mem, name), err_msg=name)
+    # chunk accounting: the streaming passes never held O(|E|) edge bytes
+    assert stats.peak_stream_bytes <= stats.stream_bound_bytes
+    full_bytes = big_graph.n_edges * BYTES_PER_EDGE
+    assert stats.stream_bound_bytes < full_bytes / 2, \
+        "chunk bound is not meaningfully below the full edge list"
+    # routing context snapshot matches the full-degree table
+    np.testing.assert_array_equal(ctx.routing_degrees,
+                                  big_graph.total_degrees())
+
+
+def test_streaming_rejects_stateful_partitioner(big_log):
+    with pytest.raises(ValueError):
+        streaming_ingest(big_log, 4, "greedy-ec")
+
+
+def test_streaming_isolated_vertices(tmp_path):
+    """Vertices with no edges get the same hash round-robin placement."""
+    g = Graph(50, np.array([0, 1, 2], np.int64), np.array([1, 2, 3], np.int64))
+    d = str(tmp_path / "log")
+    write_edge_log(g, d, chunk_size=2)
+    pg_mem = partition_and_build(g, 4, "cdbh")
+    pg_st, _, _ = streaming_ingest(d, 4, "cdbh")
+    for name in PARITY_ARRAYS:
+        np.testing.assert_array_equal(getattr(pg_st, name),
+                                      getattr(pg_mem, name), err_msg=name)
+
+
+# --------------------------------------------------------------------------- #
+# delta patching
+# --------------------------------------------------------------------------- #
+def _edge_multiset(pg):
+    """Global (src, dst, w) multiset of resident edges, canonically sorted."""
+    rows = []
+    for p in range(pg.n_parts):
+        m = pg.emask[p]
+        rows.append(np.stack([pg.gvid[p][pg.esrc[p][m]].astype(np.float64),
+                              pg.gvid[p][pg.edst[p][m]].astype(np.float64),
+                              pg.ew[p][m].astype(np.float64)], 1))
+    rows = np.concatenate(rows, 0)
+    return rows[np.lexsort(rows.T)]
+
+
+def test_delta_insert_matches_full_reingest(tmp_path):
+    """Insert-only delta == re-ingesting the grown log with the same frozen
+    routing degrees: same residency, membership superset-free, same slots."""
+    g = powerlaw_graph(3000, seed=4, weighted=True)
+    d = str(tmp_path / "log")
+    write_edge_log(g, d, chunk_size=4096)
+    pg, ctx, _ = streaming_ingest(d, 6, "cdbh")
+
+    rng = np.random.default_rng(5)
+    n_add = 500
+    asrc = rng.integers(0, g.n_vertices, n_add).astype(np.int64)
+    adst = rng.integers(0, g.n_vertices, n_add).astype(np.int64)
+    aw = rng.uniform(1, 2, n_add).astype(np.float32)
+    st = apply_delta(pg, ctx, EdgeDelta(add_src=asrc, add_dst=adst, add_w=aw))
+    assert st.n_added == n_add and st.n_deleted == 0 and st.warm_start_safe
+    assert pg.n_edges == g.n_edges + n_add
+
+    # reference: route the grown edge list through the SAME frozen degrees
+    from repro.core import build_partitioned_graph
+    g2 = Graph(g.n_vertices, np.concatenate([g.src, asrc]),
+               np.concatenate([g.dst, adst]),
+               np.concatenate([g.weights, aw]))
+    from repro.core.partition import route_edges_cdbh
+    part2 = route_edges_cdbh(g2.src, g2.dst, ctx.routing_degrees, 6)
+    pg2 = build_partitioned_graph(g2, part2, 6)
+
+    np.testing.assert_array_equal(_edge_multiset(pg), _edge_multiset(pg2))
+    # membership, slots and masters agree exactly (insert-only => no stale)
+    assert pg.n_slots == pg2.n_slots
+    for p in range(6):
+        np.testing.assert_array_equal(pg.gvid[p][pg.vmask[p]],
+                                      pg2.gvid[p][pg2.vmask[p]])
+        np.testing.assert_array_equal(
+            pg.is_master[p][pg.vmask[p]], pg2.is_master[p][pg2.vmask[p]])
+        np.testing.assert_array_equal(
+            pg.slot[p][pg.vmask[p]], pg2.slot[p][pg2.vmask[p]])
+        np.testing.assert_array_equal(
+            pg.out_deg[p][pg.vmask[p]], pg2.out_deg[p][pg2.vmask[p]])
+
+
+def test_delta_delete_and_results(tmp_path):
+    """Deletions remove resident copies; engine results match a fresh build
+    of the mutated graph (undirected CC + SSSP)."""
+    g = powerlaw_graph(1200, seed=6, weighted=True).as_undirected()
+    d = str(tmp_path / "log")
+    write_edge_log(g, d, chunk_size=2048)
+    pg, ctx, _ = streaming_ingest(d, 5, "cdbh")
+
+    rng = np.random.default_rng(7)
+    sel = rng.choice(g.n_edges, size=200, replace=False)
+    # undirected storage: drop both directions of each sampled edge
+    ds = np.concatenate([g.src[sel], g.dst[sel]])
+    dd = np.concatenate([g.dst[sel], g.src[sel]])
+    st = apply_delta(pg, ctx, EdgeDelta(del_src=ds, del_dst=dd))
+    assert st.n_deleted > 0 and not st.warm_start_safe
+    assert pg.n_edges == int(pg.emask.sum())
+
+    kept = np.ones(g.n_edges, bool)
+    key = g.src * np.int64(g.n_vertices) + g.dst
+    kept[np.isin(key, ds * np.int64(g.n_vertices) + dd)] = False
+    g2 = Graph(g.n_vertices, g.src[kept], g.dst[kept], g.weights[kept])
+    pg2 = partition_and_build(g2, 5, "cdbh")
+    assert pg.n_edges == g2.n_edges
+
+    r1, _ = run_sim(ConnectedComponents(), pg, None, EngineConfig())
+    r2, _ = run_sim(ConnectedComponents(), pg2, None, EngineConfig())
+    np.testing.assert_array_equal(pg.collect(r1, fill=-1),
+                                  pg2.collect(r2, fill=-1))
+    r3, _ = run_sim(SSSP(), pg, {"source": 3}, EngineConfig())
+    r4, _ = run_sim(SSSP(), pg2, {"source": 3}, EngineConfig())
+    np.testing.assert_allclose(pg.collect(r3, fill=np.float32(np.inf)),
+                               pg2.collect(r4, fill=np.float32(np.inf)),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_delta_grows_vertex_space(tmp_path):
+    g = powerlaw_graph(500, seed=8).as_undirected()
+    d = str(tmp_path / "log")
+    write_edge_log(g, d, chunk_size=1024)
+    pg, ctx, _ = streaming_ingest(d, 4, "cdbh")
+    old_v = pg.n_vertices
+    # attach a chain of brand-new vertices to vertex 0
+    new = np.arange(old_v, old_v + 10, dtype=np.int64)
+    chain_s = np.concatenate([[0], new[:-1]])
+    st = apply_delta(pg, ctx, EdgeDelta(
+        add_src=np.concatenate([chain_s, new]),
+        add_dst=np.concatenate([new, chain_s])))
+    assert pg.n_vertices == old_v + 10 and ctx.n_vertices == old_v + 10
+    assert st.n_added == 20
+    r, _ = run_sim(ConnectedComponents(), pg, None, EngineConfig())
+    lab = pg.collect(r, fill=-1)
+    assert (lab[new] == lab[0]).all(), "new chain joins vertex 0's component"
+
+
+def test_recompute_frontier_is_idempotent(tmp_path):
+    from repro.core import recompute_frontier
+    g = powerlaw_graph(800, seed=9)
+    pg = partition_and_build(g, 5, "cdbh")
+    before = {n: getattr(pg, n).copy() for n in
+              ("slot", "is_frontier", "is_master", "frontier_gvid")}
+    recompute_frontier(pg)
+    for n, arr in before.items():
+        np.testing.assert_array_equal(arr, getattr(pg, n), err_msg=n)
+
+
+# --------------------------------------------------------------------------- #
+# warm-start recompute (acceptance criterion)
+# --------------------------------------------------------------------------- #
+def test_warm_start_sssp_after_insert_batch(tmp_path):
+    """After a ~1% edge-insert batch, warm-start SSSP converges in fewer
+    supersteps than cold start and matches it to np.allclose."""
+    g = powerlaw_graph(4000, seed=2, weighted=True).as_undirected()
+    d = str(tmp_path / "log")
+    write_edge_log(g, d, chunk_size=8192)
+    pg, ctx, _ = streaming_ingest(d, 5, "cdbh")
+    res0, _ = run_sim(SSSP(), pg, {"source": 0}, EngineConfig())
+    prev = pg.collect(res0, fill=np.float32(np.inf))
+
+    rng = np.random.default_rng(3)
+    n_add = g.n_edges // 200          # ~1% counting both directions
+    asrc = rng.integers(0, g.n_vertices, n_add)
+    adst = rng.integers(0, g.n_vertices, n_add)
+    keep = asrc != adst
+    asrc, adst = asrc[keep], adst[keep]
+    # mid/high-weight inserts: distances improve only locally, which is the
+    # regime where incremental recompute pays off (a tiny-weight shortcut
+    # into a hub can legitimately cascade as far as a cold start).
+    aw = rng.uniform(5, 10, asrc.size).astype(np.float32)
+    st = apply_delta(pg, ctx, EdgeDelta(
+        add_src=np.concatenate([asrc, adst]),
+        add_dst=np.concatenate([adst, asrc]),
+        add_w=np.concatenate([aw, aw])))
+    assert st.warm_start_safe
+
+    cold, st_cold = run_sim(SSSP(), pg, {"source": 0}, EngineConfig())
+    warm, st_warm = run_sim(SSSP(), pg, {"source": 0}, EngineConfig(),
+                            init_state=prev)
+    c = pg.collect(cold, fill=np.float32(np.inf))
+    w = pg.collect(warm, fill=np.float32(np.inf))
+    fin = np.isfinite(c)
+    assert np.allclose(w[fin], c[fin], rtol=1e-5, atol=1e-4)
+    assert np.isinf(w[~fin]).all()
+    assert st_warm.supersteps < st_cold.supersteps, \
+        (st_warm.supersteps, st_cold.supersteps)
+
+
+def test_warm_start_cc(tmp_path):
+    g = powerlaw_graph(2000, seed=12).as_undirected()
+    pg = partition_and_build(g, 4, "cdbh")
+    res0, _ = run_sim(ConnectedComponents(), pg, None, EngineConfig())
+    prev = pg.collect(res0, fill=-1)
+    warm, st_w = run_sim(ConnectedComponents(), pg, None, EngineConfig(),
+                         init_state=prev)
+    np.testing.assert_array_equal(pg.collect(warm, fill=-1), prev)
+    assert st_w.supersteps <= 2, "already-converged warm start is immediate"
+
+
+def test_warm_start_nonmonotone_falls_back_cold():
+    g = powerlaw_graph(600, seed=13)
+    pg = partition_and_build(g, 4, "cdbh")
+    cfg = EngineConfig(max_local_iters=300, max_supersteps=3000)
+    pr = PageRank(tol=1e-9)
+    r1, _ = run_sim(pr, pg, {"n_vertices": g.n_vertices}, cfg)
+    # bogus init_state must be ignored (cold-start correctness fallback)
+    r2, _ = run_sim(pr, pg, {"n_vertices": g.n_vertices}, cfg,
+                    init_state=np.full(g.n_vertices, 123.0, np.float32))
+    np.testing.assert_array_equal(r1, r2)

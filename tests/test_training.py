@@ -94,12 +94,13 @@ import jax, jax.numpy as jnp, numpy as np
 from functools import partial
 from jax.sharding import PartitionSpec as P
 from repro.training.optimizer import compressed_psum
-mesh = jax.make_mesh((4,), ("dp",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.compat import make_mesh, shard_map
+mesh = make_mesh((4,), ("dp",))
 g = jax.random.normal(jax.random.PRNGKey(0), (4, 256)) * 0.01
-@partial(jax.shard_map, mesh=mesh, in_specs=P("dp"), out_specs=P("dp"), check_vma=False)
+@partial(shard_map, mesh=mesh, in_specs=P("dp"), out_specs=P("dp"))
 def exact(x):
     return jax.lax.pmean(x, "dp")
-@partial(jax.shard_map, mesh=mesh, in_specs=P("dp"), out_specs=P("dp"), check_vma=False)
+@partial(shard_map, mesh=mesh, in_specs=P("dp"), out_specs=P("dp"))
 def comp(x):
     out, _ = compressed_psum({"g": x}, None, jax.random.PRNGKey(1), "dp")
     return out["g"]
