@@ -1,8 +1,14 @@
 """Streaming subsystem benchmark: chunked-ingest throughput vs the one-shot
-in-memory path, and incremental (warm-start) vs full recompute after a 1%
-edge-insert batch.
+in-memory path, incremental (warm-start) vs full recompute after a 1%
+edge-insert batch, per-op patching vs coalesced DeltaBuffer flushes under
+producer traffic, and compaction payoff after a delete-heavy phase.
 
     PYTHONPATH=src python -m benchmarks.streaming_ingest [--n 50000]
+    PYTHONPATH=src python -m benchmarks.streaming_ingest --smoke   # CI
+
+``--smoke`` shrinks every stage so the whole file runs in well under a
+minute on a CPU runner while still exercising the batching + compaction
+code paths end to end.
 """
 from __future__ import annotations
 
@@ -15,9 +21,9 @@ import numpy as np
 from benchmarks.common import save, table
 from repro.algos import SSSP
 from repro.core import EngineConfig, partition_and_build, run_sim
+from repro.stream import (DeltaBuffer, EdgeDelta, apply_delta, compact,
+                          streaming_ingest, write_edge_log)
 from repro.graphgen import powerlaw_graph
-from repro.stream import (EdgeDelta, apply_delta, streaming_ingest,
-                          write_edge_log)
 
 
 def bench_ingest(g, n_parts, chunk_sizes):
@@ -96,16 +102,96 @@ def bench_incremental(g, n_parts):
             "speedup_supersteps": st_c.supersteps / max(st_w.supersteps, 1)}
 
 
+def bench_batching(g, n_parts, n_ops, flush_every):
+    """Per-op apply_delta vs one coalesced DeltaBuffer flush per window —
+    the continuous-producer-traffic path (docs/STREAMING.md)."""
+    log_dir = tempfile.mkdtemp(prefix="drone_bench_buf_")
+    write_edge_log(g, log_dir, chunk_size=65_536)
+    pg_seq, ctx_seq, _ = streaming_ingest(log_dir, n_parts, "cdbh")
+    pg_buf, ctx_buf, _ = streaming_ingest(log_dir, n_parts, "cdbh")
+
+    rng = np.random.default_rng(3)
+    s = rng.integers(0, pg_seq.n_vertices, n_ops).astype(np.int64)
+    d = rng.integers(0, pg_seq.n_vertices, n_ops).astype(np.int64)
+    keep = s != d
+    s, d = s[keep], d[keep]
+    w = rng.uniform(1, 2, s.size).astype(np.float32)
+
+    t0 = time.perf_counter()
+    for i in range(s.size):
+        apply_delta(pg_seq, ctx_seq, EdgeDelta(
+            add_src=s[i:i+1], add_dst=d[i:i+1], add_w=w[i:i+1]))
+    t_seq = time.perf_counter() - t0
+
+    buf = DeltaBuffer(pg_buf, ctx_buf, max_edges=flush_every)
+    t0 = time.perf_counter()
+    for i in range(s.size):
+        buf.add(int(s[i]), int(d[i]), float(w[i]))
+    buf.flush()
+    t_buf = time.perf_counter() - t0
+    assert pg_buf.n_edges == pg_seq.n_edges
+
+    table(f"Delta batching ({s.size} producer add-ops, P={n_parts}, "
+          f"flush_every={flush_every})",
+          ["path", "patches", "ops/s", "wall s"],
+          [["per-op apply_delta", s.size, f"{s.size / t_seq:.0f}",
+            f"{t_seq:.2f}"],
+           ["DeltaBuffer", buf.stats.n_flushes,
+            f"{s.size / t_buf:.0f}", f"{t_buf:.2f}"]])
+    return {"batch_ops": int(s.size), "batch_flushes": buf.stats.n_flushes,
+            "per_op_ops_per_s": s.size / t_seq,
+            "buffered_ops_per_s": s.size / t_buf,
+            "batching_speedup": t_seq / t_buf}
+
+
+def bench_compaction(g, n_parts):
+    """Delete-heavy phase: grow-only buffers vs compacted buffers."""
+    log_dir = tempfile.mkdtemp(prefix="drone_bench_cmp_")
+    write_edge_log(g, log_dir, chunk_size=65_536)
+    pg, ctx, _ = streaming_ingest(log_dir, n_parts, "cdbh")
+
+    rng = np.random.default_rng(4)
+    sel = rng.choice(g.n_edges, size=g.n_edges // 3, replace=False)
+    apply_delta(pg, ctx, EdgeDelta(
+        del_src=np.concatenate([g.src[sel], g.dst[sel]]),
+        del_dst=np.concatenate([g.dst[sel], g.src[sel]])))
+    v0, e0, s0 = pg.v_max, pg.e_max, pg.n_slots
+    t0 = time.perf_counter()
+    cs = compact(pg, ctx)
+    t_cmp = time.perf_counter() - t0
+    table(f"Compaction after deleting 2/3 of the edges (P={n_parts}, "
+          f"{t_cmp*1e3:.0f} ms)",
+          ["buffer", "grow-only", "compacted"],
+          [["v_max", v0, pg.v_max], ["e_max", e0, pg.e_max],
+           ["n_slots", s0, pg.n_slots],
+           ["members", cs.n_evicted + int(pg.vmask.sum()),
+            int(pg.vmask.sum())]])
+    return {"compact_time_s": t_cmp, "compact_evicted": cs.n_evicted,
+            "v_max_shrink": v0 / pg.v_max, "e_max_shrink": e0 / pg.e_max,
+            "n_slots_shrink": s0 / pg.n_slots}
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, default=50_000)
     ap.add_argument("--parts", type=int, default=8)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes for CI: exercise every path, skip scale")
     args = ap.parse_args()
+    if args.smoke:
+        args.n = 3_000
     g = powerlaw_graph(args.n, avg_degree=8, seed=0,
                        weighted=True).as_undirected()
-    rec = {"n_vertices": g.n_vertices, "n_edges": g.n_edges}
-    rec.update(bench_ingest(g, args.parts, [16_384, 65_536, 262_144]))
+    rec = {"n_vertices": g.n_vertices, "n_edges": g.n_edges,
+           "smoke": args.smoke}
+    chunk_sizes = [4_096, 16_384] if args.smoke else \
+        [16_384, 65_536, 262_144]
+    rec.update(bench_ingest(g, args.parts, chunk_sizes))
     rec.update(bench_incremental(g, args.parts))
+    rec.update(bench_batching(g, args.parts,
+                              n_ops=200 if args.smoke else 2_000,
+                              flush_every=64 if args.smoke else 512))
+    rec.update(bench_compaction(g, args.parts))
     save("streaming_ingest", rec)
 
 

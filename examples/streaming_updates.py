@@ -1,11 +1,14 @@
-"""Continuously-updating workload: out-of-core ingest, live edge inserts,
-warm-start incremental SSSP (docs/STREAMING.md).
+"""Continuously-updating workload: out-of-core ingest, buffered live edge
+traffic, warm-start incremental SSSP, membership compaction
+(docs/STREAMING.md).
 
 A producer appends edges to a chunked on-disk edge log; the two-pass
 streaming pipeline builds the PartitionedGraph with peak edge memory bounded
-by the chunk size; then batches of new edges are routed through the same
-frozen pure hashes and patched into the affected partitions, and SSSP
-restarts from the previous converged distances instead of from scratch.
+by the chunk size. Producer traffic then flows through a coalescing
+``DeltaBuffer`` (one partition rebuild per flush instead of per op), SSSP
+restarts from the previous converged distances instead of from scratch, and
+after a delete-heavy phase ``compact`` shrinks the padded device buffers
+back down.
 
     PYTHONPATH=src python examples/streaming_updates.py
 """
@@ -16,7 +19,7 @@ import numpy as np
 from repro.algos import SSSP
 from repro.core import EngineConfig, run_sim
 from repro.graphgen import powerlaw_graph
-from repro.stream import (EdgeDelta, apply_delta, streaming_ingest,
+from repro.stream import (DeltaBuffer, compact, streaming_ingest,
                           write_edge_log)
 
 
@@ -39,6 +42,8 @@ def main():
     prev = pg.collect(res, fill=np.float32(np.inf))
     print(f"initial SSSP: {stats.supersteps} supersteps")
 
+    # ---- continuous producer traffic through the coalescing buffer ------- #
+    buf = DeltaBuffer(pg, ctx, max_edges=512)
     rng = np.random.default_rng(1)
     for batch in range(3):
         n = g.n_edges // 200
@@ -47,21 +52,40 @@ def main():
         keep = s != d
         s, d = s[keep], d[keep]
         w = rng.uniform(5, 10, s.size).astype(np.float32)
-        dst = apply_delta(pg, ctx, EdgeDelta(
-            add_src=np.concatenate([s, d]), add_dst=np.concatenate([d, s]),
-            add_w=np.concatenate([w, w])))
+        # the producer emits tiny add ops; the buffer coalesces and flushes
+        e_before, s_before, f_before = pg.n_edges, pg.n_slots, \
+            buf.stats.n_flushes
+        for i in range(0, s.size, 64):
+            buf.add(np.concatenate([s[i:i+64], d[i:i+64]]),
+                    np.concatenate([d[i:i+64], s[i:i+64]]),
+                    np.concatenate([w[i:i+64], w[i:i+64]]))
+        buf.flush()
         cold, st_c = run_sim(SSSP(), pg, {"source": 0}, EngineConfig())
         warm, st_w = run_sim(SSSP(), pg, {"source": 0}, EngineConfig(),
                              init_state=prev)
         ok = np.allclose(
             np.nan_to_num(pg.collect(warm, fill=np.float32(np.inf)), posinf=-1),
             np.nan_to_num(pg.collect(cold, fill=np.float32(np.inf)), posinf=-1))
-        print(f"batch {batch}: +{dst.n_added} edges "
-              f"({dst.parts_patched} partitions patched, "
-              f"slots {dst.n_slots_before}->{dst.n_slots_after}) | "
+        print(f"batch {batch}: +{pg.n_edges - e_before} edges in "
+              f"{buf.stats.n_flushes - f_before} flushes, "
+              f"slots {s_before}->{pg.n_slots} | "
               f"cold {st_c.supersteps} supersteps, warm {st_w.supersteps} "
               f"| allclose={ok}")
         prev = pg.collect(warm, fill=np.float32(np.inf))
+
+    # ---- delete-heavy phase, then compact the zombie members ------------- #
+    sel = rng.choice(g.n_edges, size=g.n_edges // 3, replace=False)
+    buf.delete(np.concatenate([g.src[sel], g.dst[sel]]),
+               np.concatenate([g.dst[sel], g.src[sel]]))
+    buf.flush()
+    v0, e0, s0 = pg.v_max, pg.e_max, pg.n_slots
+    cs = compact(pg, ctx)
+    print(f"compact: evicted {cs.n_evicted} zombie members, "
+          f"v_max {v0}->{pg.v_max}, e_max {e0}->{pg.e_max}, "
+          f"n_slots {s0}->{pg.n_slots}")
+    res, stats = run_sim(SSSP(), pg, {"source": 0}, EngineConfig())
+    print(f"post-compact SSSP: {stats.supersteps} supersteps "
+          f"(graph unchanged by compaction, buffers smaller)")
 
 
 if __name__ == "__main__":

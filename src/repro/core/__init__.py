@@ -8,7 +8,7 @@ from repro.core.partition import (PARTITIONERS, STREAM_ROUTERS,
                                   random_hash_vertex_cut)
 from repro.core.subgraph import (PartitionedGraph, assemble_partitioned_graph,
                                  build_partitioned_graph, frontier_election,
-                                 recompute_frontier)
+                                 recompute_frontier, repack_partitions)
 
 __all__ = [
     "DeviceSubgraph", "VertexProgram", "EdgeCombine", "EngineConfig", "run",
@@ -17,7 +17,7 @@ __all__ = [
     "greedy_edge_cut", "grid_vertex_cut", "random_hash_edge_cut",
     "random_hash_vertex_cut", "PartitionedGraph", "build_partitioned_graph",
     "assemble_partitioned_graph", "frontier_election", "recompute_frontier",
-    "partition_and_build",
+    "repack_partitions", "partition_and_build",
 ]
 
 

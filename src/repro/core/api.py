@@ -89,7 +89,9 @@ class VertexProgram:
                  previous converged result after graph growth: seeding old
                  values is always sound because extra edges can only improve
                  them further. Non-monotone programs (PageRank) must cold
-                 start — the engine enforces that fallback.
+                 start — the engine enforces that fallback on both backends
+                 (the simulator seeds host-side; shard_map threads a sharded
+                 warm block into ``warm_init`` on-device).
     value_key:   state entry holding the per-vertex values ``warm_init``
                  tightens (required when ``monotone``).
     """
@@ -128,9 +130,11 @@ class VertexProgram:
     def warm_init(self, sg: DeviceSubgraph, params, state, warm: jnp.ndarray):
         """Fold a previous converged result into a fresh ``init`` state
         (incremental recompute, stream/delta.py). ``warm`` is [v_max, K] in
-        this partition's local layout, combiner-identity at padded rows.
-        Default: tighten ``state[value_key]`` with the combiner — correct for
-        any monotone value-typed program."""
+        this partition's local layout, combiner-identity at padded rows, cast
+        to the program dtype by the engine before it reaches either backend
+        (host-side under ``run_sim``, inside the shard_map body under
+        ``run_shard_map``). Default: tighten ``state[value_key]`` with the
+        combiner — correct for any monotone value-typed program."""
         assert self.monotone and self.value_key, \
             "warm_init requires a monotone program with value_key set"
         assert self.combiner in ("min", "max"), \

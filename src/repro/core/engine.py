@@ -147,6 +147,52 @@ def _pack(program: VertexProgram, sg: DeviceSubgraph, out, last_out,
     return buf, changed
 
 
+def _warm_block(program: VertexProgram, pg: PartitionedGraph,
+                init_state) -> np.ndarray:
+    """Map a previous *global* converged result [n_vertices(, K)] into the
+    [P, v_max, K] per-partition local layout the backends feed to
+    ``program.warm_init`` — combiner identity at padded rows, cast to the
+    program dtype on entry (a float64 result array must not leak its dtype
+    into the superstep loop). Shorter arrays (the graph grew since the run)
+    are padded with the identity: new vertices start cold."""
+    K = program.payload
+    ident = program.identity
+    dt = np.dtype(program.dtype)
+    warm = np.asarray(init_state)
+    if warm.ndim == 1:
+        warm = warm[:, None]
+    warm = warm.astype(dt, copy=False)
+    if warm.shape[0] < pg.n_vertices:      # graph grew since the run
+        warm = np.concatenate(
+            [warm, np.full((pg.n_vertices - warm.shape[0], warm.shape[1]),
+                           ident, dtype=dt)])
+    wv = np.full((pg.n_parts, pg.v_max, K), ident, dtype=dt)
+    wv[pg.vmask] = warm[pg.gvid[pg.vmask]]
+    return wv
+
+
+def _exchange_bytes_per_step(cfg: EngineConfig, n_slots: int, K: int,
+                             dtype, n_parts: int, n_edge_shards: int) -> int:
+    """Collective bytes one superstep's SBS exchange moves — matching the
+    exchange variant the runner actually lowered, so sparse-vs-dense
+    benchmark comparisons measure real volume. Counts the inter-partition
+    (subgraph-axes) collective only: intra-partition edge-axis combines
+    (sweep reductions, the sharded merged-view rebuild) are excluded
+    everywhere, like the paper's network-message metric."""
+    itemsize = np.dtype(dtype).itemsize
+    if cfg.shard_slots and n_edge_shards > 1:
+        # each of the n_edge_shards slot slices is all-reduced over the
+        # subgraph axes: n_loc + 1 rows (incl. the dump row) per device,
+        # n_parts * n_edge_shards devices
+        n_loc = -(-(n_slots + 1) // n_edge_shards)
+        return (n_loc + 1) * K * itemsize * n_parts * n_edge_shards
+    if cfg.sparse_sync_capacity > 0:
+        # compacted all-gather: capacity (int32 idx, K-vector val) pairs
+        cap = min(cfg.sparse_sync_capacity, n_slots + 1)
+        return cap * (4 + K * itemsize) * n_parts
+    return (n_slots + 1) * K * itemsize * n_parts
+
+
 # --------------------------------------------------------------------------- #
 # Simulator backend
 # --------------------------------------------------------------------------- #
@@ -170,15 +216,7 @@ def run_sim(program: VertexProgram, pg: PartitionedGraph, params=None,
 
     v_init = jax.vmap(lambda sg: program.init(sg, params, ec))(sgs)
     if init_state is not None and program.monotone:
-        warm = np.asarray(init_state)
-        if warm.ndim == 1:
-            warm = warm[:, None]
-        if warm.shape[0] < pg.n_vertices:      # graph grew since the run
-            warm = np.concatenate(
-                [warm, np.full((pg.n_vertices - warm.shape[0], warm.shape[1]),
-                               ident, dtype=warm.dtype)])
-        wv = np.full((pg.n_parts, pg.v_max, K), ident, dtype=warm.dtype)
-        wv[pg.vmask] = warm[pg.gvid[pg.vmask]]
+        wv = _warm_block(program, pg, init_state)
         v_init = jax.vmap(
             lambda sg, st, w: program.warm_init(sg, params, st, w)
         )(sgs, v_init, jnp.asarray(wv))
@@ -271,12 +309,18 @@ def run_sim(program: VertexProgram, pg: PartitionedGraph, params=None,
 # --------------------------------------------------------------------------- #
 def make_bsp_runner(program: VertexProgram, mesh: Mesh,
                     cfg: EngineConfig, n_slots: int, *, params=None,
-                    has_vlabel=False):
+                    has_vlabel=False, warm_start=False):
     """Build the shard_map'd BSP loop (shared by run_shard_map and the
     graph-engine dry-run, which lowers it against ShapeDtypeStructs).
 
     ``params`` is the program's static parameter pytree, closed over at
-    trace time (EngineConfig is frozen and never carries it)."""
+    trace time (EngineConfig is frozen and never carries it).
+
+    ``warm_start=True`` builds the runner with a second input: a
+    [P, v_max, K] warm-state block sharded like the vertex tables, threaded
+    into ``program.warm_init`` right after on-device init — the incremental
+    recompute path (docs/STREAMING.md). The caller owns the soundness check
+    (monotone program, insert-only delta)."""
     sub_axes = tuple(cfg.subgraph_axes)
     edge_axes = tuple(cfg.edge_axes)
     K = program.payload
@@ -302,12 +346,12 @@ def make_bsp_runner(program: VertexProgram, mesh: Mesh,
     shard_slots = cfg.shard_slots and n_edge_shards > 1
     n_loc = -(-(n_slots + 1) // n_edge_shards) if shard_slots else n_slots + 1
 
-    @partial(shard_map, mesh=mesh,
-             in_specs=(sg_specs,),
-             out_specs=(vert_spec, P(), P(), P(sub_axes)))
-    def go(sg_block):
+    def _body(sg_block, warm_block):
         sg = DeviceSubgraph(*[_squeeze(x) for x in sg_block])
         state = program.init(sg, params, ec)
+        if warm_block is not None:
+            state = program.warm_init(sg, params, state,
+                                      _squeeze(warm_block))
         last0 = jnp.full((sg.v_max, K), ident, dtype=program.dtype)
         merged_v0 = jnp.full((sg.v_max, K), ident, dtype=program.dtype)
 
@@ -390,11 +434,30 @@ def make_bsp_runner(program: VertexProgram, mesh: Mesh,
         res = program.result(sg, params, state)
         return res[None], steps, tm, tsw[None]
 
+    out_specs = (vert_spec, P(), P(), P(sub_axes))
+    if warm_start:
+        @partial(shard_map, mesh=mesh,
+                 in_specs=(sg_specs, P(sub_axes, None, None)),
+                 out_specs=out_specs)
+        def go(sg_block, warm_block):
+            return _body(sg_block, warm_block)
+    else:
+        @partial(shard_map, mesh=mesh, in_specs=(sg_specs,),
+                 out_specs=out_specs)
+        def go(sg_block):
+            return _body(sg_block, None)
+
     return go
 
 
 def run_shard_map(program: VertexProgram, pg: PartitionedGraph, mesh: Mesh,
-                  params=None, cfg: EngineConfig = EngineConfig()):
+                  params=None, cfg: EngineConfig = EngineConfig(), *,
+                  init_state=None):
+    """``init_state``: global per-vertex values from a previous converged
+    run, injected on-device through ``program.warm_init`` (same semantics as
+    ``run_sim``: monotone programs only; non-monotone programs get an
+    explicit cold start — the runner is built without the warm input, so the
+    fallback is visible in the lowered program, never a silent drop)."""
     sub_axes = tuple(cfg.subgraph_axes)
     edge_axes = tuple(cfg.edge_axes)
     n_sub = int(np.prod([mesh.shape[a] for a in sub_axes]))
@@ -403,21 +466,26 @@ def run_shard_map(program: VertexProgram, pg: PartitionedGraph, mesh: Mesh,
     assert pg.e_max % n_edge == 0, "pad edges to a multiple of the edge axes"
 
     n_slots, K = pg.n_slots, program.payload
+    warm = init_state is not None and program.monotone
     go = make_bsp_runner(program, mesh, cfg, n_slots, params=params,
-                         has_vlabel=pg.vlabel is not None)
+                         has_vlabel=pg.vlabel is not None, warm_start=warm)
     sgs = _device_subgraph(pg)
 
     t0 = time.perf_counter()
     with mesh:
-        res, steps, tot_msgs, sweeps_per_part = go(sgs)
+        if warm:
+            wv = jnp.asarray(_warm_block(program, pg, init_state))
+            res, steps, tot_msgs, sweeps_per_part = go(sgs, wv)
+        else:
+            res, steps, tot_msgs, sweeps_per_part = go(sgs)
     res = np.asarray(res)
     sweeps_per_part = np.asarray(sweeps_per_part, dtype=np.int64)
     stats = ExecutionStats(
         supersteps=int(steps), total_messages=int(tot_msgs),
         processed_edges=int(
             (sweeps_per_part * pg.edges_per_part.astype(np.int64)).sum()),
-        total_bytes=int(steps) * (n_slots + 1) * K
-        * np.dtype(program.dtype).itemsize * pg.n_parts,
+        total_bytes=int(steps) * _exchange_bytes_per_step(
+            cfg, n_slots, K, program.dtype, pg.n_parts, n_edge),
         wall_time=time.perf_counter() - t0,
     )
     return res, stats
@@ -425,11 +493,17 @@ def run_shard_map(program: VertexProgram, pg: PartitionedGraph, mesh: Mesh,
 
 def run(program: VertexProgram, pg: PartitionedGraph, params=None,
         cfg: EngineConfig = EngineConfig(), mesh: Optional[Mesh] = None,
-        *, init_state=None):
+        *, init_state=None, resume_from=None):
     if cfg.backend == "sim":
-        return run_sim(program, pg, params, cfg, init_state=init_state)
-    assert mesh is not None, "shard_map backend needs a mesh"
-    # Warm start is a host-side state rewrite; the shard_map runner inits
-    # on-device, so incremental recompute currently runs on the simulator
-    # backend (cold start here keeps results correct either way).
-    return run_shard_map(program, pg, mesh, params, cfg)
+        return run_sim(program, pg, params, cfg, resume_from=resume_from,
+                       init_state=init_state)
+    if cfg.backend != "shard_map":
+        raise ValueError(f"unknown backend {cfg.backend!r}")
+    if mesh is None:
+        raise ValueError("shard_map backend needs a mesh")
+    if resume_from is not None:
+        raise NotImplementedError(
+            "checkpoint resume is a trace-mode feature of the simulator "
+            "backend; rerun with cfg.backend='sim' (and cfg.trace=True)")
+    return run_shard_map(program, pg, mesh, params, cfg,
+                         init_state=init_state)

@@ -41,13 +41,26 @@ from repro.core.partition import route_vertices_rh
 
 __all__ = ["PartitionedGraph", "build_partitioned_graph",
            "frontier_election", "assemble_partitioned_graph",
-           "partition_vertex_sets", "recompute_frontier"]
+           "partition_vertex_sets", "recompute_frontier",
+           "repack_partitions", "localize_edges"]
 
 
 def _pad_to(arr: np.ndarray, n: int, fill) -> np.ndarray:
     out = np.full((n,) + arr.shape[1:], fill, dtype=arr.dtype)
     out[: arr.shape[0]] = arr
     return out
+
+
+def localize_edges(lv: np.ndarray, gs: np.ndarray, gd: np.ndarray, w):
+    """Global-id edges -> local int32 indices against the sorted membership
+    ``lv``, stably sorted by destination (segment ops expect ascending dst).
+    Every writer of the dense edge arrays (assembly, delta patching,
+    compaction) must go through this so the layout invariant lives in one
+    place."""
+    ls = np.searchsorted(lv, gs).astype(np.int32)
+    ld = np.searchsorted(lv, gd).astype(np.int32)
+    eo = np.argsort(ld, kind="stable")
+    return ls[eo], ld[eo], np.asarray(w, dtype=np.float32)[eo]
 
 
 @dataclasses.dataclass
@@ -229,14 +242,11 @@ def assemble_partitioned_graph(
         in_deg[p, :nv] = g_in[lv]
 
         es, ed, w = load_edges(p)
-        ls = np.searchsorted(lv, es).astype(np.int32)
-        ld = np.searchsorted(lv, ed).astype(np.int32)
-        # sort local edges by destination (segment ops expect sorted ids)
-        eo = np.argsort(ld, kind="stable")
+        ls, ld, ww = localize_edges(lv, es, ed, w)
         ne = es.shape[0]
-        esrc[p, :ne] = ls[eo]
-        edst[p, :ne] = ld[eo]
-        ew[p, :ne] = np.asarray(w, dtype=np.float32)[eo]
+        esrc[p, :ne] = ls
+        edst[p, :ne] = ld
+        ew[p, :ne] = ww
         emask[p, :ne] = True
 
     return PartitionedGraph(
@@ -277,6 +287,91 @@ def build_partitioned_graph(g: Graph, edge_part: np.ndarray, n_parts: int,
         n_parts, g.n_vertices, g.n_edges, part_vertices, counts, load_edges,
         g.out_degrees(), g.in_degrees(), pad_multiple=pad_multiple,
         edge_part=edge_part)
+
+
+# --------------------------------------------------------------------------- #
+# In-place repack at fresh capacities (stream/delta.py compaction)
+# --------------------------------------------------------------------------- #
+def repack_partitions(pg: PartitionedGraph,
+                      part_vertices: Sequence[np.ndarray],
+                      part_edges: Sequence[tuple],
+                      *, pad_multiple: int = 8) -> np.ndarray:
+    """Rebuild ``pg``'s dense padded arrays in place from explicit
+    per-partition membership (sorted unique global ids) and edge lists
+    ``(src, dst, w)`` in global ids, re-deriving ``v_max``/``e_max`` from the
+    new content — capacities *shrink* when the content does, unlike the
+    grow-only delta path. Frontier slots and masters are re-elected from the
+    new membership; per-vertex tables (degrees, labels) are carried through
+    their global ids.
+
+    Returns ``remap``: ``[P, old_v_max]`` int32 mapping each old local row to
+    its new local row (-1 for evicted members and padding), so live
+    per-partition state survives the repack.
+    """
+    P = pg.n_parts
+    old_v_max = pg.v_max
+
+    def _round(n):
+        return int(-(-max(n, 1) // pad_multiple) * pad_multiple)
+
+    new_v_max = _round(max((lv.shape[0] for lv in part_vertices), default=1))
+    new_e_max = _round(max((e[0].shape[0] for e in part_edges), default=1))
+
+    # global per-vertex tables, read from the old replicas (all agree)
+    sel = pg.vmask
+    g_out = np.zeros(pg.n_vertices, np.float32)
+    g_in = np.zeros(pg.n_vertices, np.float32)
+    g_out[pg.gvid[sel]] = pg.out_deg[sel]
+    g_in[pg.gvid[sel]] = pg.in_deg[sel]
+    g_lab = None
+    if pg.vlabel is not None:
+        g_lab = np.zeros(pg.n_vertices, np.int32)
+        g_lab[pg.gvid[sel]] = pg.vlabel[sel]
+
+    remap = np.full((P, old_v_max), -1, np.int32)
+    gvid = np.full((P, new_v_max), -1, np.int64)
+    vmask = np.zeros((P, new_v_max), bool)
+    out_deg = np.zeros((P, new_v_max), np.float32)
+    in_deg = np.zeros((P, new_v_max), np.float32)
+    vlabel = np.zeros((P, new_v_max), np.int32) if g_lab is not None else None
+    esrc = np.zeros((P, new_e_max), np.int32)
+    edst = np.zeros((P, new_e_max), np.int32)
+    ew = np.zeros((P, new_e_max), np.float32)
+    emask = np.zeros((P, new_e_max), bool)
+
+    for p in range(P):
+        lv = np.asarray(part_vertices[p], np.int64)
+        nv = lv.shape[0]
+        gvid[p, :nv] = lv
+        vmask[p, :nv] = True
+        out_deg[p, :nv] = g_out[lv]
+        in_deg[p, :nv] = g_in[lv]
+        if vlabel is not None:
+            vlabel[p, :nv] = g_lab[lv]
+
+        old_lv = pg.gvid[p][pg.vmask[p]]
+        pos = np.searchsorted(lv, old_lv)
+        kept = np.zeros(old_lv.shape[0], bool)
+        in_range = pos < nv
+        kept[in_range] = lv[pos[in_range]] == old_lv[in_range]
+        remap[p, :old_lv.shape[0]] = np.where(kept, pos, -1).astype(np.int32)
+
+        gs, gd, w = part_edges[p]
+        ne = gs.shape[0]
+        ls, ld, ww = localize_edges(lv, gs, gd, w)
+        esrc[p, :ne] = ls
+        edst[p, :ne] = ld
+        ew[p, :ne] = ww
+        emask[p, :ne] = True
+
+    pg.gvid, pg.vmask = gvid, vmask
+    pg.out_deg, pg.in_deg, pg.vlabel = out_deg, in_deg, vlabel
+    pg.esrc, pg.edst, pg.ew, pg.emask = esrc, edst, ew, emask
+    pg.v_max, pg.e_max = new_v_max, new_e_max
+    pg.n_edges = int(emask.sum())
+    pg.edge_part = None
+    recompute_frontier(pg)
+    return remap
 
 
 # --------------------------------------------------------------------------- #

@@ -1,11 +1,16 @@
 """Streaming graph subsystem: out-of-core ingestion, incremental partition
-patching, warm-start recompute (see docs/STREAMING.md).
+patching, delta batching, membership compaction, warm-start recompute (see
+docs/STREAMING.md).
 
   - edgelog:  chunked on-disk edge log (reader/writer, spill shards)
   - ingest:   two-pass streaming pipeline -> PartitionedGraph + StreamContext
-  - delta:    edge insert/delete batches patched through the frozen hashes
+  - delta:    edge insert/delete batches patched through the frozen hashes,
+              plus membership compaction after delete-heavy traffic
+  - buffer:   coalescing DeltaBuffer for continuous producer traffic
 """
-from repro.stream.delta import DeltaStats, EdgeDelta, apply_delta
+from repro.stream.buffer import BufferStats, DeltaBuffer
+from repro.stream.delta import (CompactStats, DeltaStats, EdgeDelta,
+                                apply_delta, compact)
 from repro.stream.edgelog import (EdgeLogMeta, EdgeLogReader, EdgeLogWriter,
                                   write_edge_log)
 from repro.stream.ingest import (ChunkAccountant, IngestStats, StreamContext,
@@ -14,5 +19,6 @@ from repro.stream.ingest import (ChunkAccountant, IngestStats, StreamContext,
 __all__ = [
     "EdgeLogMeta", "EdgeLogReader", "EdgeLogWriter", "write_edge_log",
     "ChunkAccountant", "IngestStats", "StreamContext", "streaming_ingest",
-    "EdgeDelta", "DeltaStats", "apply_delta",
+    "EdgeDelta", "DeltaStats", "apply_delta", "CompactStats", "compact",
+    "BufferStats", "DeltaBuffer",
 ]

@@ -16,7 +16,12 @@ Membership is grow-only between compactions: a vertex whose last local edge
 was deleted stays a (edge-less) member of its partition. That is harmless —
 it contributes nothing to sweeps and only its own initial value to SBS — and
 keeps deletion O(partition). ``n_vertices`` grows automatically when a delta
-references ids beyond the current space.
+references ids beyond the current space. After delete-heavy traffic the
+zombie members (and the grown ``e_max``/``v_max`` padding) inflate every
+device buffer; ``compact`` evicts edge-less members, re-homes fully isolated
+vertices by the same hash round-robin as ingest, and shrinks the padded
+capacities back down — returning a remap so live per-partition state
+survives.
 
 Warm-start pairing: after ``apply_delta``, monotone programs (SSSP/MSSP/CC)
 can restart from the previous converged result via ``run_sim(...,
@@ -32,10 +37,13 @@ from typing import Optional
 
 import numpy as np
 
-from repro.core.subgraph import PartitionedGraph, recompute_frontier
+from repro.core.partition import route_vertices_rh
+from repro.core.subgraph import (PartitionedGraph, localize_edges,
+                                 recompute_frontier, repack_partitions)
 from repro.stream.ingest import StreamContext
 
-__all__ = ["EdgeDelta", "DeltaStats", "apply_delta"]
+__all__ = ["EdgeDelta", "DeltaStats", "apply_delta",
+           "CompactStats", "compact"]
 
 
 @dataclasses.dataclass
@@ -113,6 +121,14 @@ def apply_delta(pg: PartitionedGraph, ctx: StreamContext, delta: EdgeDelta,
 
     Deletions remove *every* resident copy of a (src, dst) pair in the
     partition the pair routes to; pairs that are not resident are ignored.
+
+    Batch semantics: **deletes apply to the pre-delta graph, then adds are
+    appended** — a pair appearing in both lists of one ``EdgeDelta`` has its
+    pre-existing resident copies removed and exactly the new copies
+    inserted (i.e. it nets to an insert, never to a cancel). Producer-order
+    coalescing — "I added this pair a moment ago, now forget it" — is the
+    ``DeltaBuffer``'s job (stream/buffer.py), which resolves op order
+    *before* anything reaches this function.
     """
     stats = DeltaStats(n_slots_before=pg.n_slots,
                        warm_start_safe=delta.n_dels == 0)
@@ -201,16 +217,14 @@ def apply_delta(pg: PartitionedGraph, ctx: StreamContext, delta: EdgeDelta,
         pg.gvid[p, :nv] = lv
         pg.vmask[p] = False
         pg.vmask[p, :nv] = True
-        ls = np.searchsorted(lv, gs).astype(np.int32)
-        ld = np.searchsorted(lv, gd).astype(np.int32)
-        eo = np.argsort(ld, kind="stable")
+        ls, ld, ww = localize_edges(lv, gs, gd, w)
         pg.esrc[p] = 0
         pg.edst[p] = 0
         pg.ew[p] = 0.0
         pg.emask[p] = False
-        pg.esrc[p, :ne] = ls[eo]
-        pg.edst[p, :ne] = ld[eo]
-        pg.ew[p, :ne] = w[eo]
+        pg.esrc[p, :ne] = ls
+        pg.edst[p, :ne] = ld
+        pg.ew[p, :ne] = ww
         pg.emask[p, :ne] = True
     stats.parts_patched = len(staged)
     pg.n_edges += stats.n_added - stats.n_deleted
@@ -226,5 +240,94 @@ def apply_delta(pg: PartitionedGraph, ctx: StreamContext, delta: EdgeDelta,
 
     # ---- frontier-slot + master maintenance ------------------------------ #
     recompute_frontier(pg)
+    stats.n_slots_after = pg.n_slots
+    return stats
+
+
+# --------------------------------------------------------------------------- #
+# Membership compaction after delete-heavy traffic
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass
+class CompactStats:
+    """What ``compact`` did, plus the state-carrying remap."""
+
+    n_evicted: int = 0               # replica rows removed
+    v_max_before: int = 0
+    v_max_after: int = 0
+    e_max_before: int = 0
+    e_max_after: int = 0
+    n_slots_before: int = 0
+    n_slots_after: int = 0
+    remap: Optional[np.ndarray] = None   # [P, v_max_before] int32, -1 evicted
+
+    @property
+    def shrunk(self) -> bool:
+        return (self.v_max_after < self.v_max_before
+                or self.e_max_after < self.e_max_before)
+
+    def remap_state(self, state: np.ndarray, fill) -> np.ndarray:
+        """Carry a live ``[P, v_max_before(, K)]`` per-partition array across
+        the compaction: surviving rows move to their new local index, evicted
+        and padded rows get ``fill`` (use the program's combiner identity for
+        warm-state blocks)."""
+        state = np.asarray(state)
+        P, old_v = self.remap.shape
+        assert state.shape[:2] == (P, old_v), (state.shape, self.remap.shape)
+        out = np.full((P, self.v_max_after) + state.shape[2:], fill,
+                      dtype=state.dtype)
+        ip, iold = np.nonzero(self.remap >= 0)
+        out[ip, self.remap[ip, iold]] = state[ip, iold]
+        return out
+
+
+def compact(pg: PartitionedGraph, ctx: StreamContext,
+            *, pad_multiple: int = 8) -> CompactStats:
+    """Evict edge-less members and shrink the padded capacities in place.
+
+    Membership after compaction is exactly what a from-scratch re-ingest of
+    the resident edges would produce: each partition keeps the endpoints of
+    its resident edges, and vertices with no resident edge *anywhere* are
+    re-homed by the same hash round-robin ingest uses for isolated vertices
+    (so every global id stays collectable from a master replica). Resident
+    edges never move — placement is frozen in ``ctx`` — so slots and masters
+    are re-elected (``n_slots`` shrinks with the evicted frontier rows) but
+    the graph itself is unchanged: a previous converged result remains a
+    valid warm start after ``compact``.
+
+    Returns ``CompactStats``; ``stats.remap_state`` carries live
+    ``[P, v_max, K]`` device-layout state into the compacted layout. Global
+    ``[n_vertices]`` results (``pg.collect``) are untouched by compaction.
+    """
+    assert ctx.n_parts == pg.n_parts, (ctx.n_parts, pg.n_parts)
+    P = pg.n_parts
+    stats = CompactStats(v_max_before=pg.v_max, e_max_before=pg.e_max,
+                         n_slots_before=pg.n_slots)
+    members_before = int(pg.vmask.sum())
+
+    part_edges = []
+    members = []
+    touched = np.zeros(pg.n_vertices, bool)
+    for p in range(P):
+        m = pg.emask[p]
+        gs = pg.gvid[p][pg.esrc[p][m]]
+        gd = pg.gvid[p][pg.edst[p][m]]
+        part_edges.append((gs, gd, pg.ew[p][m]))
+        lv = np.unique(np.concatenate([gs, gd]))
+        members.append(lv)
+        touched[lv] = True
+
+    iso = np.nonzero(~touched)[0].astype(np.int64)
+    if iso.size:
+        iso_part = route_vertices_rh(iso, P)
+        for p in range(P):
+            mine = iso[iso_part == p]
+            if mine.size:
+                members[p] = np.unique(np.concatenate([members[p], mine]))
+
+    stats.remap = repack_partitions(pg, members, part_edges,
+                                    pad_multiple=pad_multiple)
+    stats.n_evicted = members_before - int(pg.vmask.sum())
+    stats.v_max_after = pg.v_max
+    stats.e_max_after = pg.e_max
     stats.n_slots_after = pg.n_slots
     return stats

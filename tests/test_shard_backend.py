@@ -76,6 +76,76 @@ cfg8 = EngineConfig(mode="sc", backend="shard_map", subgraph_axes=("sub",))
 r5, _ = run_shard_map(cc, pg8, mesh2, None, cfg8)
 r6, _ = run_sim(cc, pg8, None, cfg_sim)
 assert (r5 == r6).all(), "8-way mismatch"
+
+# ---- device-side warm start after an insert-only delta -------------------- #
+import tempfile
+from repro.core import run
+from repro.stream import EdgeDelta, apply_delta, compact, streaming_ingest, \
+    write_edge_log
+gw = powerlaw_graph(400, seed=7, weighted=True).as_undirected()
+logd = tempfile.mkdtemp(prefix="drone_shard_log_")
+write_edge_log(gw, logd, chunk_size=4096)
+pgw, ctx, _ = streaming_ingest(logd, 4, "cdbh")
+sssp = SSSP()
+r0, _ = run_sim(sssp, pgw, {"source": 0}, cfg_sim)
+prev = pgw.collect(r0, fill=np.float32(np.inf))
+rng = np.random.default_rng(8)
+n_add = max(gw.n_edges // 100, 16)
+s = rng.integers(0, pgw.n_vertices, n_add)
+d = rng.integers(0, pgw.n_vertices, n_add)
+keep = s != d
+s, d = s[keep], d[keep]
+w = rng.uniform(5, 10, s.size).astype(np.float32)
+st = apply_delta(pgw, ctx, EdgeDelta(add_src=np.concatenate([s, d]),
+                                     add_dst=np.concatenate([d, s]),
+                                     add_w=np.concatenate([w, w])))
+assert st.warm_start_safe
+cold, st_c = run_shard_map(sssp, pgw, mesh, {"source": 0}, cfg_shard)
+warm, st_w = run_shard_map(sssp, pgw, mesh, {"source": 0}, cfg_shard,
+                           init_state=prev)
+assert (np.asarray(cold) == np.asarray(warm)).all(), "warm != cold bit-for-bit"
+assert st_w.supersteps < st_c.supersteps, (st_w.supersteps, st_c.supersteps)
+sim_warm, sim_sw = run_sim(sssp, pgw, {"source": 0}, cfg_sim, init_state=prev)
+assert (np.asarray(warm) == np.asarray(sim_warm)).all(), "shard warm != sim warm"
+assert st_w.supersteps == sim_sw.supersteps, "warm superstep parity"
+# run() routes init_state to the shard_map backend and rejects resume_from
+r_run, st_run = run(sssp, pgw, {"source": 0}, cfg_shard, mesh=mesh,
+                    init_state=prev)
+assert (np.asarray(r_run) == np.asarray(warm)).all()
+assert st_run.supersteps == st_w.supersteps
+try:
+    run(sssp, pgw, {"source": 0}, cfg_shard, mesh=mesh, resume_from="x")
+    raise SystemExit("resume_from on shard_map must raise")
+except NotImplementedError:
+    pass
+
+# shard_map on a compacted graph == sim (n_slots shrank under the runner)
+dels = EdgeDelta(del_src=np.concatenate([gw.src[::2], gw.dst[::2]]),
+                 del_dst=np.concatenate([gw.dst[::2], gw.src[::2]]))
+apply_delta(pgw, ctx, dels)
+cs = compact(pgw, ctx)
+assert cs.shrunk and pgw.n_slots < cs.n_slots_before
+rs, _ = run_shard_map(sssp, pgw, mesh, {"source": 0}, cfg_shard)
+rss, _ = run_sim(sssp, pgw, {"source": 0}, cfg_sim)
+assert (np.asarray(rs) == np.asarray(rss)).all(), "compacted shard != sim"
+
+# ---- total_bytes matches the exchange actually used ----------------------- #
+ns = pg.n_slots
+itm = np.dtype(np.float32).itemsize
+r_d, s_d = run_shard_map(cc, pg, mesh, None, cfg_shard)
+assert s_d.total_bytes == s_d.supersteps * (ns + 1) * itm * 4, "dense bytes"
+cap = max(ns // 4, 1)
+cfg_sp = EngineConfig(mode="sc", backend="shard_map",
+                      subgraph_axes=("pod", "data"), edge_axes=("model",),
+                      sparse_sync_capacity=cap)
+r_sp, s_sp = run_shard_map(cc, pg, mesh, None, cfg_sp)
+assert (np.asarray(r_sp) == np.asarray(r_d)).all()
+assert s_sp.total_bytes == s_sp.supersteps * cap * (4 + itm) * 4, "sparse bytes"
+assert s_sp.total_bytes < s_d.total_bytes, "sparse SBS must bill fewer bytes"
+n_loc = -(-(ns + 1) // 2)
+r_ss, s_ss = run_shard_map(cc, pg, mesh, None, cfg_ss)
+assert s_ss.total_bytes == s_ss.supersteps * (n_loc + 1) * itm * 4 * 2, \
+    "sharded bytes"
 print("SHARD_BACKEND_OK")
 """
 

@@ -1,15 +1,17 @@
 """Streaming subsystem: edge-log IO, two-pass out-of-core ingest parity with
 the in-memory path (bit-identical per partition), chunk-bounded memory
-accounting, incremental delta patching, and warm-start recompute."""
+accounting, incremental delta patching, delta batching, membership
+compaction, and warm-start recompute."""
 import numpy as np
 import pytest
 
 from repro.algos import ConnectedComponents, PageRank, SSSP
-from repro.core import EngineConfig, partition_and_build, run_sim
+from repro.core import EngineConfig, partition_and_build, run, run_sim
 from repro.core.graph import Graph
 from repro.graphgen import powerlaw_graph
-from repro.stream import (EdgeDelta, EdgeLogReader, EdgeLogWriter,
-                          apply_delta, streaming_ingest, write_edge_log)
+from repro.stream import (DeltaBuffer, EdgeDelta, EdgeLogReader,
+                          EdgeLogWriter, apply_delta, compact,
+                          streaming_ingest, write_edge_log)
 from repro.stream.edgelog import BYTES_PER_EDGE
 
 PARITY_ARRAYS = ("gvid", "vmask", "esrc", "edst", "ew", "emask", "slot",
@@ -295,3 +297,358 @@ def test_warm_start_nonmonotone_falls_back_cold():
     r2, _ = run_sim(pr, pg, {"n_vertices": g.n_vertices}, cfg,
                     init_state=np.full(g.n_vertices, 123.0, np.float32))
     np.testing.assert_array_equal(r1, r2)
+
+
+def test_warm_start_init_state_dtype_cast():
+    """A float64 (or int64) previous-result array must not leak its dtype
+    into the warm block (regression: wv inherited warm.dtype)."""
+    g = powerlaw_graph(1000, seed=2, weighted=True).as_undirected()
+    pg = partition_and_build(g, 4, "cdbh")
+    res0, _ = run_sim(SSSP(), pg, {"source": 0}, EngineConfig())
+    prev = pg.collect(res0, fill=np.float32(np.inf))
+    w32, s32 = run_sim(SSSP(), pg, {"source": 0}, EngineConfig(),
+                       init_state=prev)
+    w64, s64 = run_sim(SSSP(), pg, {"source": 0}, EngineConfig(),
+                       init_state=prev.astype(np.float64))
+    np.testing.assert_array_equal(np.asarray(w32), np.asarray(w64))
+    assert s64.supersteps == s32.supersteps
+    assert np.asarray(w64).dtype == np.float32
+
+    cc0, _ = run_sim(ConnectedComponents(), pg, None, EngineConfig())
+    lab = pg.collect(cc0, fill=np.iinfo(np.int32).max)
+    c32, _ = run_sim(ConnectedComponents(), pg, None, EngineConfig(),
+                     init_state=lab)
+    c64, _ = run_sim(ConnectedComponents(), pg, None, EngineConfig(),
+                     init_state=lab.astype(np.int64))
+    np.testing.assert_array_equal(np.asarray(c32), np.asarray(c64))
+
+
+def test_run_forwards_and_validates():
+    """run() forwards init_state on the sim backend and refuses unsupported
+    backend/mesh combinations instead of silently cold-starting."""
+    g = powerlaw_graph(500, seed=14, weighted=True).as_undirected()
+    pg = partition_and_build(g, 4, "cdbh")
+    res0, _ = run_sim(SSSP(), pg, {"source": 0}, EngineConfig())
+    prev = pg.collect(res0, fill=np.float32(np.inf))
+    r_direct, s_direct = run_sim(SSSP(), pg, {"source": 0}, EngineConfig(),
+                                 init_state=prev)
+    r_run, s_run = run(SSSP(), pg, {"source": 0}, EngineConfig(),
+                       init_state=prev)
+    np.testing.assert_array_equal(np.asarray(r_direct), np.asarray(r_run))
+    assert s_run.supersteps == s_direct.supersteps
+    with pytest.raises(ValueError):
+        run(SSSP(), pg, {"source": 0}, EngineConfig(backend="shard_map"))
+    with pytest.raises(ValueError):
+        run(SSSP(), pg, {"source": 0}, EngineConfig(backend="nope"))
+
+
+# --------------------------------------------------------------------------- #
+# same-batch add+delete semantics (deletes apply to the pre-delta graph)
+# --------------------------------------------------------------------------- #
+def test_apply_delta_same_batch_add_delete_nets_insert(tmp_path):
+    """A pair in both lists of one EdgeDelta: pre-delta resident copies are
+    deleted, the new copy is inserted. In-buffer producer-order cancellation
+    is the DeltaBuffer's job, not apply_delta's."""
+    g = powerlaw_graph(400, seed=15, weighted=True)
+    d = str(tmp_path / "log")
+    write_edge_log(g, d, chunk_size=1024)
+    pg, ctx, _ = streaming_ingest(d, 4, "cdbh")
+    n0 = pg.n_edges
+
+    # fresh pair (src is a brand-new id, so the pair cannot be resident):
+    # the delete leg is a no-op, the add leg inserts
+    pair = (np.array([g.n_vertices], np.int64),
+            np.array([0], np.int64))
+    st = apply_delta(pg, ctx, EdgeDelta(
+        add_src=pair[0], add_dst=pair[1],
+        add_w=np.array([2.5], np.float32),
+        del_src=pair[0], del_dst=pair[1]))
+    assert st.n_added == 1 and st.n_deleted == 0
+    assert pg.n_edges == n0 + 1
+    assert not st.warm_start_safe   # the batch carried a delete
+
+    # resident pair: old copy removed, new copy (new weight) inserted
+    st2 = apply_delta(pg, ctx, EdgeDelta(
+        add_src=pair[0], add_dst=pair[1],
+        add_w=np.array([9.0], np.float32),
+        del_src=pair[0], del_dst=pair[1]))
+    assert st2.n_added == 1 and st2.n_deleted == 1
+    assert pg.n_edges == n0 + 1
+    ms = _edge_multiset(pg)
+    row = ms[(ms[:, 0] == pair[0][0]) & (ms[:, 1] == pair[1][0])]
+    assert row.shape[0] == 1 and row[0, 2] == 9.0
+
+
+# --------------------------------------------------------------------------- #
+# delta batching (DeltaBuffer)
+# --------------------------------------------------------------------------- #
+def test_delta_buffer_matches_sequential_applies(tmp_path):
+    """A random producer op stream through the buffer produces the same
+    resident edge multiset as one apply_delta per op (ops never duplicate a
+    live add, so the merge coarsening is not exercised here)."""
+    g = powerlaw_graph(800, seed=3, weighted=True).as_undirected()
+    d = str(tmp_path / "log")
+    write_edge_log(g, d, chunk_size=2048)
+    pg_buf, ctx_buf, _ = streaming_ingest(d, 4, "cdbh")
+    pg_seq, ctx_seq, _ = streaming_ingest(d, 4, "cdbh")
+
+    rng = np.random.default_rng(1)
+    buf = DeltaBuffer(pg_buf, ctx_buf, max_edges=64)
+    live = set()
+    for _ in range(500):
+        s = int(rng.integers(0, g.n_vertices))
+        t = int(rng.integers(0, g.n_vertices))
+        if s == t:
+            continue
+        if rng.random() < 0.5 and (s, t) not in live:
+            w = np.float32(rng.uniform(1, 2))
+            buf.add(s, t, w)
+            apply_delta(pg_seq, ctx_seq, EdgeDelta(
+                add_src=[s], add_dst=[t], add_w=np.array([w], np.float32)))
+            live.add((s, t))
+        else:
+            buf.delete(s, t)
+            apply_delta(pg_seq, ctx_seq, EdgeDelta(del_src=[s], del_dst=[t]))
+            live.discard((s, t))
+    buf.flush()
+    assert buf.stats.n_flushes > 1 and buf.stats.auto_flushes >= 1
+    assert pg_buf.n_edges == pg_seq.n_edges
+    np.testing.assert_array_equal(_edge_multiset(pg_buf),
+                                  _edge_multiset(pg_seq))
+
+    r1, _ = run_sim(ConnectedComponents(), pg_buf, None, EngineConfig())
+    r2, _ = run_sim(ConnectedComponents(), pg_seq, None, EngineConfig())
+    np.testing.assert_array_equal(pg_buf.collect(r1, fill=-1),
+                                  pg_seq.collect(r2, fill=-1))
+
+
+def test_delta_buffer_coalescing_rules(tmp_path):
+    g = powerlaw_graph(300, seed=16, weighted=True)
+    d = str(tmp_path / "log")
+    write_edge_log(g, d, chunk_size=1024)
+    pg, ctx, _ = streaming_ingest(d, 4, "cdbh")
+    n0 = pg.n_edges
+
+    buf = DeltaBuffer(pg, ctx, max_edges=None)   # manual flush only
+    nv = g.n_vertices
+    # add then delete of a brand-new pair cancels in-buffer
+    buf.add(nv, nv + 1)
+    buf.delete(nv, nv + 1)
+    # duplicate adds merge to one copy, last weight wins
+    buf.add(0, 1, 5.0)
+    buf.add(0, 1, 7.5)
+    # delete then add = replace (flushed as delete + insert)
+    buf.delete(1, 2)
+    buf.add(1, 2, 3.0)
+    assert buf.pending_edges == 3
+    st = buf.flush()
+    assert buf.stats.adds_cancelled == 1
+    assert buf.stats.adds_merged == 1
+    assert st.n_added == 2                      # (0,1) and (1,2)
+    assert pg.n_edges == n0 + 2 - st.n_deleted
+    ms = _edge_multiset(pg)
+    row01 = ms[(ms[:, 0] == 0) & (ms[:, 1] == 1) & (ms[:, 2] == 7.5)]
+    assert row01.shape[0] == 1
+    assert len(buf) == 0 and buf.flush() is None
+
+
+def test_delta_buffer_new_ids_with_part_threshold(tmp_path):
+    """Routing for the max_parts trigger must grow the id space first, like
+    apply_delta does at flush (regression: IndexError on brand-new ids)."""
+    g = powerlaw_graph(300, seed=24)
+    d = str(tmp_path / "log")
+    write_edge_log(g, d, chunk_size=1024)
+    pg, ctx, _ = streaming_ingest(d, 4, "cdbh")
+    buf = DeltaBuffer(pg, ctx, max_edges=None, max_parts=3)
+    buf.add(g.n_vertices, 0)            # brand-new src id
+    buf.add(g.n_vertices + 5, g.n_vertices + 6)   # both endpoints new
+    buf.flush()
+    assert pg.n_vertices == g.n_vertices + 7
+    assert ctx.n_vertices == pg.n_vertices
+
+
+def test_delta_buffer_part_threshold(tmp_path):
+    g = powerlaw_graph(600, seed=17)
+    d = str(tmp_path / "log")
+    write_edge_log(g, d, chunk_size=1024)
+    pg, ctx, _ = streaming_ingest(d, 6, "cdbh")
+    buf = DeltaBuffer(pg, ctx, max_edges=None, max_parts=2)
+    rng = np.random.default_rng(2)
+    for _ in range(50):
+        s = int(rng.integers(0, g.n_vertices))
+        t = int(rng.integers(0, g.n_vertices))
+        if s != t:
+            buf.add(s, t)
+        assert buf.pending_parts < 2 or buf.pending_edges == 0
+    buf.flush()
+    assert buf.stats.auto_flushes >= 1
+
+
+# --------------------------------------------------------------------------- #
+# membership compaction (acceptance criterion)
+# --------------------------------------------------------------------------- #
+def _delete_fraction(g, pg, ctx, frac, seed):
+    rng = np.random.default_rng(seed)
+    sel = rng.choice(g.n_edges, size=int(g.n_edges * frac / 2),
+                     replace=False)
+    ds = np.concatenate([g.src[sel], g.dst[sel]])
+    dd = np.concatenate([g.dst[sel], g.src[sel]])
+    apply_delta(pg, ctx, EdgeDelta(del_src=ds, del_dst=dd))
+    kept = np.ones(g.n_edges, bool)
+    key = g.src * np.int64(g.n_vertices) + g.dst
+    kept[np.isin(key, ds * np.int64(g.n_vertices) + dd)] = False
+    return Graph(g.n_vertices, g.src[kept], g.dst[kept], g.weights[kept])
+
+
+def test_compact_shrinks_and_matches_reingest(tmp_path):
+    """Delete-heavy delta -> compact shrinks v_max/e_max/n_slots versus the
+    grow-only graph; a subsequent run matches a from-scratch re-ingest."""
+    g = powerlaw_graph(1500, seed=6, weighted=True).as_undirected()
+    d = str(tmp_path / "log")
+    write_edge_log(g, d, chunk_size=2048)
+    pg, ctx, _ = streaming_ingest(d, 5, "cdbh")
+    g2 = _delete_fraction(g, pg, ctx, 0.7, seed=7)
+
+    v_grow, e_grow, s_grow = pg.v_max, pg.e_max, pg.n_slots
+    st = compact(pg, ctx)
+    assert st.shrunk
+    assert pg.v_max < v_grow and pg.e_max < e_grow and pg.n_slots < s_grow
+    assert st.n_evicted > 0
+    assert pg.n_edges == g2.n_edges
+    # every global id is still resident exactly where collect needs it
+    assert int((pg.vmask & pg.is_master).sum()) == pg.n_vertices
+
+    # from-scratch re-ingest of the surviving edges
+    d2 = str(tmp_path / "log2")
+    write_edge_log(g2, d2, chunk_size=2048)
+    pg2, _, _ = streaming_ingest(d2, 5, "cdbh")
+
+    r1, _ = run_sim(ConnectedComponents(), pg, None, EngineConfig())
+    r2, _ = run_sim(ConnectedComponents(), pg2, None, EngineConfig())
+    np.testing.assert_array_equal(pg.collect(r1, fill=-1),
+                                  pg2.collect(r2, fill=-1))
+    r3, _ = run_sim(SSSP(), pg, {"source": 3}, EngineConfig())
+    r4, _ = run_sim(SSSP(), pg2, {"source": 3}, EngineConfig())
+    np.testing.assert_allclose(pg.collect(r3, fill=np.float32(np.inf)),
+                               pg2.collect(r4, fill=np.float32(np.inf)),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_compact_then_delta_roundtrip(tmp_path):
+    """compact -> delta -> run equals re-ingesting the final edge set from
+    scratch: compaction does not break the frozen routing contract."""
+    g = powerlaw_graph(1000, seed=18, weighted=True).as_undirected()
+    d = str(tmp_path / "log")
+    write_edge_log(g, d, chunk_size=2048)
+    pg, ctx, _ = streaming_ingest(d, 5, "cdbh")
+    g2 = _delete_fraction(g, pg, ctx, 0.6, seed=19)
+    compact(pg, ctx)
+
+    rng = np.random.default_rng(20)
+    n_add = 300
+    s = rng.integers(0, g.n_vertices, n_add).astype(np.int64)
+    t = rng.integers(0, g.n_vertices, n_add).astype(np.int64)
+    keep = s != t
+    s, t = s[keep], t[keep]
+    w = rng.uniform(1, 3, s.size).astype(np.float32)
+    st = apply_delta(pg, ctx, EdgeDelta(
+        add_src=np.concatenate([s, t]), add_dst=np.concatenate([t, s]),
+        add_w=np.concatenate([w, w])))
+    assert st.n_added == 2 * s.size
+
+    g3 = Graph(g.n_vertices,
+               np.concatenate([g2.src, s, t]), np.concatenate([g2.dst, t, s]),
+               np.concatenate([g2.weights, w, w]))
+    d3 = str(tmp_path / "log3")
+    write_edge_log(g3, d3, chunk_size=2048)
+    pg3, _, _ = streaming_ingest(d3, 5, "cdbh")
+    assert pg.n_edges == pg3.n_edges
+
+    r1, _ = run_sim(SSSP(), pg, {"source": 0}, EngineConfig())
+    r2, _ = run_sim(SSSP(), pg3, {"source": 0}, EngineConfig())
+    np.testing.assert_allclose(pg.collect(r1, fill=np.float32(np.inf)),
+                               pg3.collect(r2, fill=np.float32(np.inf)),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_compact_remap_carries_state(tmp_path):
+    """The remap moves live per-partition rows to their compacted slots, and
+    a previous converged global result stays a valid warm start (compaction
+    changes layout, never the graph)."""
+    g = powerlaw_graph(1200, seed=21, weighted=True).as_undirected()
+    d = str(tmp_path / "log")
+    write_edge_log(g, d, chunk_size=2048)
+    pg, ctx, _ = streaming_ingest(d, 5, "cdbh")
+    _delete_fraction(g, pg, ctx, 0.6, seed=22)
+
+    # distances converged on the post-delete graph (cold; deletes loosen)
+    res, st_cold = run_sim(SSSP(), pg, {"source": 0}, EngineConfig())
+    prev = pg.collect(res, fill=np.float32(np.inf))
+
+    carried = np.where(pg.vmask, pg.gvid, -1).astype(np.int64)[..., None]
+    st = compact(pg, ctx)
+    out = st.remap_state(carried, fill=-1)
+    assert out.shape == (pg.n_parts, pg.v_max, 1)
+    kept = out[..., 0] >= 0
+    np.testing.assert_array_equal(out[..., 0][kept], pg.gvid[kept])
+    # every vertex with a resident edge was carried (only zombies/iso move)
+    has_edge = np.zeros_like(pg.vmask)
+    for p in range(pg.n_parts):
+        m = pg.emask[p]
+        has_edge[p][pg.esrc[p][m]] = True
+        has_edge[p][pg.edst[p][m]] = True
+    assert kept[has_edge].all()
+
+    warm, st_warm = run_sim(SSSP(), pg, {"source": 0}, EngineConfig(),
+                            init_state=prev)
+    np.testing.assert_array_equal(
+        pg.collect(warm, fill=np.float32(np.inf)), prev)
+    assert st_warm.supersteps <= 2
+
+
+def test_recompute_frontier_after_emptying_partition(tmp_path):
+    """Deleting every edge of one partition leaves edge-less zombie members;
+    frontier re-election and a subsequent run stay consistent, and compact
+    then evicts the zombies."""
+    g = powerlaw_graph(900, seed=23, weighted=True).as_undirected()
+    d = str(tmp_path / "log")
+    write_edge_log(g, d, chunk_size=2048)
+    pg, ctx, _ = streaming_ingest(d, 5, "cdbh")
+
+    victim = int(np.argmax(pg.edges_per_part))
+    m = pg.emask[victim]
+    ds = pg.gvid[victim][pg.esrc[victim][m]]
+    dd = pg.gvid[victim][pg.edst[victim][m]]
+    # drop the reverse copies too: the undirected pairs live elsewhere
+    st = apply_delta(pg, ctx, EdgeDelta(
+        del_src=np.concatenate([ds, dd]), del_dst=np.concatenate([dd, ds])))
+    assert st.n_deleted >= ds.shape[0]
+    assert pg.edges_per_part[victim] == 0
+    # zombie members survive the delete (grow-only membership)...
+    assert pg.vertices_per_part[victim] > 0
+
+    kept = np.ones(g.n_edges, bool)
+    key = g.src * np.int64(g.n_vertices) + g.dst
+    dkey = np.concatenate([ds, dd]) * np.int64(g.n_vertices) \
+        + np.concatenate([dd, ds])
+    kept[np.isin(key, dkey)] = False
+    g2 = Graph(g.n_vertices, g.src[kept], g.dst[kept], g.weights[kept])
+    pg2 = partition_and_build(g2, 5, "cdbh")
+    r1, _ = run_sim(ConnectedComponents(), pg, None, EngineConfig())
+    r2, _ = run_sim(ConnectedComponents(), pg2, None, EngineConfig())
+    np.testing.assert_array_equal(pg.collect(r1, fill=-1),
+                                  pg2.collect(r2, fill=-1))
+
+    # ...until compact evicts them (only re-homed isolated ids may remain)
+    cs = compact(pg, ctx)
+    assert cs.n_evicted > 0
+    touched = np.zeros(pg.n_vertices, bool)
+    for p in range(pg.n_parts):
+        em = pg.emask[p]
+        touched[pg.gvid[p][pg.esrc[p][em]]] = True
+        touched[pg.gvid[p][pg.edst[p][em]]] = True
+    vm = pg.vmask[victim]
+    assert not touched[pg.gvid[victim][vm]].any()
+    r3, _ = run_sim(ConnectedComponents(), pg, None, EngineConfig())
+    np.testing.assert_array_equal(pg.collect(r3, fill=-1),
+                                  pg2.collect(r2, fill=-1))
