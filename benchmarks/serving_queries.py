@@ -1,0 +1,143 @@
+"""Serving-path benchmark: cached vs cold query latency on one
+``GraphSession`` over a Graph500 Kronecker graph.
+
+Measures what the compiled-runner cache buys for continuous query traffic
+(ROADMAP north star): the first (cold) query pays trace+compile once
+(``ExecutionStats.compile_time``); every further query — same program,
+different parameters, other algorithms already seen — runs at steady-state
+latency with ``compile_time == 0``. Also times the update path: a
+shape-preserving ``update+flush`` keeps the cache warm, so the post-update
+query is patch + execute, no recompile.
+
+    PYTHONPATH=src python -m benchmarks.serving_queries [--scale 14]
+    PYTHONPATH=src python -m benchmarks.serving_queries --smoke   # CI
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks.common import save, table
+from repro.algos import ConnectedComponents, PageRank, SSSP
+from repro.graphgen import kronecker_graph
+from repro.session import GraphSession
+
+
+def _quantiles(xs):
+    xs = np.asarray(xs)
+    return (float(np.median(xs)), float(np.percentile(xs, 95)))
+
+
+def bench_query_latency(sess, n_repeat, n_sources):
+    """Cold-vs-cached latency per algorithm, plus source sweep on the one
+    cached SSSP runner (the multi-tenant serving pattern)."""
+    g_nv = sess.pg.n_vertices
+    algos = [("sssp", SSSP(), {"source": 0}),
+             ("cc", ConnectedComponents(), None),
+             ("pagerank", PageRank(tol=1e-7), {"n_vertices": g_nv})]
+    rows, recs = [], {}
+    for name, prog, params in algos:
+        _, st_cold = sess.query(prog, params, warm=False)
+        assert st_cold.compile_time > 0.0, "first query must compile"
+        hot = []
+        for _ in range(n_repeat):
+            _, st = sess.query(prog, params, warm=False)
+            assert st.compile_time == 0.0, "repeat query must hit the cache"
+            hot.append(st.wall_time)
+        med, p95 = _quantiles(hot)
+        rows.append([name, f"{st_cold.compile_time:.2f}",
+                     f"{st_cold.wall_time*1e3:.0f}", f"{med*1e3:.0f}",
+                     f"{p95*1e3:.0f}",
+                     f"{st_cold.total_time / med:.1f}x"])
+        recs[f"{name}_compile_s"] = st_cold.compile_time
+        recs[f"{name}_cold_ms"] = st_cold.total_time * 1e3
+        recs[f"{name}_hot_median_ms"] = med * 1e3
+        recs[f"{name}_hot_p95_ms"] = p95 * 1e3
+    table(f"Cold vs cached query latency ({n_repeat} repeats)",
+          ["algo", "compile s", "first wall ms", "hot med ms", "hot p95 ms",
+           "cold/hot"], rows)
+
+    # parameter sweep: every source reuses the one compiled SSSP runner
+    rng = np.random.default_rng(0)
+    lat = []
+    misses = sess.stats.cache_misses
+    for src in rng.integers(0, g_nv, n_sources):
+        _, st = sess.query(SSSP(), {"source": int(src)}, warm=False)
+        lat.append(st.wall_time)
+    assert sess.stats.cache_misses == misses, \
+        "a source sweep must not recompile"
+    med, p95 = _quantiles(lat)
+    table(f"SSSP source sweep ({n_sources} sources, one compiled runner)",
+          ["med ms", "p95 ms", "queries/s"],
+          [[f"{med*1e3:.0f}", f"{p95*1e3:.0f}", f"{1.0/med:.1f}"]])
+    recs["sweep_median_ms"] = med * 1e3
+    recs["sweep_p95_ms"] = p95 * 1e3
+    return recs
+
+
+def bench_update_query(sess, n_cycles):
+    """update -> flush -> warm-auto query cycles: steady-state freshness
+    latency (patch + upload + warm recompute; recompiles only when the
+    padded shapes grow)."""
+    sess.query(SSSP(), {"source": 0})
+    rng = np.random.default_rng(1)
+    nv = sess.pg.n_vertices
+    t_cycle, recompiles = [], 0
+    for _ in range(n_cycles):
+        s = rng.integers(0, nv, 64)
+        d = rng.integers(0, nv, 64)
+        keep = s != d
+        w = rng.uniform(5, 10, int(keep.sum())).astype(np.float32)
+        t0 = time.perf_counter()
+        sess.update(adds=(s[keep], d[keep], w))
+        sess.flush()
+        _, st = sess.query(SSSP(), {"source": 0})     # warm="auto"
+        t_cycle.append(time.perf_counter() - t0)
+        recompiles += st.compile_time > 0.0
+    med, p95 = _quantiles(t_cycle)
+    table(f"update+flush+query cycles ({n_cycles} x 64 edges)",
+          ["med ms", "p95 ms", "recompiles", "warm queries"],
+          [[f"{med*1e3:.0f}", f"{p95*1e3:.0f}", recompiles,
+            sess.stats.warm_queries]])
+    return {"update_cycle_median_ms": med * 1e3,
+            "update_cycle_p95_ms": p95 * 1e3,
+            "update_cycle_recompiles": int(recompiles)}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=int, default=14,
+                    help="Kronecker scale (2^scale vertices)")
+    ap.add_argument("--parts", type=int, default=16)
+    ap.add_argument("--repeat", type=int, default=10)
+    ap.add_argument("--sources", type=int, default=20)
+    ap.add_argument("--cycles", type=int, default=10)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes for CI: exercise every path, skip scale")
+    args = ap.parse_args()
+    if args.smoke:
+        args.scale, args.parts = 10, 8
+        args.repeat, args.sources, args.cycles = 3, 5, 3
+
+    g = kronecker_graph(args.scale, seed=7)
+    sess = GraphSession.from_graph(g, args.parts, "cdbh")
+    print(f"graph: {g.n_vertices} vertices, {g.n_edges} edges, "
+          f"P={args.parts}")
+
+    rec = {"n_vertices": g.n_vertices, "n_edges": g.n_edges,
+           "n_parts": args.parts, "smoke": args.smoke}
+    rec.update(bench_query_latency(sess, args.repeat, args.sources))
+    rec.update(bench_update_query(sess, args.cycles))
+    rec["compile_time_total_s"] = sess.stats.compile_time_total
+    rec["cache_misses"] = sess.stats.cache_misses
+    rec["cache_hits"] = sess.stats.cache_hits
+    print(f"\nsession: {sess.stats.queries} queries served by "
+          f"{sess.stats.cache_misses} compilations "
+          f"({sess.stats.compile_time_total:.1f}s total compile)")
+    save("serving_queries", rec)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,7 +1,8 @@
-"""Streaming subsystem benchmark: chunked-ingest throughput vs the one-shot
-in-memory path, incremental (warm-start) vs full recompute after a 1%
-edge-insert batch, per-op patching vs coalesced DeltaBuffer flushes under
-producer traffic, and compaction payoff after a delete-heavy phase.
+"""Streaming subsystem benchmark, on the ``GraphSession`` serving API:
+chunked-ingest throughput vs the one-shot in-memory path, warm-auto vs
+forced-cold recompute after a 1% edge-insert batch, per-op patching vs the
+session's coalescing update buffer under producer traffic, and compaction
+payoff after a delete-heavy phase.
 
     PYTHONPATH=src python -m benchmarks.streaming_ingest [--n 50000]
     PYTHONPATH=src python -m benchmarks.streaming_ingest --smoke   # CI
@@ -20,9 +21,9 @@ import numpy as np
 
 from benchmarks.common import save, table
 from repro.algos import SSSP
-from repro.core import EngineConfig, partition_and_build, run_sim
-from repro.stream import (DeltaBuffer, EdgeDelta, apply_delta, compact,
-                          streaming_ingest, write_edge_log)
+from repro.core import partition_and_build
+from repro.session import GraphSession
+from repro.stream import EdgeDelta, apply_delta, write_edge_log
 from repro.graphgen import powerlaw_graph
 
 
@@ -39,7 +40,7 @@ def bench_ingest(g, n_parts, chunk_sizes):
     for cs in chunk_sizes:
         d = tempfile.mkdtemp(prefix=f"drone_bench_log_{cs}_")
         write_edge_log(g, d, chunk_size=cs)
-        _, _, st = streaming_ingest(d, n_parts, "cdbh")
+        st = GraphSession.from_edge_log(d, n_parts, "cdbh").ingest_stats
         rows.append([f"stream c={cs}", st.n_chunks,
                      f"{st.ingest_edges_per_s / 1e6:.2f}",
                      f"{st.peak_stream_bytes / 2**20:.1f}",
@@ -54,91 +55,90 @@ def bench_ingest(g, n_parts, chunk_sizes):
 
 
 def bench_incremental(g, n_parts):
+    """Warm-auto vs forced-cold query on one session after a ~1% insert
+    batch — the serving path (session remembers the previous converged
+    result and the compiled runner)."""
     log_dir = tempfile.mkdtemp(prefix="drone_bench_inc_")
     write_edge_log(g, log_dir, chunk_size=65_536)
-    pg, ctx, _ = streaming_ingest(log_dir, n_parts, "cdbh")
-    res, st0 = run_sim(SSSP(), pg, {"source": 0}, EngineConfig())
-    prev = pg.collect(res, fill=np.float32(np.inf))
+    # manual flush only: the whole insert batch must land as ONE patch so
+    # the table's n_added/parts_patched describe it (auto-flush would split)
+    sess = GraphSession.from_edge_log(log_dir, n_parts, "cdbh",
+                                      max_buffer_edges=None)
+    sess.query(SSSP(), {"source": 0})             # converged + compiled
 
     rng = np.random.default_rng(0)
     n_add = g.n_edges // 200                      # 1% counting both dirs
-    s = rng.integers(0, pg.n_vertices, n_add)
-    d = rng.integers(0, pg.n_vertices, n_add)
+    s = rng.integers(0, sess.pg.n_vertices, n_add)
+    d = rng.integers(0, sess.pg.n_vertices, n_add)
     keep = s != d
     s, d = s[keep], d[keep]
     w = rng.uniform(5, 10, s.size).astype(np.float32)
     t0 = time.perf_counter()
-    dst = apply_delta(pg, ctx, EdgeDelta(
-        add_src=np.concatenate([s, d]), add_dst=np.concatenate([d, s]),
-        add_w=np.concatenate([w, w])))
+    sess.update(adds=(np.concatenate([s, d]), np.concatenate([d, s]),
+                      np.concatenate([w, w])))
+    dst = sess.flush()
     t_patch = time.perf_counter() - t0
 
-    t0 = time.perf_counter()
-    cold, st_c = run_sim(SSSP(), pg, {"source": 0}, EngineConfig())
-    t_cold = time.perf_counter() - t0
-    t0 = time.perf_counter()
-    warm, st_w = run_sim(SSSP(), pg, {"source": 0}, EngineConfig(),
-                         init_state=prev)
-    t_warm = time.perf_counter() - t0
+    warm, st_w = sess.query(SSSP(), {"source": 0})            # warm="auto"
+    cold, st_c = sess.query(SSSP(), {"source": 0}, warm=False)
 
-    c = pg.collect(cold, fill=np.float32(np.inf))
-    ww = pg.collect(warm, fill=np.float32(np.inf))
-    fin = np.isfinite(c)
-    assert np.allclose(ww[fin], c[fin], rtol=1e-5, atol=1e-4) \
-        and np.isinf(ww[~fin]).all(), "warm result diverged from cold"
+    assert (np.asarray(warm) == np.asarray(cold)).all(), \
+        "warm result diverged from cold"
     assert st_w.supersteps < st_c.supersteps, \
         f"warm {st_w.supersteps} !< cold {st_c.supersteps}"
     table(f"Incremental vs full SSSP recompute (+{dst.n_added} edges, "
           f"{dst.parts_patched} partitions patched in {t_patch*1e3:.0f} ms)",
-          ["run", "supersteps", "messages", "wall s"],
+          ["run", "supersteps", "messages", "compile s", "wall s"],
           [["cold (full)", st_c.supersteps, st_c.total_messages,
-            f"{t_cold:.2f}"],
+            f"{st_c.compile_time:.2f}", f"{st_c.wall_time:.2f}"],
            ["warm (incremental)", st_w.supersteps, st_w.total_messages,
-            f"{t_warm:.2f}"]])
+            f"{st_w.compile_time:.2f}", f"{st_w.wall_time:.2f}"]])
     return {"cold_supersteps": st_c.supersteps,
             "warm_supersteps": st_w.supersteps,
-            "patch_time_s": t_patch, "cold_time_s": t_cold,
-            "warm_time_s": t_warm,
+            "patch_time_s": t_patch, "cold_time_s": st_c.wall_time,
+            "warm_time_s": st_w.wall_time,
             "speedup_supersteps": st_c.supersteps / max(st_w.supersteps, 1)}
 
 
 def bench_batching(g, n_parts, n_ops, flush_every):
-    """Per-op apply_delta vs one coalesced DeltaBuffer flush per window —
-    the continuous-producer-traffic path (docs/STREAMING.md)."""
+    """Per-op apply_delta vs the session's coalescing update buffer (one
+    flush per window) — the continuous-producer-traffic path
+    (docs/STREAMING.md)."""
     log_dir = tempfile.mkdtemp(prefix="drone_bench_buf_")
     write_edge_log(g, log_dir, chunk_size=65_536)
-    pg_seq, ctx_seq, _ = streaming_ingest(log_dir, n_parts, "cdbh")
-    pg_buf, ctx_buf, _ = streaming_ingest(log_dir, n_parts, "cdbh")
+    sess_seq = GraphSession.from_edge_log(log_dir, n_parts, "cdbh")
+    sess_buf = GraphSession.from_edge_log(log_dir, n_parts, "cdbh",
+                                          max_buffer_edges=flush_every)
 
     rng = np.random.default_rng(3)
-    s = rng.integers(0, pg_seq.n_vertices, n_ops).astype(np.int64)
-    d = rng.integers(0, pg_seq.n_vertices, n_ops).astype(np.int64)
+    s = rng.integers(0, sess_seq.pg.n_vertices, n_ops).astype(np.int64)
+    d = rng.integers(0, sess_seq.pg.n_vertices, n_ops).astype(np.int64)
     keep = s != d
     s, d = s[keep], d[keep]
     w = rng.uniform(1, 2, s.size).astype(np.float32)
 
     t0 = time.perf_counter()
     for i in range(s.size):
-        apply_delta(pg_seq, ctx_seq, EdgeDelta(
+        apply_delta(sess_seq.pg, sess_seq.ctx, EdgeDelta(
             add_src=s[i:i+1], add_dst=d[i:i+1], add_w=w[i:i+1]))
     t_seq = time.perf_counter() - t0
 
-    buf = DeltaBuffer(pg_buf, ctx_buf, max_edges=flush_every)
     t0 = time.perf_counter()
     for i in range(s.size):
-        buf.add(int(s[i]), int(d[i]), float(w[i]))
-    buf.flush()
+        sess_buf.update(adds=(s[i:i+1], d[i:i+1], w[i:i+1]))
+    sess_buf.flush()
     t_buf = time.perf_counter() - t0
-    assert pg_buf.n_edges == pg_seq.n_edges
+    assert sess_buf.pg.n_edges == sess_seq.pg.n_edges
 
     table(f"Delta batching ({s.size} producer add-ops, P={n_parts}, "
           f"flush_every={flush_every})",
           ["path", "patches", "ops/s", "wall s"],
           [["per-op apply_delta", s.size, f"{s.size / t_seq:.0f}",
             f"{t_seq:.2f}"],
-           ["DeltaBuffer", buf.stats.n_flushes,
+           ["session.update", sess_buf.stats.flushes,
             f"{s.size / t_buf:.0f}", f"{t_buf:.2f}"]])
-    return {"batch_ops": int(s.size), "batch_flushes": buf.stats.n_flushes,
+    return {"batch_ops": int(s.size),
+            "batch_flushes": sess_buf.stats.flushes,
             "per_op_ops_per_s": s.size / t_seq,
             "buffered_ops_per_s": s.size / t_buf,
             "batching_speedup": t_seq / t_buf}
@@ -148,16 +148,17 @@ def bench_compaction(g, n_parts):
     """Delete-heavy phase: grow-only buffers vs compacted buffers."""
     log_dir = tempfile.mkdtemp(prefix="drone_bench_cmp_")
     write_edge_log(g, log_dir, chunk_size=65_536)
-    pg, ctx, _ = streaming_ingest(log_dir, n_parts, "cdbh")
+    sess = GraphSession.from_edge_log(log_dir, n_parts, "cdbh")
 
     rng = np.random.default_rng(4)
     sel = rng.choice(g.n_edges, size=g.n_edges // 3, replace=False)
-    apply_delta(pg, ctx, EdgeDelta(
-        del_src=np.concatenate([g.src[sel], g.dst[sel]]),
-        del_dst=np.concatenate([g.dst[sel], g.src[sel]])))
+    sess.update(deletes=(np.concatenate([g.src[sel], g.dst[sel]]),
+                         np.concatenate([g.dst[sel], g.src[sel]])))
+    sess.flush()
+    pg = sess.pg
     v0, e0, s0 = pg.v_max, pg.e_max, pg.n_slots
     t0 = time.perf_counter()
-    cs = compact(pg, ctx)
+    cs = sess.compact()
     t_cmp = time.perf_counter() - t0
     table(f"Compaction after deleting 2/3 of the edges (P={n_parts}, "
           f"{t_cmp*1e3:.0f} ms)",

@@ -1,13 +1,16 @@
 """PageRank (paper §7.2, asynchronous accumulative) on a power-law graph,
-comparing the paper's DRONE-VC against the DRONE-EC baseline.
+comparing the paper's DRONE-VC against the DRONE-EC baseline — one
+``GraphSession`` per partitioning (sessions are bound to one partitioned
+graph; the two cuts are two different graphs on device).
 
     PYTHONPATH=src python examples/pagerank_powerlaw.py
 """
 import numpy as np
 
 from repro.algos import PageRank
-from repro.core import EngineConfig, partition_and_build, run_sim
+from repro.core import EngineConfig
 from repro.graphgen import powerlaw_graph
+from repro.session import GraphSession
 
 
 def main():
@@ -16,9 +19,9 @@ def main():
     pr = PageRank(tol=1e-8)
     rows = []
     for name, part in (("DRONE-VC (cdbh)", "cdbh"), ("DRONE-EC (rh)", "rh-ec")):
-        pg = partition_and_build(g, 16, part)
-        res, st = run_sim(pr, pg, {"n_vertices": g.n_vertices}, cfg)
-        ranks = pg.collect(res, fill=0.0)
+        sess = GraphSession.from_graph(g, 16, part, cfg=cfg)
+        res, st = sess.query(pr, {"n_vertices": g.n_vertices})
+        ranks = sess.pg.collect(res, fill=0.0)
         top = np.argsort(-ranks)[:5]
         rows.append((name, st.supersteps, st.total_messages, st.wall_time,
                      ranks))

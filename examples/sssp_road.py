@@ -7,18 +7,19 @@ with a locality-preserving partition.
 import numpy as np
 
 from repro.algos import SSSP
-from repro.core import EngineConfig, partition_and_build, run_sim
+from repro.core import EngineConfig
 from repro.graphgen import grid_graph
+from repro.session import GraphSession
 
 
 def main():
     g = grid_graph(120, weighted=True, seed=9)   # 14.4k vertices, diam ~240
-    for name, part, mode in (("DRONE-VC sc", "range", "sc"),
-                             ("DRONE-VC vc-mode", "range", "vc")):
-        pg = partition_and_build(g, 16, part)
-        res, st = run_sim(SSSP(), pg, {"source": 0},
-                          EngineConfig(mode=mode, max_supersteps=50_000))
-        dist = pg.collect(res, fill=np.float32(np.inf))
+    sess = GraphSession.from_graph(g, 16, "range")
+    for name, mode in (("DRONE-VC sc", "sc"), ("DRONE-VC vc-mode", "vc")):
+        res, st = sess.query(SSSP(), {"source": 0}, warm=False,
+                             cfg=EngineConfig(mode=mode,
+                                              max_supersteps=50_000))
+        dist = sess.pg.collect(res, fill=np.float32(np.inf))
         print(f"{name:18s} supersteps={st.supersteps:5d} "
               f"messages={st.total_messages:9d} "
               f"max_dist={np.nanmax(np.where(np.isfinite(dist), dist, np.nan)):.1f}")

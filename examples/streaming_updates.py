@@ -1,13 +1,15 @@
-"""Continuously-updating workload: out-of-core ingest, buffered live edge
-traffic, warm-start incremental SSSP, membership compaction
-(docs/STREAMING.md).
+"""Continuously-updating workload on one ``GraphSession``: out-of-core
+ingest, buffered live edge traffic, auto-warm-start incremental SSSP,
+membership compaction (docs/STREAMING.md, docs/API.md).
 
-A producer appends edges to a chunked on-disk edge log; the two-pass
-streaming pipeline builds the PartitionedGraph with peak edge memory bounded
-by the chunk size. Producer traffic then flows through a coalescing
-``DeltaBuffer`` (one partition rebuild per flush instead of per op), SSSP
-restarts from the previous converged distances instead of from scratch, and
-after a delete-heavy phase ``compact`` shrinks the padded device buffers
+A producer appends edges to a chunked on-disk edge log; the session opens
+over it with the two-pass streaming pipeline (peak edge memory bounded by
+the chunk size). Producer traffic then flows through ``session.update`` —
+coalesced by the internal DeltaBuffer, applied as one patch per flush — and
+every ``session.query`` after an insert-only flush automatically restarts
+SSSP from the previous converged distances instead of from scratch, on the
+same compiled runner (zero retraces while the padded shapes hold). After a
+delete-heavy phase ``session.compact()`` shrinks the padded device buffers
 back down.
 
     PYTHONPATH=src python examples/streaming_updates.py
@@ -17,10 +19,9 @@ import tempfile
 import numpy as np
 
 from repro.algos import SSSP
-from repro.core import EngineConfig, run_sim
 from repro.graphgen import powerlaw_graph
-from repro.stream import (DeltaBuffer, compact, streaming_ingest,
-                          write_edge_log)
+from repro.session import GraphSession
+from repro.stream import write_edge_log
 
 
 def main():
@@ -31,61 +32,65 @@ def main():
     print(f"edge log: {meta.n_edges} edges in {meta.n_chunks} chunks "
           f"of {meta.chunk_size}")
 
-    pg, ctx, st = streaming_ingest(log_dir, 8, "cdbh")
+    sess = GraphSession.from_edge_log(log_dir, 8, "cdbh",
+                                      max_buffer_edges=512)
+    st = sess.ingest_stats
     print(f"ingest: {st.ingest_edges_per_s/1e6:.2f} Medges/s, "
           f"peak stream mem {st.peak_stream_bytes/2**20:.1f} MiB "
           f"(bound {st.stream_bound_bytes/2**20:.1f} MiB, "
           f"full edge list would be "
           f"{meta.n_edges * 20/2**20:.1f} MiB)")
 
-    res, stats = run_sim(SSSP(), pg, {"source": 0}, EngineConfig())
-    prev = pg.collect(res, fill=np.float32(np.inf))
-    print(f"initial SSSP: {stats.supersteps} supersteps")
+    _, stats = sess.query(SSSP(), {"source": 0})
+    print(f"initial SSSP: {stats.supersteps} supersteps "
+          f"(compiled in {stats.compile_time:.2f}s)")
 
-    # ---- continuous producer traffic through the coalescing buffer ------- #
-    buf = DeltaBuffer(pg, ctx, max_edges=512)
+    # ---- continuous producer traffic through the buffered session -------- #
     rng = np.random.default_rng(1)
     for batch in range(3):
         n = g.n_edges // 200
-        s = rng.integers(0, pg.n_vertices, n)
-        d = rng.integers(0, pg.n_vertices, n)
+        s = rng.integers(0, sess.pg.n_vertices, n)
+        d = rng.integers(0, sess.pg.n_vertices, n)
         keep = s != d
         s, d = s[keep], d[keep]
         w = rng.uniform(5, 10, s.size).astype(np.float32)
+        e_before, s_before = sess.pg.n_edges, sess.pg.n_slots
+        f_before = sess.stats.flushes
         # the producer emits tiny add ops; the buffer coalesces and flushes
-        e_before, s_before, f_before = pg.n_edges, pg.n_slots, \
-            buf.stats.n_flushes
         for i in range(0, s.size, 64):
-            buf.add(np.concatenate([s[i:i+64], d[i:i+64]]),
-                    np.concatenate([d[i:i+64], s[i:i+64]]),
-                    np.concatenate([w[i:i+64], w[i:i+64]]))
-        buf.flush()
-        cold, st_c = run_sim(SSSP(), pg, {"source": 0}, EngineConfig())
-        warm, st_w = run_sim(SSSP(), pg, {"source": 0}, EngineConfig(),
-                             init_state=prev)
-        ok = np.allclose(
-            np.nan_to_num(pg.collect(warm, fill=np.float32(np.inf)), posinf=-1),
-            np.nan_to_num(pg.collect(cold, fill=np.float32(np.inf)), posinf=-1))
-        print(f"batch {batch}: +{pg.n_edges - e_before} edges in "
-              f"{buf.stats.n_flushes - f_before} flushes, "
-              f"slots {s_before}->{pg.n_slots} | "
+            sess.update(adds=(np.concatenate([s[i:i+64], d[i:i+64]]),
+                              np.concatenate([d[i:i+64], s[i:i+64]]),
+                              np.concatenate([w[i:i+64], w[i:i+64]])))
+        sess.flush()
+        warm, st_w = sess.query(SSSP(), {"source": 0})     # warm="auto"
+        cold, st_c = sess.query(SSSP(), {"source": 0}, warm=False)
+        ok = (np.asarray(warm) == np.asarray(cold)).all()
+        assert ok, "warm-auto SSSP diverged from cold"
+        assert st_w.supersteps < st_c.supersteps, (st_w.supersteps,
+                                                   st_c.supersteps)
+        print(f"batch {batch}: +{sess.pg.n_edges - e_before} edges in "
+              f"{sess.stats.flushes - f_before} flushes, "
+              f"slots {s_before}->{sess.pg.n_slots} | "
               f"cold {st_c.supersteps} supersteps, warm {st_w.supersteps} "
-              f"| allclose={ok}")
-        prev = pg.collect(warm, fill=np.float32(np.inf))
+              f"| bit-identical={ok} "
+              f"| retraced={'yes' if st_w.compile_time else 'no'}")
 
     # ---- delete-heavy phase, then compact the zombie members ------------- #
     sel = rng.choice(g.n_edges, size=g.n_edges // 3, replace=False)
-    buf.delete(np.concatenate([g.src[sel], g.dst[sel]]),
-               np.concatenate([g.dst[sel], g.src[sel]]))
-    buf.flush()
-    v0, e0, s0 = pg.v_max, pg.e_max, pg.n_slots
-    cs = compact(pg, ctx)
+    sess.update(deletes=(np.concatenate([g.src[sel], g.dst[sel]]),
+                         np.concatenate([g.dst[sel], g.src[sel]])))
+    sess.flush()
+    v0, e0, s0 = sess.pg.v_max, sess.pg.e_max, sess.pg.n_slots
+    cs = sess.compact()
     print(f"compact: evicted {cs.n_evicted} zombie members, "
-          f"v_max {v0}->{pg.v_max}, e_max {e0}->{pg.e_max}, "
-          f"n_slots {s0}->{pg.n_slots}")
-    res, stats = run_sim(SSSP(), pg, {"source": 0}, EngineConfig())
+          f"v_max {v0}->{sess.pg.v_max}, e_max {e0}->{sess.pg.e_max}, "
+          f"n_slots {s0}->{sess.pg.n_slots}")
+    _, stats = sess.query(SSSP(), {"source": 0})
     print(f"post-compact SSSP: {stats.supersteps} supersteps "
           f"(graph unchanged by compaction, buffers smaller)")
+    print(f"session: {sess.stats.queries} queries, "
+          f"{sess.stats.cache_misses} compiles, "
+          f"{sess.stats.warm_queries} warm, {sess.stats.uploads} uploads")
 
 
 if __name__ == "__main__":

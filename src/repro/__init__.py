@@ -1,5 +1,10 @@
 """repro — DRONE/SVHM (Wen, Zhang, You 2018) on TPU: a distributed
 subgraph-centric graph engine with vertex-cut partitioning, plus the assigned
-LM-architecture zoo, sharded launch/dry-run and roofline tooling."""
+LM-architecture zoo, sharded launch/dry-run and roofline tooling.
 
-__version__ = "0.1.0"
+Primary serving API: ``repro.session.GraphSession`` (resident device graph,
+compiled-runner caching, streaming updates). The free functions in
+``repro.core`` are the low-level one-shot layer underneath it.
+"""
+
+__version__ = "0.2.0"

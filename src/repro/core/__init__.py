@@ -1,5 +1,6 @@
 from repro.core.api import DeviceSubgraph, VertexProgram
-from repro.core.engine import EdgeCombine, EngineConfig, run, run_sim, run_shard_map
+from repro.core.engine import (EdgeCombine, EngineConfig, make_bsp_runner,
+                               make_sim_runner, run, run_sim, run_shard_map)
 from repro.core.graph import Graph
 from repro.core.metrics import ExecutionStats, PartitionMetrics, partition_metrics
 from repro.core.partition import (PARTITIONERS, STREAM_ROUTERS,
@@ -12,7 +13,8 @@ from repro.core.subgraph import (PartitionedGraph, assemble_partitioned_graph,
 
 __all__ = [
     "DeviceSubgraph", "VertexProgram", "EdgeCombine", "EngineConfig", "run",
-    "run_sim", "run_shard_map", "Graph", "ExecutionStats", "PartitionMetrics",
+    "run_sim", "run_shard_map", "make_bsp_runner", "make_sim_runner",
+    "Graph", "ExecutionStats", "PartitionMetrics",
     "partition_metrics", "PARTITIONERS", "STREAM_ROUTERS", "cdbh_vertex_cut",
     "greedy_edge_cut", "grid_vertex_cut", "random_hash_edge_cut",
     "random_hash_vertex_cut", "PartitionedGraph", "build_partitioned_graph",
@@ -23,6 +25,11 @@ __all__ = [
 
 def partition_and_build(g: Graph, n_parts: int, partitioner: str = "cdbh",
                         *, seed: int = 0, pad_multiple: int = 8):
-    """One-call preprocessing: partition edges + build device arrays."""
+    """One-call preprocessing: partition edges + build device arrays.
+
+    Low-level layer: pairs with the one-shot ``run``/``run_sim``/
+    ``run_shard_map``. For serving (resident device graph, cached compiled
+    runners, streaming updates) open a ``repro.session.GraphSession`` —
+    ``GraphSession.from_graph`` is this call plus a session."""
     part = PARTITIONERS[partitioner](g, n_parts, seed=seed)
     return build_partitioned_graph(g, part, n_parts, pad_multiple=pad_multiple)

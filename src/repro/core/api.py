@@ -69,7 +69,16 @@ COMBINER_IDENTITY = {
 
 
 def combiner_identity(combiner: str, dtype) -> np.generic:
-    return COMBINER_IDENTITY[(combiner, jnp.dtype(dtype))]
+    try:
+        return COMBINER_IDENTITY[(combiner, jnp.dtype(dtype))]
+    except KeyError:
+        supported = ", ".join(
+            f"({c!r}, {d.name})" for c, d in sorted(
+                COMBINER_IDENTITY, key=lambda k: (k[0], k[1].name)))
+        raise ValueError(
+            f"no combiner identity for (combiner={combiner!r}, "
+            f"dtype={jnp.dtype(dtype).name}); supported (combiner, dtype) "
+            f"pairs: {supported}") from None
 
 
 @dataclasses.dataclass

@@ -23,6 +23,13 @@ Backends:
     model axis shards each partition's *edges* (hierarchical SVHM,
     DESIGN.md §2); SBS = lax.pmin/psum over (pod, data), intra-partition
     edge-combine = collectives over (model,).
+
+This module is the **low-level one-shot layer**: ``run``/``run_sim``/
+``run_shard_map`` build a fresh runner, upload the graph and execute a single
+job. For serving — repeated queries, streaming updates, amortized
+compilation — use ``repro.session.GraphSession``, which keeps the device
+pytree resident and caches the compiled runners built by
+``make_sim_runner``/``make_bsp_runner`` below.
 """
 from __future__ import annotations
 
@@ -43,7 +50,8 @@ from repro.core.api import DeviceSubgraph, VertexProgram
 from repro.core.metrics import ExecutionStats
 from repro.core.subgraph import PartitionedGraph
 
-__all__ = ["EngineConfig", "EdgeCombine", "run", "run_sim", "run_shard_map"]
+__all__ = ["EngineConfig", "EdgeCombine", "run", "run_sim", "run_shard_map",
+           "make_sim_runner", "make_bsp_runner"]
 
 
 # --------------------------------------------------------------------------- #
@@ -88,6 +96,38 @@ class EngineConfig:
     edge_axes: tuple = ()             # mesh axes sharding edges in-partition
     checkpoint_every: int = 0         # supersteps; 0 = off (trace mode only)
     checkpoint_dir: Optional[str] = None
+
+    _MODES = ("sc", "vc")
+    _BACKENDS = ("sim", "shard_map")
+
+    def __post_init__(self):
+        """Fail at construction, not deep inside a run (a typo'd mode would
+        otherwise silently degrade: anything != 'vc' iterates to the local
+        fixed point)."""
+        if self.mode not in self._MODES:
+            raise ValueError(
+                f"EngineConfig.mode={self.mode!r}: allowed values are "
+                f"{self._MODES}")
+        if self.backend not in self._BACKENDS:
+            raise ValueError(
+                f"EngineConfig.backend={self.backend!r}: allowed values are "
+                f"{self._BACKENDS}")
+        for name in ("subgraph_axes", "edge_axes"):
+            axes = getattr(self, name)
+            if isinstance(axes, str) or not all(
+                    isinstance(a, str) for a in tuple(axes)):
+                raise ValueError(
+                    f"EngineConfig.{name}={axes!r} must be a tuple of mesh "
+                    f"axis names, e.g. ('pod', 'data')")
+            object.__setattr__(self, name, tuple(axes))   # lists hash too
+        for name in ("max_local_iters", "max_supersteps"):
+            if getattr(self, name) < 1:
+                raise ValueError(f"EngineConfig.{name} must be >= 1, got "
+                                 f"{getattr(self, name)}")
+        for name in ("sparse_sync_capacity", "checkpoint_every"):
+            if getattr(self, name) < 0:
+                raise ValueError(f"EngineConfig.{name} must be >= 0, got "
+                                 f"{getattr(self, name)}")
 
     @property
     def local_bound(self) -> int:
@@ -196,43 +236,14 @@ def _exchange_bytes_per_step(cfg: EngineConfig, n_slots: int, K: int,
 # --------------------------------------------------------------------------- #
 # Simulator backend
 # --------------------------------------------------------------------------- #
-def run_sim(program: VertexProgram, pg: PartitionedGraph, params=None,
-            cfg: EngineConfig = EngineConfig(), *, resume_from=None,
-            init_state=None):
-    """``resume_from``: path to a BSP checkpoint written by a previous trace
-    run (cfg.checkpoint_every) — restart mid-job (DESIGN.md §7).
-
-    ``init_state``: global per-vertex values [n_vertices(, K)] from a
-    previous *converged* run (e.g. before a stream delta was applied) — a
-    warm start. Only sound for monotone programs (values tighten under the
-    combiner; SSSP/MSSP/CC after edge/vertex growth): non-monotone programs
-    (PageRank) silently fall back to a cold start. Shorter arrays (the graph
-    grew) are padded with the combiner identity."""
-    sgs = _device_subgraph(pg)
-    n_slots, K = pg.n_slots, program.payload
+def _make_sim_superstep(program: VertexProgram, cfg: EngineConfig,
+                        n_slots: int):
+    """One vmapped BSP superstep over the stacked [P, ...] pytree."""
     ident = program.identity
     ec = EdgeCombine(())
     ex = sbs.SimExchange()
 
-    v_init = jax.vmap(lambda sg: program.init(sg, params, ec))(sgs)
-    if init_state is not None and program.monotone:
-        wv = _warm_block(program, pg, init_state)
-        v_init = jax.vmap(
-            lambda sg, st, w: program.warm_init(sg, params, st, w)
-        )(sgs, v_init, jnp.asarray(wv))
-    last0 = jnp.full((pg.n_parts, pg.v_max, K), ident, dtype=program.dtype)
-    merged0 = jnp.full((n_slots + 1, K), ident, dtype=program.dtype)
-    start_step = 0
-    if resume_from is not None:
-        from repro.training.checkpoint import load_pytree
-        ckpt, meta = load_pytree(
-            resume_from, like=dict(state=v_init, last_out=last0,
-                                   merged=merged0, step=jnp.int32(0)))
-        v_init, last0, merged0 = ckpt["state"], ckpt["last_out"], ckpt["merged"]
-        start_step = int(ckpt["step"])
-        assert cfg.trace, "resume requires trace mode"
-
-    def superstep(state, last_out, merged_buf, first):
+    def superstep(sgs, params, state, last_out, merged_buf, first):
         merged_v = jax.vmap(lambda sg: sbs.gather_merged(merged_buf, sg.slot))(sgs)
         state, out, sweeps, last_ch = jax.vmap(
             lambda sg, st, m: _local_phase(program, sg, params, st, m, ec,
@@ -247,12 +258,113 @@ def run_sim(program: VertexProgram, pg: PartitionedGraph, params=None,
         active = jnp.sum(last_ch > 0, dtype=jnp.int32)
         return state, out, merged_buf, msgs, active, sweeps
 
+    return superstep
+
+
+def make_sim_runner(program: VertexProgram, cfg: EngineConfig, n_slots: int,
+                    *, warm_start=False):
+    """Build the simulator BSP loop as a pure function
+
+        runner(sgs, params[, warm_block]) ->
+            (results, supersteps, total_messages, sweeps_per_part)
+
+    ``sgs`` is the stacked [P, ...] DeviceSubgraph pytree, ``params`` the
+    program's parameter pytree (traced — repeated calls with different
+    params reuse one compilation), ``warm_block`` (``warm_start=True``) a
+    [P, v_max, K] previous-result block threaded into ``program.warm_init``.
+
+    ``run_sim`` calls the runner eagerly once per job; ``GraphSession``
+    wraps it in ``jax.jit``, AOT-compiles it once per
+    (program, config, padded shapes) key and reuses the executable across
+    queries with zero retraces."""
+    K = program.payload
+    ident = program.identity
+    ec = EdgeCombine(())
+    superstep = _make_sim_superstep(program, cfg, n_slots)
+
+    def runner(sgs, params, *warm):
+        n_parts, v_max = sgs.vmask.shape
+        v_init = jax.vmap(lambda sg: program.init(sg, params, ec))(sgs)
+        if warm_start:
+            v_init = jax.vmap(
+                lambda sg, st, w: program.warm_init(sg, params, st, w)
+            )(sgs, v_init, warm[0])
+        last0 = jnp.full((n_parts, v_max, K), ident, dtype=program.dtype)
+        merged0 = jnp.full((n_slots + 1, K), ident, dtype=program.dtype)
+
+        def cond(c):
+            step, msgs, active = c[0], c[-2], c[-1]
+            return (step == 0) | (((msgs > 0) | (active > 0))
+                                  & (step < cfg.max_supersteps))
+
+        def body(c):
+            step, state, last_out, merged_buf, tot_msgs, tot_sweeps, _, _ = c
+            state, out, merged_buf, msgs, active, sweeps = superstep(
+                sgs, params, state, last_out, merged_buf, step == 0)
+            return (step + 1, state, out, merged_buf, tot_msgs + msgs,
+                    tot_sweeps + sweeps, msgs, active)
+
+        carry = (jnp.int32(0), v_init, last0, merged0, jnp.int32(0),
+                 jnp.zeros((n_parts,), jnp.int32), jnp.int32(1),
+                 jnp.int32(1))
+        carry = jax.lax.while_loop(cond, body, carry)
+        (steps, state, last_out, merged_buf, tot_msgs, tot_sweeps, *_) = carry
+        results = jax.vmap(
+            lambda sg, st: program.result(sg, params, st))(sgs, state)
+        return results, steps, tot_msgs, tot_sweeps
+
+    return runner
+
+
+def run_sim(program: VertexProgram, pg: PartitionedGraph, params=None,
+            cfg: EngineConfig = EngineConfig(), *, resume_from=None,
+            init_state=None):
+    """One-shot simulator job: upload ``pg``, build the runner, execute.
+    (Low-level layer — ``repro.session.GraphSession`` amortizes the upload
+    and the compilation across queries.)
+
+    ``resume_from``: path to a BSP checkpoint written by a previous trace
+    run (cfg.checkpoint_every) — restart mid-job (DESIGN.md §7).
+
+    ``init_state``: global per-vertex values [n_vertices(, K)] from a
+    previous *converged* run (e.g. before a stream delta was applied) — a
+    warm start. Only sound for monotone programs (values tighten under the
+    combiner; SSSP/MSSP/CC after edge/vertex growth): non-monotone programs
+    (PageRank) silently fall back to a cold start. Shorter arrays (the graph
+    grew) are padded with the combiner identity."""
+    sgs = _device_subgraph(pg)
+    n_slots, K = pg.n_slots, program.payload
+    warm = init_state is not None and program.monotone
+
     stats = ExecutionStats()
     epp_host = pg.edges_per_part.astype(np.int64)
     t0 = time.perf_counter()
 
     if cfg.trace:
-        step_fn = jax.jit(superstep)
+        ident = program.identity
+        ec = EdgeCombine(())
+        v_init = jax.vmap(lambda sg: program.init(sg, params, ec))(sgs)
+        if warm:
+            wv = _warm_block(program, pg, init_state)
+            v_init = jax.vmap(
+                lambda sg, st, w: program.warm_init(sg, params, st, w)
+            )(sgs, v_init, jnp.asarray(wv))
+        last0 = jnp.full((pg.n_parts, pg.v_max, K), ident,
+                         dtype=program.dtype)
+        merged0 = jnp.full((n_slots + 1, K), ident, dtype=program.dtype)
+        start_step = 0
+        if resume_from is not None:
+            from repro.training.checkpoint import load_pytree
+            ckpt, meta = load_pytree(
+                resume_from, like=dict(state=v_init, last_out=last0,
+                                       merged=merged0, step=jnp.int32(0)))
+            v_init, last0, merged0 = (ckpt["state"], ckpt["last_out"],
+                                      ckpt["merged"])
+            start_step = int(ckpt["step"])
+
+        superstep = _make_sim_superstep(program, cfg, n_slots)
+        step_fn = jax.jit(lambda st, lo, mb, first: superstep(
+            sgs, params, st, lo, mb, first))
         state, last_out, merged_buf = v_init, last0, merged0
         for step in range(start_step, cfg.max_supersteps):
             state, last_out, merged_buf, msgs, active, sweeps = step_fn(
@@ -274,24 +386,15 @@ def run_sim(program: VertexProgram, pg: PartitionedGraph, params=None,
                                  merged=merged_buf, step=step + 1))
             if msgs == 0 and active == 0:
                 break
+        results = jax.vmap(
+            lambda sg, st: program.result(sg, params, st))(sgs, state)
     else:
-        def cond(c):
-            step, msgs, active = c[0], c[-2], c[-1]
-            return (step == 0) | (((msgs > 0) | (active > 0))
-                                  & (step < cfg.max_supersteps))
-
-        def body(c):
-            step, state, last_out, merged_buf, tot_msgs, tot_sweeps, _, _ = c
-            state, out, merged_buf, msgs, active, sweeps = superstep(
-                state, last_out, merged_buf, step == 0)
-            return (step + 1, state, out, merged_buf, tot_msgs + msgs,
-                    tot_sweeps + sweeps, msgs, active)
-
-        carry = (jnp.int32(0), v_init, last0, merged0, jnp.int32(0),
-                 jnp.zeros((pg.n_parts,), jnp.int32), jnp.int32(1),
-                 jnp.int32(1))
-        carry = jax.lax.while_loop(cond, body, carry)
-        (steps, state, last_out, merged_buf, tot_msgs, tot_sweeps, *_) = carry
+        assert resume_from is None, "resume requires trace mode"
+        runner = make_sim_runner(program, cfg, n_slots, warm_start=warm)
+        args = (sgs, params)
+        if warm:
+            args += (jnp.asarray(_warm_block(program, pg, init_state)),)
+        results, steps, tot_msgs, tot_sweeps = runner(*args)
         stats.supersteps = int(steps)
         stats.total_messages = int(tot_msgs)
         stats.processed_edges = int(
@@ -300,7 +403,6 @@ def run_sim(program: VertexProgram, pg: PartitionedGraph, params=None,
             np.dtype(program.dtype).itemsize * pg.n_parts
 
     stats.wall_time = time.perf_counter() - t0
-    results = jax.vmap(lambda sg, st: program.result(sg, params, st))(sgs, state)
     return np.asarray(results), stats
 
 
@@ -309,14 +411,20 @@ def run_sim(program: VertexProgram, pg: PartitionedGraph, params=None,
 # --------------------------------------------------------------------------- #
 def make_bsp_runner(program: VertexProgram, mesh: Mesh,
                     cfg: EngineConfig, n_slots: int, *, params=None,
-                    has_vlabel=False, warm_start=False):
-    """Build the shard_map'd BSP loop (shared by run_shard_map and the
-    graph-engine dry-run, which lowers it against ShapeDtypeStructs).
+                    has_vlabel=False, warm_start=False,
+                    params_as_input=False):
+    """Build the shard_map'd BSP loop (shared by run_shard_map, the
+    graph-engine dry-run — which lowers it against ShapeDtypeStructs — and
+    ``GraphSession``'s compiled-runner cache).
 
-    ``params`` is the program's static parameter pytree, closed over at
-    trace time (EngineConfig is frozen and never carries it).
+    ``params`` is the program's parameter pytree. By default it is closed
+    over at trace time (EngineConfig is frozen and never carries it). With
+    ``params_as_input=True`` it is instead a *template*: the returned runner
+    takes a pytree of the same structure as its last argument, replicated
+    (``P()``) across the mesh — so one compiled runner serves every
+    parameter value (e.g. SSSP from any source) with zero retraces.
 
-    ``warm_start=True`` builds the runner with a second input: a
+    ``warm_start=True`` builds the runner with an extra input: a
     [P, v_max, K] warm-state block sharded like the vertex tables, threaded
     into ``program.warm_init`` right after on-device init — the incremental
     recompute path (docs/STREAMING.md). The caller owns the soundness check
@@ -346,7 +454,7 @@ def make_bsp_runner(program: VertexProgram, mesh: Mesh,
     shard_slots = cfg.shard_slots and n_edge_shards > 1
     n_loc = -(-(n_slots + 1) // n_edge_shards) if shard_slots else n_slots + 1
 
-    def _body(sg_block, warm_block):
+    def _body(sg_block, warm_block, params):
         sg = DeviceSubgraph(*[_squeeze(x) for x in sg_block])
         state = program.init(sg, params, ec)
         if warm_block is not None:
@@ -435,17 +543,30 @@ def make_bsp_runner(program: VertexProgram, mesh: Mesh,
         return res[None], steps, tm, tsw[None]
 
     out_specs = (vert_spec, P(), P(), P(sub_axes))
-    if warm_start:
-        @partial(shard_map, mesh=mesh,
-                 in_specs=(sg_specs, P(sub_axes, None, None)),
+    warm_spec = P(sub_axes, None, None)
+    if params_as_input:
+        pspec = jax.tree.map(lambda _: P(), params)
+        if warm_start:
+            @partial(shard_map, mesh=mesh,
+                     in_specs=(sg_specs, warm_spec, pspec),
+                     out_specs=out_specs)
+            def go(sg_block, warm_block, params):
+                return _body(sg_block, warm_block, params)
+        else:
+            @partial(shard_map, mesh=mesh, in_specs=(sg_specs, pspec),
+                     out_specs=out_specs)
+            def go(sg_block, params):
+                return _body(sg_block, None, params)
+    elif warm_start:
+        @partial(shard_map, mesh=mesh, in_specs=(sg_specs, warm_spec),
                  out_specs=out_specs)
         def go(sg_block, warm_block):
-            return _body(sg_block, warm_block)
+            return _body(sg_block, warm_block, params)
     else:
         @partial(shard_map, mesh=mesh, in_specs=(sg_specs,),
                  out_specs=out_specs)
         def go(sg_block):
-            return _body(sg_block, None)
+            return _body(sg_block, None, params)
 
     return go
 

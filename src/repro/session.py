@@ -1,0 +1,516 @@
+"""GraphSession — the resident-graph serving API (ROADMAP north star).
+
+DRONE's programming surface (paper §5.1) is "think like a graph" over a
+long-lived partitioned state — the posture that distinguishes subgraph-
+centric systems (GoFFish, the balanced vertex-cut line) from stateless
+per-job engines. The low-level free functions (``run_sim``/``run_shard_map``)
+are per-job: every call re-uploads the full ``PartitionedGraph`` and
+rebuilds + retraces the BSP runner, and the streaming lifecycle makes
+callers hand-thread ``StreamContext``/``DeltaBuffer``/``init_state`` between
+five modules. ``GraphSession`` owns all of that:
+
+  - the stacked ``DeviceSubgraph`` pytree stays **resident on device**
+    across queries, re-uploaded only when the host graph actually changed;
+  - ``query(program, params)`` goes through a **compiled-runner cache**
+    keyed by (program static fields, parameter *structure*, EngineConfig,
+    padded shapes P/v_max/e_max/n_slots) — repeated queries, multi-algorithm
+    traffic and different parameter values (any SSSP source) all reuse one
+    AOT-compiled executable with zero retraces;
+  - each converged result of a monotone program is remembered and
+    **auto-warm-starts** the next identical query after insert-only graph
+    growth (``warm="auto"``);
+  - the streaming lifecycle is folded in as methods: ``update`` routes
+    through an internal coalescing ``DeltaBuffer``, ``flush`` applies the
+    patch and refreshes the device pytree (invalidating runner-cache entries
+    only when the padded shapes actually grew), ``compact`` shrinks the
+    padded capacities and carries every cached warm result across the
+    re-layout via ``CompactStats.remap_state``.
+
+Monotone programs are always compiled with the warm input: a cold start is
+served by a combiner-identity block (``warm_init`` tightening against the
+identity is a no-op), so cold and warm queries share one executable and a
+post-growth warm query retraces only when the padded shapes grew.
+
+    sess = GraphSession.from_graph(g, n_parts=16)         # or from_edge_log
+    dist, st = sess.query(SSSP(), {"source": 0})          # compiles once
+    dist, st = sess.query(SSSP(), {"source": 7})          # cache hit
+    sess.update(adds=(src, dst, w))                       # buffered
+    sess.flush()                                          # patch + re-upload
+    dist, st = sess.query(SSSP(), {"source": 0})          # warm-auto restart
+
+Backend selection is by mesh: construct with ``mesh=`` for the shard_map
+production backend, without for the single-process simulator — the same
+session code path serves both.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import (EngineConfig, _device_subgraph,
+                               _exchange_bytes_per_step, _warm_block,
+                               make_bsp_runner, make_sim_runner, run_sim)
+from repro.core.api import VertexProgram
+from repro.core.graph import Graph
+from repro.core.metrics import ExecutionStats
+from repro.core.partition import PARTITIONERS, STREAM_ROUTERS
+from repro.core.subgraph import PartitionedGraph, build_partitioned_graph
+from repro.stream.buffer import DeltaBuffer
+from repro.stream.delta import CompactStats, DeltaStats, EdgeDelta
+from repro.stream.delta import compact as _compact_pg
+from repro.stream.ingest import StreamContext, streaming_ingest
+
+__all__ = ["GraphSession", "SessionStats"]
+
+
+# --------------------------------------------------------------------------- #
+# cache keys
+# --------------------------------------------------------------------------- #
+def _program_key(program: VertexProgram):
+    """Hashable identity of a program's *static* structure: its type plus
+    every dataclass field (combiner/payload/dtype/tol/... — anything that
+    changes the traced computation). Programs carrying unhashable fields
+    fall back to per-instance identity (still cached, just not shared
+    across equal instances)."""
+    try:
+        fields = tuple((f.name, getattr(program, f.name))
+                       for f in dataclasses.fields(program))
+        hash(fields)
+        return (type(program), fields)
+    except TypeError:
+        return (type(program), id(program))
+
+
+def _canonical_params(params):
+    """Params pytree with every leaf a jnp array of a fixed dtype, so the
+    runner's input avals (and therefore the cache key) are stable across
+    python ints / np scalars / device arrays."""
+    if params is None:
+        return {}
+    return jax.tree.map(jnp.asarray, params)
+
+
+def _params_struct_key(params):
+    """Structure-only key (treedef + leaf shape/dtype): runners take params
+    as *traced* inputs, so different values share one executable."""
+    leaves, treedef = jax.tree.flatten(params)
+    return (treedef, tuple((tuple(l.shape), str(l.dtype)) for l in leaves))
+
+
+def _params_fingerprint(params):
+    """Value-level key — warm results are only reusable for the *same*
+    query (SSSP distances from source 0 say nothing about source 7)."""
+    leaves, treedef = jax.tree.flatten(params)
+    return (treedef, tuple((tuple(l.shape), str(l.dtype),
+                            np.asarray(l).tobytes()) for l in leaves))
+
+
+@dataclasses.dataclass
+class _WarmEntry:
+    """Last converged result of one (program, params) query.
+
+    ``global_values`` ([n_vertices(, K)], combiner-identity filled) survives
+    any membership change and is re-scattered through ``_warm_block`` when
+    needed; ``device_block`` ([P, v_max, K], the program's own result
+    layout) is the fast path — valid until a flush reshuffles local rows,
+    and carried across ``compact`` by ``remap_state``."""
+    global_values: np.ndarray
+    device_block: Optional[np.ndarray]
+    identity: Any
+    supersteps: int
+
+
+@dataclasses.dataclass
+class SessionStats:
+    """Serving-side counters across the session lifetime."""
+    queries: int = 0
+    cache_hits: int = 0
+    cache_misses: int = 0          # runner compilations
+    warm_queries: int = 0          # queries served from a previous result
+    flushes: int = 0               # delta batches applied to the host graph
+    compactions: int = 0
+    uploads: int = 0               # device pytree refreshes
+    compile_time_total: float = 0.0
+
+
+class _SessionBuffer(DeltaBuffer):
+    """DeltaBuffer whose flushes (manual *and* threshold-tripped) notify the
+    owning session, so auto-flushes inside ``update`` never leave the device
+    pytree or the warm cache stale."""
+
+    def __init__(self, session: "GraphSession", *args, **kwargs):
+        self._session = session
+        super().__init__(*args, **kwargs)
+
+    def flush(self, _auto: bool = False) -> Optional[DeltaStats]:
+        st = super().flush(_auto)
+        if st is not None:
+            self._session._on_flush(st)
+        return st
+
+
+# --------------------------------------------------------------------------- #
+class GraphSession:
+    """Resident-graph serving session over one ``PartitionedGraph``.
+
+    Construct from an existing partitioned graph (``GraphSession(pg, ...)``),
+    an in-memory ``Graph`` (``from_graph``) or an on-disk edge log
+    (``from_edge_log``). Pass ``mesh=`` to serve on the shard_map backend;
+    without a mesh the session transparently uses the simulator backend.
+
+    ``ctx`` (a ``StreamContext``) enables the mutation methods
+    (``update``/``flush``/``compact``); the factory constructors provide it
+    whenever the partitioner is a pure streaming router. A session without a
+    context is read-only (queries still cache and warm-start).
+    """
+
+    def __init__(self, pg: PartitionedGraph, *, ctx: Optional[StreamContext]
+                 = None, mesh=None, cfg: Optional[EngineConfig] = None,
+                 max_buffer_edges: Optional[int] = 4096,
+                 max_buffer_parts: Optional[int] = None, pad_multiple: int = 8):
+        self.pg = pg
+        self.ctx = ctx
+        self.mesh = mesh
+        self.cfg = self._normalize_cfg(cfg or EngineConfig())
+        self.pad_multiple = pad_multiple
+        self.stats = SessionStats()
+        self.buffer = None if ctx is None else _SessionBuffer(
+            self, pg, ctx, max_edges=max_buffer_edges,
+            max_parts=max_buffer_parts, pad_multiple=pad_multiple)
+        self._device = None            # resident stacked DeviceSubgraph
+        self._device_version = -1
+        self._host_version = 0         # bumped by every applied flush/compact
+        self._runners: dict = {}       # cache key -> (executable, shape_key)
+        self._warm: dict = {}          # (program key, params value) -> entry
+        self._identity_blocks: dict = {}  # cold-start [P,v_max,K] blocks
+        self._keepalive: dict = {}     # id-keyed programs pinned alive
+
+    # ------------------------------------------------------------------ #
+    # constructors
+    # ------------------------------------------------------------------ #
+    @classmethod
+    def from_graph(cls, g: Graph, n_parts: int, partitioner: str = "cdbh",
+                   *, seed: int = 0, mesh=None,
+                   cfg: Optional[EngineConfig] = None,
+                   pad_multiple: int = 8, **kwargs) -> "GraphSession":
+        """Partition + build + open a session in one call (the session-level
+        ``partition_and_build``). Pure streaming partitioners also get a
+        ``StreamContext`` so the update lifecycle works out of the box."""
+        part = PARTITIONERS[partitioner](g, n_parts, seed=seed)
+        pg = build_partitioned_graph(g, part, n_parts,
+                                     pad_multiple=pad_multiple)
+        ctx = None
+        if partitioner in STREAM_ROUTERS:
+            ctx = StreamContext(partitioner=partitioner, n_parts=n_parts,
+                                seed=seed, n_vertices=g.n_vertices,
+                                routing_degrees=g.total_degrees())
+        return cls(pg, ctx=ctx, mesh=mesh, cfg=cfg,
+                   pad_multiple=pad_multiple, **kwargs)
+
+    @classmethod
+    def from_edge_log(cls, log, n_parts: int, partitioner: str = "cdbh",
+                      *, seed: int = 0, mesh=None,
+                      cfg: Optional[EngineConfig] = None,
+                      pad_multiple: int = 8, **kwargs) -> "GraphSession":
+        """Open a session over a chunked on-disk edge log via the two-pass
+        out-of-core ingest (docs/STREAMING.md). ``sess.ingest_stats`` holds
+        the ingest throughput/memory accounting."""
+        pg, ctx, stats = streaming_ingest(log, n_parts, partitioner,
+                                          seed=seed,
+                                          pad_multiple=pad_multiple)
+        sess = cls(pg, ctx=ctx, mesh=mesh, cfg=cfg,
+                   pad_multiple=pad_multiple, **kwargs)
+        sess.ingest_stats = stats
+        return sess
+
+    # ------------------------------------------------------------------ #
+    def _normalize_cfg(self, cfg: EngineConfig) -> EngineConfig:
+        """The session picks the backend from mesh presence — a config asking
+        for shard_map without a mesh falls back to the simulator
+        transparently (and vice versa), so one call site serves both."""
+        backend = "sim" if self.mesh is None else "shard_map"
+        if cfg.backend != backend:
+            cfg = dataclasses.replace(cfg, backend=backend)
+        return cfg
+
+    @property
+    def shape_key(self):
+        """The padded device shapes a compiled runner is specialized to."""
+        pg = self.pg
+        return (pg.n_parts, pg.v_max, pg.e_max, pg.n_slots,
+                pg.vlabel is not None)
+
+    def device_graph(self):
+        """The resident stacked [P, ...] DeviceSubgraph pytree, re-uploaded
+        only when the host graph changed since the last upload."""
+        if self._device is None or self._device_version != self._host_version:
+            self._device = _device_subgraph(self.pg)
+            self._device_version = self._host_version
+            self.stats.uploads += 1
+        return self._device
+
+    # ------------------------------------------------------------------ #
+    # query path
+    # ------------------------------------------------------------------ #
+    def query(self, program: VertexProgram, params=None, *, warm="auto",
+              cfg: Optional[EngineConfig] = None):
+        """Run ``program`` over the resident graph; returns
+        ``(results, ExecutionStats)`` exactly like the low-level ``run``
+        (results in the [P, v_max(, K)] local layout; ``self.pg.collect``
+        maps them to global ids).
+
+        ``warm`` — ``"auto"`` (default): monotone programs restart from this
+        (program, params) pair's last converged result whenever one is still
+        sound (every flush since was insert-only); ``False``: force a cold
+        start; ``True``: require a warm start and raise ``ValueError`` when
+        none is available (non-monotone program, no previous result, or a
+        deleting flush invalidated it).
+
+        ``cfg`` overrides the session config for this query (e.g. the
+        vertex-centric baseline ``EngineConfig(mode="vc")``); the backend
+        still follows the session's mesh. ``cfg.trace=True`` queries
+        delegate to the uncached ``run_sim`` trace loop (per-superstep stats
+        and checkpointing are job-level features, not serving features).
+
+        Buffered updates are flushed first: a query always sees every
+        mutation accepted by ``update``.
+        """
+        if self.buffer is not None and len(self.buffer):
+            self.flush()
+        cfg = self._normalize_cfg(cfg or self.cfg)
+        params_c = _canonical_params(params)
+        pkey = _program_key(program)
+        if isinstance(pkey[1], int):
+            # id()-based fallback key: pin the program object so a freed id
+            # can never be reused by a different program and hit this entry
+            self._keepalive[pkey[1]] = program
+
+        entry = wkey = None
+        if program.monotone:
+            wkey = (pkey, _params_fingerprint(params_c))
+            entry = self._warm.get(wkey)
+        if warm is True:
+            if not program.monotone:
+                raise ValueError(
+                    f"warm=True: {type(program).__name__} is not monotone — "
+                    "warm starts are only sound for programs whose values "
+                    "tighten under the combiner (program.monotone)")
+            if entry is None:
+                raise ValueError(
+                    "warm=True but no previous converged result is cached "
+                    "for this (program, params) query (or a deleting flush "
+                    "invalidated it); use warm='auto' to fall back to cold")
+        use_warm = entry is not None and warm in ("auto", True)
+
+        if cfg.trace:
+            init = entry.global_values if use_warm else None
+            return run_sim(program, self.pg, params, cfg, init_state=init)
+
+        self.stats.queries += 1
+        warm_in = bool(program.monotone)
+        args = (self.device_graph(), params_c)
+        if warm_in:
+            args += (self._warm_arg(program, entry, use_warm),)
+        compiled, compile_time = self._get_runner(program, pkey, params_c,
+                                                  cfg, warm_in, args)
+        t0 = time.perf_counter()
+        out = compiled(*args)
+        res, steps, tot_msgs, sweeps = jax.block_until_ready(out)
+        wall = time.perf_counter() - t0
+        if use_warm:
+            self.stats.warm_queries += 1
+
+        res = np.asarray(res)
+        stats = self._execution_stats(program, cfg, int(steps),
+                                      int(tot_msgs), np.asarray(sweeps),
+                                      wall, compile_time)
+        if program.monotone:
+            self._remember(program, wkey, res, stats.supersteps)
+        return res, stats
+
+    def _warm_arg(self, program, entry, use_warm):
+        """[P, v_max, K] warm block: the cached result when warming, the
+        combiner identity (a structural no-op for ``warm_init``) when cold —
+        so both paths share one compiled runner."""
+        pg = self.pg
+        K = program.payload
+        if not use_warm:
+            # constant per (shapes, dtype, identity): keep it resident so
+            # repeated cold queries skip the rebuild + host->device transfer
+            ikey = (pg.n_parts, pg.v_max, K, str(np.dtype(program.dtype)),
+                    float(program.identity))
+            blk = self._identity_blocks.get(ikey)
+            if blk is None:
+                blk = jnp.full((pg.n_parts, pg.v_max, K), program.identity,
+                               dtype=program.dtype)
+                self._identity_blocks[ikey] = blk
+            return blk
+        blk = entry.device_block
+        if blk is not None and blk.shape == (pg.n_parts, pg.v_max, K):
+            return jnp.asarray(blk)
+        return jnp.asarray(_warm_block(program, pg, entry.global_values))
+
+    def _get_runner(self, program, pkey, params_c, cfg, warm_in, args):
+        """AOT-compile (trace + lower + compile, once) or fetch the cached
+        executable for this (program, param structure, config, shapes)."""
+        key = (pkey, _params_struct_key(params_c), cfg, self.shape_key,
+               warm_in)
+        hit = self._runners.get(key)
+        if hit is not None:
+            self.stats.cache_hits += 1
+            return hit[0], 0.0
+        self.stats.cache_misses += 1
+        t0 = time.perf_counter()
+        if cfg.backend == "sim":
+            fn = make_sim_runner(program, cfg, self.pg.n_slots,
+                                 warm_start=warm_in)
+            compiled = jax.jit(fn).lower(*args).compile()
+        else:
+            self._check_mesh(cfg)
+            go = make_bsp_runner(program, self.mesh, cfg, self.pg.n_slots,
+                                 params=params_c,
+                                 has_vlabel=self.pg.vlabel is not None,
+                                 warm_start=warm_in, params_as_input=True)
+            # session args are (sgs, params[, warm]); the shard runner takes
+            # (sgs[, warm], params) — reorder inside the jitted wrapper
+            with self.mesh:
+                compiled = jax.jit(
+                    lambda sgs, params, *w: go(*((sgs,) + w + (params,)))
+                ).lower(*args).compile()
+        compile_time = time.perf_counter() - t0
+        self.stats.compile_time_total += compile_time
+        self._runners[key] = (compiled, self.shape_key)
+        return compiled, compile_time
+
+    def _check_mesh(self, cfg: EngineConfig):
+        sub = tuple(cfg.subgraph_axes)
+        edge = tuple(cfg.edge_axes)
+        n_sub = int(np.prod([self.mesh.shape[a] for a in sub]))
+        n_edge = int(np.prod([self.mesh.shape[a] for a in edge])) \
+            if edge else 1
+        assert self.pg.n_parts == n_sub, (self.pg.n_parts, n_sub)
+        assert self.pg.e_max % n_edge == 0, \
+            "pad edges to a multiple of the edge axes"
+
+    def _execution_stats(self, program, cfg, steps, msgs, sweeps, wall,
+                         compile_time) -> ExecutionStats:
+        pg = self.pg
+        K = program.payload
+        itemsize = np.dtype(program.dtype).itemsize
+        if cfg.backend == "sim":
+            total_bytes = steps * (pg.n_slots + 1) * K * itemsize * pg.n_parts
+        else:
+            n_edge = int(np.prod([self.mesh.shape[a]
+                                  for a in cfg.edge_axes])) \
+                if cfg.edge_axes else 1
+            total_bytes = steps * _exchange_bytes_per_step(
+                cfg, pg.n_slots, K, program.dtype, pg.n_parts, n_edge)
+        return ExecutionStats(
+            supersteps=steps, total_messages=msgs,
+            processed_edges=int((sweeps.astype(np.int64)
+                                 * pg.edges_per_part.astype(np.int64)).sum()),
+            total_bytes=total_bytes, wall_time=wall,
+            compile_time=compile_time)
+
+    def _remember(self, program, wkey, res, supersteps):
+        """Cache this converged result as the warm seed for the next
+        identical query (padded rows sanitized to the combiner identity)."""
+        pg = self.pg
+        blk = res if res.ndim == 3 else res[..., None]
+        blk = np.where(pg.vmask[..., None], blk,
+                       np.asarray(program.identity, blk.dtype))
+        self._warm[wkey] = _WarmEntry(
+            global_values=pg.collect(res, fill=program.identity),
+            device_block=blk, identity=program.identity,
+            supersteps=supersteps)
+
+    # ------------------------------------------------------------------ #
+    # streaming lifecycle
+    # ------------------------------------------------------------------ #
+    def _require_buffer(self, what: str) -> DeltaBuffer:
+        if self.buffer is None:
+            raise ValueError(
+                f"{what} needs a StreamContext (this session was opened "
+                "from a bare PartitionedGraph, or with a non-streamable "
+                "partitioner); use GraphSession.from_graph/from_edge_log "
+                "with a pure routing partitioner, or pass ctx=")
+        return self.buffer
+
+    def update(self, adds=None, deletes=None) -> None:
+        """Enqueue edge mutations. ``adds`` is ``(src, dst)`` or
+        ``(src, dst, w)`` (array-likes of global ids), ``deletes`` is
+        ``(src, dst)``; an ``EdgeDelta`` is accepted for either role via
+        ``push``. Ops coalesce in the internal ``DeltaBuffer`` and are
+        applied on ``flush()`` (or automatically when a buffer threshold
+        trips — the session notices either way)."""
+        buf = self._require_buffer("update()")
+        if isinstance(adds, EdgeDelta) or isinstance(deletes, EdgeDelta):
+            raise TypeError("pass an EdgeDelta through session.push()")
+        if deletes is not None:
+            buf.delete(*deletes[:2])
+        if adds is not None:
+            buf.add(*adds[:3])
+
+    def push(self, delta: EdgeDelta) -> None:
+        """Enqueue a whole producer ``EdgeDelta`` (deletes-then-adds)."""
+        self._require_buffer("push()").push(delta)
+
+    def flush(self) -> Optional[DeltaStats]:
+        """Apply every buffered mutation as one coalesced patch. Returns the
+        applied patch's ``DeltaStats`` — if a buffer threshold already
+        auto-flushed everything during ``update``, the stats of that last
+        applied patch (never None once any patch has been applied; None only
+        when nothing was ever buffered). The device pytree refreshes lazily
+        on the next query; compiled runners survive unless the padded shapes
+        grew."""
+        buf = self._require_buffer("flush()")
+        st = buf.flush()
+        return st if st is not None else buf.last_flush
+
+    def _on_flush(self, st: DeltaStats) -> None:
+        self._host_version += 1
+        self.stats.flushes += 1
+        if st.warm_start_safe:
+            # insert-only growth: previous results stay valid upper bounds,
+            # but local rows may have been reshuffled — keep the global
+            # values, drop the device-layout fast path.
+            for e in self._warm.values():
+                e.device_block = None
+        else:
+            # deletions can loosen values: nothing cached is sound anymore
+            self._warm.clear()
+        self._evict_stale_runners()
+
+    def compact(self) -> CompactStats:
+        """Evict edge-less members, shrink the padded capacities, and carry
+        every cached warm result across the re-layout (global values are
+        layout-independent; device blocks move through ``remap_state``)."""
+        if self.ctx is None:
+            self._require_buffer("compact()")
+        if self.buffer is not None and len(self.buffer):
+            self.flush()
+        cs = _compact_pg(self.pg, self.ctx, pad_multiple=self.pad_multiple)
+        self._host_version += 1
+        self.stats.compactions += 1
+        for e in self._warm.values():
+            if e.device_block is not None:
+                e.device_block = cs.remap_state(e.device_block,
+                                                fill=e.identity)
+        self._evict_stale_runners()
+        return cs
+
+    def _evict_stale_runners(self) -> None:
+        """Drop executables specialized to padded shapes the graph no longer
+        has (growth via flush, shrink via compact). Shape-preserving patches
+        evict nothing — the whole point of the cache."""
+        cur = self.shape_key
+        self._runners = {k: v for k, v in self._runners.items()
+                         if v[1] == cur}
+        self._identity_blocks = {
+            k: v for k, v in self._identity_blocks.items()
+            if k[:2] == (self.pg.n_parts, self.pg.v_max)}
