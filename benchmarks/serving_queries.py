@@ -9,8 +9,17 @@ latency with ``compile_time == 0``. Also times the update path: a
 shape-preserving ``update+flush`` keeps the cache warm, so the post-update
 query is patch + execute, no recompile.
 
+``--grow`` adds the shape-bucket section (docs/ARCHITECTURE.md): interleaved
+insert-flush/query cycles on a *growing* power-law graph, run once with the
+bucketed ``ShapePolicy`` (session default) and once with
+``ShapePolicy.exact()`` (the pre-bucket behavior), reporting per-cycle
+recompile counts and p50 query latency. The bucketed session must reach a
+steady state with **zero** recompiles per cycle while the exact session
+recompiles on (nearly) every growth flush.
+
     PYTHONPATH=src python -m benchmarks.serving_queries [--scale 14]
-    PYTHONPATH=src python -m benchmarks.serving_queries --smoke   # CI
+    PYTHONPATH=src python -m benchmarks.serving_queries --grow
+    PYTHONPATH=src python -m benchmarks.serving_queries --smoke --grow  # CI
 """
 from __future__ import annotations
 
@@ -21,7 +30,8 @@ import numpy as np
 
 from benchmarks.common import save, table
 from repro.algos import ConnectedComponents, PageRank, SSSP
-from repro.graphgen import kronecker_graph
+from repro.core import ShapePolicy
+from repro.graphgen import kronecker_graph, powerlaw_graph
 from repro.session import GraphSession
 
 
@@ -106,6 +116,60 @@ def bench_update_query(sess, n_cycles):
             "update_cycle_recompiles": int(recompiles)}
 
 
+def bench_grow(n0, n_parts, n_cycles, per_cycle, smoke):
+    """Growing-graph serving: each cycle attaches ``per_cycle`` brand-new
+    vertices (plus edges onto random existing ones) and immediately queries
+    SSSP — the continuous-update regime DRONE targets, where skewed degree
+    growth makes shape churn the common case. Run twice: bucketed shapes
+    (session default) vs exact padding (HEAD behavior before bucketing)."""
+    policies = [("bucketed", ShapePolicy()), ("exact", ShapePolicy.exact())]
+    rows, recs = [], {}
+    for name, policy in policies:
+        g = powerlaw_graph(n0, avg_degree=8, seed=11,
+                           weighted=True).as_undirected()
+        sess = GraphSession.from_graph(g, n_parts, "cdbh",
+                                       shape_policy=policy)
+        sess.query(SSSP(), {"source": 0})            # warm the cache
+        rng = np.random.default_rng(2)
+        lat, tail = [], []
+        for c in range(n_cycles):
+            nv = sess.pg.n_vertices
+            new = np.arange(nv, nv + per_cycle, dtype=np.int64)
+            anchors = rng.integers(0, nv, per_cycle).astype(np.int64)
+            w = rng.uniform(1, 5, per_cycle).astype(np.float32)
+            sess.update(adds=(np.concatenate([anchors, new]),
+                              np.concatenate([new, anchors]),
+                              np.concatenate([w, w])))
+            sess.flush()
+            _, st = sess.query(SSSP(), {"source": 0})     # warm="auto"
+            lat.append(st.wall_time)
+            tail.append(int(st.compile_time > 0.0))
+        recompile_cycles = sum(tail)
+        p50, p95 = _quantiles(lat)
+        steady = n_cycles - (max(i for i, r in enumerate(tail) if r) + 1) \
+            if any(tail) else n_cycles
+        rows.append([name, recompile_cycles, steady,
+                     f"{sess.stats.compile_time_total:.2f}",
+                     f"{p50*1e3:.0f}", f"{p95*1e3:.0f}",
+                     f"{sess.pg.v_max}/{sess.pg.e_max}"])
+        recs[f"grow_{name}_recompile_cycles"] = int(recompile_cycles)
+        recs[f"grow_{name}_steady_cycles"] = int(steady)
+        recs[f"grow_{name}_p50_ms"] = p50 * 1e3
+        recs[f"grow_{name}_compile_total_s"] = sess.stats.compile_time_total
+    table(f"Growing-graph serving ({n_cycles} cycles x {per_cycle} new "
+          f"vertices, P={n_parts})",
+          ["policy", "recompile cycles", "steady tail", "compile s",
+           "p50 ms", "p95 ms", "v_max/e_max"], rows)
+    if smoke:
+        # acceptance: buckets amortize — O(log growth) recompiles and a
+        # zero-recompile steady state; exact recompiles ~every growth flush
+        assert recs["grow_bucketed_recompile_cycles"] \
+            < recs["grow_exact_recompile_cycles"], "buckets must win"
+        assert recs["grow_bucketed_steady_cycles"] >= 2, \
+            "bucketed serving must end in a 0-recompile steady state"
+    return recs
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", type=int, default=14,
@@ -114,12 +178,20 @@ def main():
     ap.add_argument("--repeat", type=int, default=10)
     ap.add_argument("--sources", type=int, default=20)
     ap.add_argument("--cycles", type=int, default=10)
+    ap.add_argument("--grow", action="store_true",
+                    help="add the growing-graph bucketed-vs-exact section")
+    ap.add_argument("--grow-n0", type=int, default=20_000,
+                    help="initial vertices for the --grow section")
+    ap.add_argument("--grow-cycles", type=int, default=16)
+    ap.add_argument("--grow-per-cycle", type=int, default=400,
+                    help="new vertices attached per --grow cycle")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny sizes for CI: exercise every path, skip scale")
     args = ap.parse_args()
     if args.smoke:
         args.scale, args.parts = 10, 8
         args.repeat, args.sources, args.cycles = 3, 5, 3
+        args.grow_n0, args.grow_cycles, args.grow_per_cycle = 3_000, 8, 120
 
     g = kronecker_graph(args.scale, seed=7)
     sess = GraphSession.from_graph(g, args.parts, "cdbh")
@@ -130,6 +202,9 @@ def main():
            "n_parts": args.parts, "smoke": args.smoke}
     rec.update(bench_query_latency(sess, args.repeat, args.sources))
     rec.update(bench_update_query(sess, args.cycles))
+    if args.grow:
+        rec.update(bench_grow(args.grow_n0, args.parts, args.grow_cycles,
+                              args.grow_per_cycle, args.smoke))
     rec["compile_time_total_s"] = sess.stats.compile_time_total
     rec["cache_misses"] = sess.stats.cache_misses
     rec["cache_hits"] = sess.stats.cache_hits

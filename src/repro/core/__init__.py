@@ -7,7 +7,8 @@ from repro.core.partition import (PARTITIONERS, STREAM_ROUTERS,
                                   cdbh_vertex_cut, greedy_edge_cut,
                                   grid_vertex_cut, random_hash_edge_cut,
                                   random_hash_vertex_cut)
-from repro.core.subgraph import (PartitionedGraph, assemble_partitioned_graph,
+from repro.core.subgraph import (PartitionedGraph, ShapePolicy,
+                                 assemble_partitioned_graph,
                                  build_partitioned_graph, frontier_election,
                                  recompute_frontier, repack_partitions)
 
@@ -17,7 +18,8 @@ __all__ = [
     "Graph", "ExecutionStats", "PartitionMetrics",
     "partition_metrics", "PARTITIONERS", "STREAM_ROUTERS", "cdbh_vertex_cut",
     "greedy_edge_cut", "grid_vertex_cut", "random_hash_edge_cut",
-    "random_hash_vertex_cut", "PartitionedGraph", "build_partitioned_graph",
+    "random_hash_vertex_cut", "PartitionedGraph", "ShapePolicy",
+    "build_partitioned_graph",
     "assemble_partitioned_graph", "frontier_election", "recompute_frontier",
     "repack_partitions", "partition_and_build",
 ]

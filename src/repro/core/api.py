@@ -25,7 +25,16 @@ import numpy as np
 
 
 class DeviceSubgraph(NamedTuple):
-    """Per-partition device arrays (one shard; no leading P dim)."""
+    """Per-partition device arrays (one shard; no leading P dim).
+
+    ``v_max``/``e_max`` are padded capacities chosen by a ``ShapePolicy``
+    (core/subgraph.py) — content fills a prefix, masks mark the rest. The
+    engine's exchange buffer may likewise be built on an over-provisioned
+    slot count >= the actual ``n_slots``: rows at and above the actual
+    count (including every vertex's ``slot`` sentinel) only ever hold the
+    combiner identity, which is what lets a serving session bucket all four
+    padded dims without retracing on in-bucket growth.
+    """
     esrc: jnp.ndarray     # [e_max] int32 local src
     edst: jnp.ndarray     # [e_max] int32 local dst (ascending)
     ew: jnp.ndarray       # [e_max] f32

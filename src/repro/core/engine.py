@@ -30,6 +30,26 @@ job. For serving — repeated queries, streaming updates, amortized
 compilation — use ``repro.session.GraphSession``, which keeps the device
 pytree resident and caches the compiled runners built by
 ``make_sim_runner``/``make_bsp_runner`` below.
+
+Invariants the runner builders guarantee (sessions and tests rely on them):
+
+  - **warm blocks are dtype-cast on entry** — ``_warm_block`` casts a
+    previous global result to ``program.dtype`` and fills padded rows with
+    the combiner identity *before* the array reaches either backend, so a
+    caller's float64 numpy result can never leak its dtype into the
+    compiled superstep loop (and force a retrace or an upcast sweep).
+  - **``n_slots`` may be over-provisioned** — a runner built with
+    ``n_slots >= `` the graph's actual frontier count is correct: slot rows
+    in ``[actual, n_slots)`` only ever receive identity contributions
+    (``scatter_combine`` routes unchanged/non-frontier vertices to identity)
+    and are never gathered by a live vertex, whose sentinel row is identity
+    too. ``GraphSession`` exploits this to build runners on *bucketed* slot
+    capacities that survive frontier re-elections.
+  - **the warm input is structural** — a runner either takes the
+    ``[P, v_max, K]`` warm block (``warm_start=True``; cold starts feed the
+    combiner identity) or does not take it at all; there is no silent
+    dropped-argument path, so a non-monotone program's cold start is
+    visible in the lowered HLO.
 """
 from __future__ import annotations
 

@@ -67,6 +67,8 @@ class ExecutionStats:
                                        # steady-state serving latency is
                                        # wall_time alone (one-shot run_* pay
                                        # trace cost inside wall_time as ever)
+    evicted_runners: int = 0           # LRU evictions this query's cache
+                                       # admission forced (GraphSession only)
     processed_edges: int = 0
 
     @property

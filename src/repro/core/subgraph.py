@@ -28,10 +28,19 @@ without ever materializing the global edge list:
   - ``build_partitioned_graph``  — the classic one-shot in-memory wrapper;
   - ``recompute_frontier``       — re-derive slots/masters in place after a
                                    membership patch (stream/delta.py).
+
+Padded capacities (``v_max``/``e_max``) are chosen by a ``ShapePolicy``.
+The default everywhere in this low-level layer is the exact policy (round
+the content maximum up to ``pad_multiple`` — the historical behavior, and
+what the bit-identical streaming-parity tests pin). Serving sessions pass a
+*bucketed* policy instead, so capacities land on a geometric bucket grid and
+a growing graph changes its padded shapes O(log growth) times instead of
+once per flush (docs/ARCHITECTURE.md, "shape-bucket lifecycle").
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Callable, Optional, Sequence
 
 import numpy as np
@@ -39,10 +48,104 @@ import numpy as np
 from repro.core.graph import Graph, splitmix64
 from repro.core.partition import route_vertices_rh
 
-__all__ = ["PartitionedGraph", "build_partitioned_graph",
+__all__ = ["PartitionedGraph", "ShapePolicy", "build_partitioned_graph",
            "frontier_election", "assemble_partitioned_graph",
            "partition_vertex_sets", "recompute_frontier",
            "repack_partitions", "localize_edges"]
+
+
+# --------------------------------------------------------------------------- #
+# Padded-shape policy
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class ShapePolicy:
+    """How content sizes become padded device capacities.
+
+    Every compiled runner is specialized to the padded shapes
+    ``(P, v_max, e_max, n_slots)``, so each distinct capacity costs one
+    trace+compile. ``bucket(n)`` rounds a content maximum up to the next
+    value of the geometric series ``pad_multiple * growth^k`` (each bucket
+    itself rounded to ``pad_multiple``): under streaming growth the
+    capacities change O(log growth) times instead of once per flush — the
+    jax_pallas analogue of amortizing per-partition setup cost across
+    queries in subgraph-centric engines (GoFFish, arXiv:1311.5949).
+
+    growth       geometric ratio between buckets; ``1.0`` disables
+                 bucketing (``bucket`` = exact round-up to ``pad_multiple``,
+                 the historical behavior — see ``ShapePolicy.exact``).
+    headroom     multiplier (>= 1) applied to the content size *before*
+                 bucketing, so capacity is re-chosen while there is still
+                 slack rather than exactly at overflow.
+    pad_multiple every capacity is a multiple of this (device tiling).
+    bucket_slots also bucket the SBS slot count fed to the runners.
+                 ``n_slots`` is not a host-array dimension, only the
+                 compiled exchange-buffer height, and it moves on *every*
+                 frontier re-election — without bucketing it is the main
+                 source of shape churn. Padded slot rows only ever hold the
+                 combiner identity, so over-provisioning is sound.
+    """
+
+    growth: float = 2.0
+    headroom: float = 1.0
+    pad_multiple: int = 8
+    bucket_slots: bool = True
+
+    def __post_init__(self):
+        if self.growth < 1.0:
+            raise ValueError(f"ShapePolicy.growth must be >= 1.0, got "
+                             f"{self.growth}")
+        if self.headroom < 1.0:
+            raise ValueError(f"ShapePolicy.headroom must be >= 1.0, got "
+                             f"{self.headroom}")
+        if self.pad_multiple < 1:
+            raise ValueError(f"ShapePolicy.pad_multiple must be >= 1, got "
+                             f"{self.pad_multiple}")
+
+    @classmethod
+    def exact(cls, pad_multiple: int = 8) -> "ShapePolicy":
+        """The no-bucketing legacy policy: capacities are the content
+        maximum rounded up to ``pad_multiple``, slot counts are exact."""
+        return cls(growth=1.0, headroom=1.0, pad_multiple=pad_multiple,
+                   bucket_slots=False)
+
+    # ------------------------------------------------------------------ #
+    def _round(self, n: int) -> int:
+        return int(-(-max(n, 1) // self.pad_multiple) * self.pad_multiple)
+
+    def bucket(self, n: int) -> int:
+        """Smallest admissible capacity >= ``n * headroom`` (the bucket
+        floor). Compaction uses the same function, so shrink-then-regrow
+        traffic inside one bucket keeps the padded shapes — and therefore
+        the compiled runners — stable."""
+        need = max(1, int(math.ceil(max(n, 1) * self.headroom)))
+        if self.growth <= 1.0:
+            return self._round(need)
+        b = self.pad_multiple
+        while b < need:
+            b = self._round(int(math.ceil(b * self.growth)))
+        return b
+
+    def slot_capacity(self, n_slots: int) -> int:
+        """Exchange-buffer slot count a runner is built with. Slots in
+        ``[n_slots, capacity)`` receive only identity contributions and are
+        never gathered by a live vertex, so the padding is invisible to
+        results (it is all-reduced, though — bytes are billed on the padded
+        height)."""
+        if not self.bucket_slots or self.growth <= 1.0:
+            return int(n_slots)
+        return self.bucket(n_slots)
+
+
+def resolve_shape_policy(shape_policy: Optional[ShapePolicy],
+                         pad_multiple: int) -> ShapePolicy:
+    """Default every low-level builder to the exact legacy policy; callers
+    that want buckets (GraphSession) pass one explicitly. An explicit
+    policy always wins: it carries its own ``pad_multiple``, and the bare
+    ``pad_multiple`` parameter the builders keep for backward compatibility
+    is consulted only when no policy is given."""
+    if shape_policy is None:
+        return ShapePolicy.exact(pad_multiple)
+    return shape_policy
 
 
 def _pad_to(arr: np.ndarray, n: int, fill) -> np.ndarray:
@@ -197,6 +300,7 @@ def assemble_partitioned_graph(
         load_edges: Callable[[int], tuple],
         out_degrees: np.ndarray, in_degrees: np.ndarray,
         *, pad_multiple: int = 8,
+        shape_policy: Optional[ShapePolicy] = None,
         edge_part: Optional[np.ndarray] = None) -> PartitionedGraph:
     """Fill the dense padded arrays.
 
@@ -204,18 +308,19 @@ def assemble_partitioned_graph(
     ids, in their original stream order; only one partition's edge list is
     resident at a time, so callers can stream from spill shards
     (``edge_counts`` pre-sizes ``e_max`` without loading anything).
+
+    ``shape_policy`` picks ``v_max``/``e_max`` from the content maxima;
+    omitted, it is ``ShapePolicy.exact(pad_multiple)``.
     """
     P = n_parts
+    policy = resolve_shape_policy(shape_policy, pad_multiple)
     frontier_gvid, slot_of_gvid, masters = frontier_election(
         part_vertices, n_vertices)
     n_slots = int(frontier_gvid.shape[0])
 
-    def _round(n):
-        return int(-(-max(n, 1) // pad_multiple) * pad_multiple)
-
     vcounts = np.array([lv.shape[0] for lv in part_vertices], dtype=np.int64)
-    v_max = _round(int(vcounts.max()) if P else 1)
-    e_max = _round(int(np.max(edge_counts)) if P else 1)
+    v_max = policy.bucket(int(vcounts.max()) if P else 1)
+    e_max = policy.bucket(int(np.max(edge_counts)) if P else 1)
 
     gvid = np.full((P, v_max), -1, dtype=np.int64)
     vmask = np.zeros((P, v_max), dtype=bool)
@@ -264,6 +369,7 @@ def assemble_partitioned_graph(
 # --------------------------------------------------------------------------- #
 def build_partitioned_graph(g: Graph, edge_part: np.ndarray, n_parts: int,
                             *, pad_multiple: int = 8,
+                            shape_policy: Optional[ShapePolicy] = None,
                             include_isolated: bool = True) -> PartitionedGraph:
     edge_part = np.asarray(edge_part, dtype=np.int32)
     assert edge_part.shape == g.src.shape
@@ -286,7 +392,7 @@ def build_partitioned_graph(g: Graph, edge_part: np.ndarray, n_parts: int,
     return assemble_partitioned_graph(
         n_parts, g.n_vertices, g.n_edges, part_vertices, counts, load_edges,
         g.out_degrees(), g.in_degrees(), pad_multiple=pad_multiple,
-        edge_part=edge_part)
+        shape_policy=shape_policy, edge_part=edge_part)
 
 
 # --------------------------------------------------------------------------- #
@@ -295,12 +401,17 @@ def build_partitioned_graph(g: Graph, edge_part: np.ndarray, n_parts: int,
 def repack_partitions(pg: PartitionedGraph,
                       part_vertices: Sequence[np.ndarray],
                       part_edges: Sequence[tuple],
-                      *, pad_multiple: int = 8) -> np.ndarray:
+                      *, pad_multiple: int = 8,
+                      shape_policy: Optional[ShapePolicy] = None
+                      ) -> np.ndarray:
     """Rebuild ``pg``'s dense padded arrays in place from explicit
     per-partition membership (sorted unique global ids) and edge lists
     ``(src, dst, w)`` in global ids, re-deriving ``v_max``/``e_max`` from the
     new content — capacities *shrink* when the content does, unlike the
-    grow-only delta path. Frontier slots and masters are re-elected from the
+    grow-only delta path. Under a bucketed ``shape_policy`` they shrink to
+    the **bucket floor** (the smallest admissible bucket), not the exact
+    minimum, so compact-then-regrow traffic inside one bucket keeps the
+    padded shapes stable. Frontier slots and masters are re-elected from the
     new membership; per-vertex tables (degrees, labels) are carried through
     their global ids.
 
@@ -310,12 +421,12 @@ def repack_partitions(pg: PartitionedGraph,
     """
     P = pg.n_parts
     old_v_max = pg.v_max
+    policy = resolve_shape_policy(shape_policy, pad_multiple)
 
-    def _round(n):
-        return int(-(-max(n, 1) // pad_multiple) * pad_multiple)
-
-    new_v_max = _round(max((lv.shape[0] for lv in part_vertices), default=1))
-    new_e_max = _round(max((e[0].shape[0] for e in part_edges), default=1))
+    new_v_max = policy.bucket(
+        max((lv.shape[0] for lv in part_vertices), default=1))
+    new_e_max = policy.bucket(
+        max((e[0].shape[0] for e in part_edges), default=1))
 
     # global per-vertex tables, read from the old replicas (all agree)
     sel = pg.vmask

@@ -13,23 +13,34 @@ five modules. ``GraphSession`` owns all of that:
     across queries, re-uploaded only when the host graph actually changed;
   - ``query(program, params)`` goes through a **compiled-runner cache**
     keyed by (program static fields, parameter *structure*, EngineConfig,
-    padded shapes P/v_max/e_max/n_slots) — repeated queries, multi-algorithm
-    traffic and different parameter values (any SSSP source) all reuse one
-    AOT-compiled executable with zero retraces;
+    bucketed padded shapes P/v_max/e_max/slot_capacity) — repeated queries,
+    multi-algorithm traffic and different parameter values (any SSSP
+    source) all reuse one AOT-compiled executable with zero retraces;
   - each converged result of a monotone program is remembered and
     **auto-warm-starts** the next identical query after insert-only graph
     growth (``warm="auto"``);
   - the streaming lifecycle is folded in as methods: ``update`` routes
     through an internal coalescing ``DeltaBuffer``, ``flush`` applies the
-    patch and refreshes the device pytree (invalidating runner-cache entries
-    only when the padded shapes actually grew), ``compact`` shrinks the
-    padded capacities and carries every cached warm result across the
-    re-layout via ``CompactStats.remap_state``.
+    patch and refreshes the device pytree, ``compact`` shrinks the padded
+    capacities and carries every cached warm result across the re-layout
+    via ``CompactStats.remap_state``;
+  - padded shapes follow a **bucketed ShapePolicy** (geometric rounding of
+    ``v_max``/``e_max`` and of the SBS slot count, default growth 2x): a
+    flush that stays inside the current bucket keeps the resident pytree
+    layout and re-hits the compiled runner with zero retraces, so a growing
+    graph compiles O(log growth) runners instead of O(flushes);
+  - the runner cache is **bounded with LRU eviction** (``max_runners``):
+    evicted entries recompile transparently on re-query, and eviction
+    counts are surfaced in ``SessionStats`` / per-query
+    ``ExecutionStats.evicted_runners`` / ``cache_info()``; warm-result
+    memory is bounded the same way (``max_warm_entries``), which also caps
+    what a flush spends carrying warm device blocks across a patch.
 
 Monotone programs are always compiled with the warm input: a cold start is
 served by a combiner-identity block (``warm_init`` tightening against the
 identity is a no-op), so cold and warm queries share one executable and a
-post-growth warm query retraces only when the padded shapes grew.
+post-growth warm query retraces only when the padded shapes crossed a
+bucket boundary.
 
     sess = GraphSession.from_graph(g, n_parts=16)         # or from_edge_log
     dist, st = sess.query(SSSP(), {"source": 0})          # compiles once
@@ -41,11 +52,31 @@ post-growth warm query retraces only when the padded shapes grew.
 Backend selection is by mesh: construct with ``mesh=`` for the shard_map
 production backend, without for the single-process simulator — the same
 session code path serves both.
+
+Invariants the session owns (docs/API.md "Caching rules" restates them):
+
+  - **cache key fields** — a compiled runner is keyed by (program dataclass
+    fields, param pytree *structure*, ``EngineConfig``, padded shape key
+    ``(P, v_max, e_max, slot_capacity, has_vlabel)``, warm-input flag);
+    parameter *values* are traced inputs and never key anything.
+  - **warm entries are dtype-cast on entry** — a cached global result is
+    cast to ``program.dtype`` before it reaches either backend
+    (``engine._warm_block``), so a float64 numpy result can never leak its
+    dtype into the compiled superstep loop and force a retrace.
+  - **warm soundness** — insert-only flushes keep every cached converged
+    result (values remain valid bounds, rows carried via
+    ``DeltaStats.remap_state``); any deleting flush drops them all;
+    ``compact`` changes layout, never the graph, so warm results survive it
+    through ``CompactStats.remap_state``.
+  - **slot-capacity padding is invisible** — runners are built with
+    ``slot_capacity >= pg.n_slots``; the padded exchange rows only ever
+    hold the combiner identity and are never gathered by a live vertex.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
+from collections import OrderedDict
 from typing import Any, Optional
 
 import jax
@@ -59,13 +90,14 @@ from repro.core.api import VertexProgram
 from repro.core.graph import Graph
 from repro.core.metrics import ExecutionStats
 from repro.core.partition import PARTITIONERS, STREAM_ROUTERS
-from repro.core.subgraph import PartitionedGraph, build_partitioned_graph
+from repro.core.subgraph import (PartitionedGraph, ShapePolicy,
+                                 build_partitioned_graph)
 from repro.stream.buffer import DeltaBuffer
 from repro.stream.delta import CompactStats, DeltaStats, EdgeDelta
 from repro.stream.delta import compact as _compact_pg
 from repro.stream.ingest import StreamContext, streaming_ingest
 
-__all__ = ["GraphSession", "SessionStats"]
+__all__ = ["GraphSession", "SessionStats", "ShapePolicy"]
 
 
 # --------------------------------------------------------------------------- #
@@ -136,6 +168,20 @@ class SessionStats:
     compactions: int = 0
     uploads: int = 0               # device pytree refreshes
     compile_time_total: float = 0.0
+    cache_evictions_lru: int = 0   # runners dropped by the max_runners bound
+    cache_evictions_shape: int = 0  # runners dropped by a bucket change
+    warm_evictions: int = 0        # warm results dropped by max_warm_entries
+
+
+@dataclasses.dataclass
+class _RunnerEntry:
+    """One bounded-cache slot: the AOT-compiled executable plus the
+    introspection the LRU policy and ``cache_info`` report on."""
+    compiled: Any
+    shape_key: Any
+    program: str                   # program type name (display only)
+    compile_time: float = 0.0
+    hits: int = 0
 
 
 class _SessionBuffer(DeltaBuffer):
@@ -167,26 +213,48 @@ class GraphSession:
     (``update``/``flush``/``compact``); the factory constructors provide it
     whenever the partitioner is a pure streaming router. A session without a
     context is read-only (queries still cache and warm-start).
+
+    ``shape_policy`` governs the padded device shapes (docs/ARCHITECTURE.md,
+    "shape-bucket lifecycle"): the default is the bucketed
+    ``ShapePolicy()`` (geometric 2x buckets), which keeps the compiled
+    runners stable under streaming growth; pass ``ShapePolicy.exact()`` for
+    the tightest possible padding (one-shot analysis jobs, parity tests
+    against the low-level layer). Read-only sessions have frozen shapes, so
+    they never over-provision the slot capacity (and ``from_graph`` with a
+    non-streamable partitioner defaults to exact padding outright).
+    ``pad_multiple`` is a convenience for the default policy's tiling only —
+    an explicit ``shape_policy`` always wins (it carries its own
+    ``pad_multiple``). ``max_runners`` bounds the compiled-runner cache and
+    ``max_warm_entries`` the per-(program, params) warm-result memory, both
+    with LRU eviction (``None`` = unbounded); the warm bound also caps the
+    per-flush cost of carrying warm device blocks across a patch.
     """
 
     def __init__(self, pg: PartitionedGraph, *, ctx: Optional[StreamContext]
                  = None, mesh=None, cfg: Optional[EngineConfig] = None,
                  max_buffer_edges: Optional[int] = 4096,
-                 max_buffer_parts: Optional[int] = None, pad_multiple: int = 8):
+                 max_buffer_parts: Optional[int] = None,
+                 pad_multiple: Optional[int] = None,
+                 shape_policy: Optional[ShapePolicy] = None,
+                 max_runners: Optional[int] = 32,
+                 max_warm_entries: Optional[int] = 64):
         self.pg = pg
         self.ctx = ctx
         self.mesh = mesh
         self.cfg = self._normalize_cfg(cfg or EngineConfig())
-        self.pad_multiple = pad_multiple
+        self.shape_policy = self._resolve_policy(shape_policy, pad_multiple)
+        self.pad_multiple = self.shape_policy.pad_multiple
+        self.max_runners = max_runners
+        self.max_warm_entries = max_warm_entries
         self.stats = SessionStats()
         self.buffer = None if ctx is None else _SessionBuffer(
             self, pg, ctx, max_edges=max_buffer_edges,
-            max_parts=max_buffer_parts, pad_multiple=pad_multiple)
+            max_parts=max_buffer_parts, shape_policy=self.shape_policy)
         self._device = None            # resident stacked DeviceSubgraph
         self._device_version = -1
         self._host_version = 0         # bumped by every applied flush/compact
-        self._runners: dict = {}       # cache key -> (executable, shape_key)
-        self._warm: dict = {}          # (program key, params value) -> entry
+        self._runners: OrderedDict = OrderedDict()  # key -> _RunnerEntry (LRU)
+        self._warm: OrderedDict = OrderedDict()     # (pkey, params) -> entry
         self._identity_blocks: dict = {}  # cold-start [P,v_max,K] blocks
         self._keepalive: dict = {}     # id-keyed programs pinned alive
 
@@ -194,37 +262,57 @@ class GraphSession:
     # constructors
     # ------------------------------------------------------------------ #
     @classmethod
+    def _resolve_policy(cls, shape_policy, pad_multiple) -> ShapePolicy:
+        if shape_policy is not None:
+            return shape_policy
+        return ShapePolicy(pad_multiple=8 if pad_multiple is None
+                           else pad_multiple)
+
+    @classmethod
     def from_graph(cls, g: Graph, n_parts: int, partitioner: str = "cdbh",
                    *, seed: int = 0, mesh=None,
                    cfg: Optional[EngineConfig] = None,
-                   pad_multiple: int = 8, **kwargs) -> "GraphSession":
+                   pad_multiple: Optional[int] = None,
+                   shape_policy: Optional[ShapePolicy] = None,
+                   **kwargs) -> "GraphSession":
         """Partition + build + open a session in one call (the session-level
         ``partition_and_build``). Pure streaming partitioners also get a
-        ``StreamContext`` so the update lifecycle works out of the box."""
+        ``StreamContext`` so the update lifecycle works out of the box. The
+        graph is padded by the session's (bucketed-by-default)
+        ``shape_policy`` from the start, so the first flush already has
+        in-bucket slack."""
+        if shape_policy is None and partitioner not in STREAM_ROUTERS:
+            # no StreamContext means no update/flush path: the shapes are
+            # frozen for the session's lifetime, so buckets would only pay
+            # padding overhead without ever amortizing a recompile
+            shape_policy = ShapePolicy.exact(
+                8 if pad_multiple is None else pad_multiple)
+        policy = cls._resolve_policy(shape_policy, pad_multiple)
         part = PARTITIONERS[partitioner](g, n_parts, seed=seed)
-        pg = build_partitioned_graph(g, part, n_parts,
-                                     pad_multiple=pad_multiple)
+        pg = build_partitioned_graph(g, part, n_parts, shape_policy=policy)
         ctx = None
         if partitioner in STREAM_ROUTERS:
             ctx = StreamContext(partitioner=partitioner, n_parts=n_parts,
                                 seed=seed, n_vertices=g.n_vertices,
                                 routing_degrees=g.total_degrees())
-        return cls(pg, ctx=ctx, mesh=mesh, cfg=cfg,
-                   pad_multiple=pad_multiple, **kwargs)
+        return cls(pg, ctx=ctx, mesh=mesh, cfg=cfg, shape_policy=policy,
+                   **kwargs)
 
     @classmethod
     def from_edge_log(cls, log, n_parts: int, partitioner: str = "cdbh",
                       *, seed: int = 0, mesh=None,
                       cfg: Optional[EngineConfig] = None,
-                      pad_multiple: int = 8, **kwargs) -> "GraphSession":
+                      pad_multiple: Optional[int] = None,
+                      shape_policy: Optional[ShapePolicy] = None,
+                      **kwargs) -> "GraphSession":
         """Open a session over a chunked on-disk edge log via the two-pass
         out-of-core ingest (docs/STREAMING.md). ``sess.ingest_stats`` holds
         the ingest throughput/memory accounting."""
+        policy = cls._resolve_policy(shape_policy, pad_multiple)
         pg, ctx, stats = streaming_ingest(log, n_parts, partitioner,
-                                          seed=seed,
-                                          pad_multiple=pad_multiple)
-        sess = cls(pg, ctx=ctx, mesh=mesh, cfg=cfg,
-                   pad_multiple=pad_multiple, **kwargs)
+                                          seed=seed, shape_policy=policy)
+        sess = cls(pg, ctx=ctx, mesh=mesh, cfg=cfg, shape_policy=policy,
+                   **kwargs)
         sess.ingest_stats = stats
         return sess
 
@@ -239,10 +327,24 @@ class GraphSession:
         return cfg
 
     @property
+    def slot_capacity(self) -> int:
+        """SBS exchange-buffer height the runners are built with — the
+        bucketed ``pg.n_slots``. Frontier re-elections that stay inside the
+        slot bucket change nothing a compiled runner can see. A read-only
+        session (no mutation path) has a frozen frontier, so it pads
+        nothing."""
+        if self.buffer is None:
+            return int(self.pg.n_slots)
+        return self.shape_policy.slot_capacity(self.pg.n_slots)
+
+    @property
     def shape_key(self):
-        """The padded device shapes a compiled runner is specialized to."""
+        """The padded device shapes a compiled runner is specialized to.
+        All four dims are bucket values under the session's
+        ``shape_policy``, so the key — and with it the runner cache — is
+        stable across any flush that stays inside the current buckets."""
         pg = self.pg
-        return (pg.n_parts, pg.v_max, pg.e_max, pg.n_slots,
+        return (pg.n_parts, pg.v_max, pg.e_max, self.slot_capacity,
                 pg.vlabel is not None)
 
     def device_graph(self):
@@ -294,6 +396,8 @@ class GraphSession:
         if program.monotone:
             wkey = (pkey, _params_fingerprint(params_c))
             entry = self._warm.get(wkey)
+            if entry is not None:
+                self._warm.move_to_end(wkey)   # refresh LRU recency
         if warm is True:
             if not program.monotone:
                 raise ValueError(
@@ -316,8 +420,8 @@ class GraphSession:
         args = (self.device_graph(), params_c)
         if warm_in:
             args += (self._warm_arg(program, entry, use_warm),)
-        compiled, compile_time = self._get_runner(program, pkey, params_c,
-                                                  cfg, warm_in, args)
+        compiled, compile_time, evicted = self._get_runner(
+            program, pkey, params_c, cfg, warm_in, args)
         t0 = time.perf_counter()
         out = compiled(*args)
         res, steps, tot_msgs, sweeps = jax.block_until_ready(out)
@@ -329,6 +433,7 @@ class GraphSession:
         stats = self._execution_stats(program, cfg, int(steps),
                                       int(tot_msgs), np.asarray(sweeps),
                                       wall, compile_time)
+        stats.evicted_runners = evicted
         if program.monotone:
             self._remember(program, wkey, res, stats.supersteps)
         return res, stats
@@ -357,22 +462,27 @@ class GraphSession:
 
     def _get_runner(self, program, pkey, params_c, cfg, warm_in, args):
         """AOT-compile (trace + lower + compile, once) or fetch the cached
-        executable for this (program, param structure, config, shapes)."""
+        executable for this (program, param structure, config, shapes).
+        Returns ``(compiled, compile_time, n_lru_evictions)``; a hit
+        refreshes the entry's LRU position. Runners are built against the
+        bucketed ``slot_capacity``, not the exact ``pg.n_slots``."""
         key = (pkey, _params_struct_key(params_c), cfg, self.shape_key,
                warm_in)
         hit = self._runners.get(key)
         if hit is not None:
+            self._runners.move_to_end(key)
+            hit.hits += 1
             self.stats.cache_hits += 1
-            return hit[0], 0.0
+            return hit.compiled, 0.0, 0
         self.stats.cache_misses += 1
+        n_slots = self.slot_capacity
         t0 = time.perf_counter()
         if cfg.backend == "sim":
-            fn = make_sim_runner(program, cfg, self.pg.n_slots,
-                                 warm_start=warm_in)
+            fn = make_sim_runner(program, cfg, n_slots, warm_start=warm_in)
             compiled = jax.jit(fn).lower(*args).compile()
         else:
             self._check_mesh(cfg)
-            go = make_bsp_runner(program, self.mesh, cfg, self.pg.n_slots,
+            go = make_bsp_runner(program, self.mesh, cfg, n_slots,
                                  params=params_c,
                                  has_vlabel=self.pg.vlabel is not None,
                                  warm_start=warm_in, params_as_input=True)
@@ -384,8 +494,40 @@ class GraphSession:
                 ).lower(*args).compile()
         compile_time = time.perf_counter() - t0
         self.stats.compile_time_total += compile_time
-        self._runners[key] = (compiled, self.shape_key)
-        return compiled, compile_time
+        self._runners[key] = _RunnerEntry(
+            compiled=compiled, shape_key=self.shape_key,
+            program=type(program).__name__, compile_time=compile_time)
+        evicted = self._evict_lru(self._runners, self.max_runners,
+                                  "cache_evictions_lru")
+        return compiled, compile_time, evicted
+
+    def _evict_lru(self, cache: OrderedDict, bound: Optional[int],
+                   counter: str) -> int:
+        """Pop least-recently-used entries until ``cache`` fits ``bound``,
+        billing the named ``SessionStats`` counter and releasing any
+        program pins the evictions orphaned."""
+        evicted = 0
+        if bound is not None:
+            while len(cache) > bound:
+                cache.popitem(last=False)
+                evicted += 1
+        if evicted:
+            setattr(self.stats, counter,
+                    getattr(self.stats, counter) + evicted)
+            self._prune_keepalive()
+        return evicted
+
+    def _prune_keepalive(self) -> None:
+        """Release id-keyed program pins whose id no longer appears in any
+        runner-cache or warm-memory key: once nothing can look the id up,
+        the id-reuse hazard the pin guards against is gone, and keeping the
+        object would leak host memory on a bounded cache."""
+        if not self._keepalive:
+            return
+        live = {k[0][1] for k in self._runners} | \
+               {wk[0][1] for wk in self._warm}
+        self._keepalive = {i: p for i, p in self._keepalive.items()
+                           if i in live}
 
     def _check_mesh(self, cfg: EngineConfig):
         sub = tuple(cfg.subgraph_axes)
@@ -402,14 +544,17 @@ class GraphSession:
         pg = self.pg
         K = program.payload
         itemsize = np.dtype(program.dtype).itemsize
+        # bytes are billed on the bucketed exchange height the runner
+        # actually reduces, not the exact n_slots
+        n_slots = self.slot_capacity
         if cfg.backend == "sim":
-            total_bytes = steps * (pg.n_slots + 1) * K * itemsize * pg.n_parts
+            total_bytes = steps * (n_slots + 1) * K * itemsize * pg.n_parts
         else:
             n_edge = int(np.prod([self.mesh.shape[a]
                                   for a in cfg.edge_axes])) \
                 if cfg.edge_axes else 1
             total_bytes = steps * _exchange_bytes_per_step(
-                cfg, pg.n_slots, K, program.dtype, pg.n_parts, n_edge)
+                cfg, n_slots, K, program.dtype, pg.n_parts, n_edge)
         return ExecutionStats(
             supersteps=steps, total_messages=msgs,
             processed_edges=int((sweeps.astype(np.int64)
@@ -419,7 +564,11 @@ class GraphSession:
 
     def _remember(self, program, wkey, res, supersteps):
         """Cache this converged result as the warm seed for the next
-        identical query (padded rows sanitized to the combiner identity)."""
+        identical query (padded rows sanitized to the combiner identity),
+        evicting the least-recently-used result beyond
+        ``max_warm_entries`` — the bound that keeps warm host memory and
+        the per-flush remap cost independent of how many distinct queries
+        the session has ever served."""
         pg = self.pg
         blk = res if res.ndim == 3 else res[..., None]
         blk = np.where(pg.vmask[..., None], blk,
@@ -428,6 +577,8 @@ class GraphSession:
             global_values=pg.collect(res, fill=program.identity),
             device_block=blk, identity=program.identity,
             supersteps=supersteps)
+        self._warm.move_to_end(wkey)
+        self._evict_lru(self._warm, self.max_warm_entries, "warm_evictions")
 
     # ------------------------------------------------------------------ #
     # streaming lifecycle
@@ -467,7 +618,7 @@ class GraphSession:
         applied patch (never None once any patch has been applied; None only
         when nothing was ever buffered). The device pytree refreshes lazily
         on the next query; compiled runners survive unless the padded shapes
-        grew."""
+        crossed a bucket boundary."""
         buf = self._require_buffer("flush()")
         st = buf.flush()
         return st if st is not None else buf.last_flush
@@ -476,25 +627,32 @@ class GraphSession:
         self._host_version += 1
         self.stats.flushes += 1
         if st.warm_start_safe:
-            # insert-only growth: previous results stay valid upper bounds,
-            # but local rows may have been reshuffled — keep the global
-            # values, drop the device-layout fast path.
+            # insert-only growth: previous results stay valid upper bounds.
+            # Local rows reshuffle (and v_max may cross a bucket), but the
+            # patch's remap carries every device-layout block to the new
+            # layout — so warm="auto" memory survives bucket growth without
+            # falling back to the global-values rebuild.
             for e in self._warm.values():
-                e.device_block = None
+                if e.device_block is not None:
+                    e.device_block = st.remap_state(e.device_block,
+                                                    fill=e.identity)
         else:
             # deletions can loosen values: nothing cached is sound anymore
             self._warm.clear()
         self._evict_stale_runners()
 
     def compact(self) -> CompactStats:
-        """Evict edge-less members, shrink the padded capacities, and carry
-        every cached warm result across the re-layout (global values are
-        layout-independent; device blocks move through ``remap_state``)."""
+        """Evict edge-less members, shrink the padded capacities to the
+        session policy's **bucket floor**, and carry every cached warm
+        result across the re-layout (global values are layout-independent;
+        device blocks move through ``remap_state``). When the compacted
+        content still fits the current buckets the padded shapes — and every
+        compiled runner — survive untouched."""
         if self.ctx is None:
             self._require_buffer("compact()")
         if self.buffer is not None and len(self.buffer):
             self.flush()
-        cs = _compact_pg(self.pg, self.ctx, pad_multiple=self.pad_multiple)
+        cs = _compact_pg(self.pg, self.ctx, shape_policy=self.shape_policy)
         self._host_version += 1
         self.stats.compactions += 1
         for e in self._warm.values():
@@ -506,11 +664,29 @@ class GraphSession:
 
     def _evict_stale_runners(self) -> None:
         """Drop executables specialized to padded shapes the graph no longer
-        has (growth via flush, shrink via compact). Shape-preserving patches
-        evict nothing — the whole point of the cache."""
+        has (bucket growth via flush, bucket shrink via compact). Any patch
+        that stays inside the current buckets evicts nothing — the whole
+        point of the bucketed cache."""
         cur = self.shape_key
-        self._runners = {k: v for k, v in self._runners.items()
-                         if v[1] == cur}
+        stale = [k for k, e in self._runners.items() if e.shape_key != cur]
+        for k in stale:
+            del self._runners[k]
+        self.stats.cache_evictions_shape += len(stale)
+        # flush/compact may also have dropped warm entries — release any
+        # id-keyed program pins nothing references anymore
+        self._prune_keepalive()
         self._identity_blocks = {
             k: v for k, v in self._identity_blocks.items()
             if k[:2] == (self.pg.n_parts, self.pg.v_max)}
+
+    # ------------------------------------------------------------------ #
+    # introspection
+    # ------------------------------------------------------------------ #
+    def cache_info(self) -> list:
+        """Snapshot of the compiled-runner cache in LRU order (oldest —
+        next to be evicted — first): one dict per entry with the program
+        type name, the shape key it was specialized to, its hit count and
+        what its compilation cost."""
+        return [dict(program=e.program, shape_key=e.shape_key, hits=e.hits,
+                     compile_time=e.compile_time)
+                for e in self._runners.values()]

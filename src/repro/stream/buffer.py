@@ -27,6 +27,13 @@ copies. The per-pair state machine:
 may be pre-buffer copies on device — and deleting a non-resident pair is a
 no-op. ``apply_delta`` applies a flushed batch deletes-first, which is
 exactly the DEL_ADD ordering.
+
+Invariants: the buffer never mutates the graph outside ``flush`` (reads
+between flushes see the pre-buffer graph — callers who need the tail must
+flush first, which ``GraphSession.query`` does automatically); flush order
+over pairs is deterministic (sorted), so identical op streams produce
+identical patches; the configured ``shape_policy`` is forwarded to every
+``apply_delta``, so a session's bucket choices apply to auto-flushes too.
 """
 from __future__ import annotations
 
@@ -35,7 +42,8 @@ from typing import Optional
 
 import numpy as np
 
-from repro.core.subgraph import PartitionedGraph
+from repro.core.subgraph import (PartitionedGraph, ShapePolicy,
+                                 resolve_shape_policy)
 from repro.stream.delta import DeltaStats, EdgeDelta, apply_delta
 from repro.stream.ingest import StreamContext
 
@@ -75,12 +83,16 @@ class DeltaBuffer:
     def __init__(self, pg: PartitionedGraph, ctx: StreamContext, *,
                  max_edges: Optional[int] = 4096,
                  max_parts: Optional[int] = None,
-                 pad_multiple: int = 8):
+                 pad_multiple: int = 8,
+                 shape_policy: Optional[ShapePolicy] = None):
         self.pg = pg
         self.ctx = ctx
         self.max_edges = max_edges
         self.max_parts = max_parts
-        self.pad_multiple = pad_multiple
+        # resolve once: an explicit policy carries its own tiling, the bare
+        # pad_multiple is only consulted when no policy is given
+        self.shape_policy = resolve_shape_policy(shape_policy, pad_multiple)
+        self.pad_multiple = self.shape_policy.pad_multiple
         self.stats = BufferStats()
         self._ops: dict = {}          # (src, dst) -> (STATE, weight|None)
         self._parts: set = set()
@@ -198,5 +210,5 @@ class DeltaBuffer:
         self.stats.auto_flushes += int(_auto)
         self.stats.edges_flushed += delta.n_adds + delta.n_dels
         self.last_flush = apply_delta(self.pg, self.ctx, delta,
-                                      pad_multiple=self.pad_multiple)
+                                      shape_policy=self.shape_policy)
         return self.last_flush

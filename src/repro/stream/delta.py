@@ -29,6 +29,23 @@ init_state=prev)`` — sound for *insert-only* deltas, where old values remain
 valid upper bounds. ``apply_delta`` reports ``warm_start_safe`` accordingly;
 deletions require a cold start (the engine also refuses warm starts for
 non-monotone programs on its own).
+
+Invariants this module owns (callers and docs rely on them):
+
+  - **delete-before-add batch semantics** — within one ``EdgeDelta``,
+    deletions hit the *pre-delta* graph, then adds are appended; a pair in
+    both lists nets to an insert, never a cancel (producer-order
+    cancellation is ``DeltaBuffer``'s job, resolved before flush).
+  - **capacity is grow-only here** — ``v_max``/``e_max`` only ever grow
+    under ``apply_delta`` (per the ``ShapePolicy``, exact round-up by
+    default, geometric buckets on a serving session); shrinking is
+    exclusively ``compact``'s job, which rounds *down to the bucket floor*.
+  - **every patch reports a row remap** — ``DeltaStats.remap`` maps old
+    local rows to new ones (membership is grow-only, so no row is ever
+    evicted by a delta; an empty delta's remap is the identity), letting
+    sessions carry ``[P, v_max, K]`` device-layout state (cached warm
+    results) across a patch exactly like ``CompactStats.remap_state`` does
+    across a compaction.
 """
 from __future__ import annotations
 
@@ -38,12 +55,28 @@ from typing import Optional
 import numpy as np
 
 from repro.core.partition import route_vertices_rh
-from repro.core.subgraph import (PartitionedGraph, localize_edges,
-                                 recompute_frontier, repack_partitions)
+from repro.core.subgraph import (PartitionedGraph, ShapePolicy,
+                                 localize_edges, recompute_frontier,
+                                 repack_partitions, resolve_shape_policy)
 from repro.stream.ingest import StreamContext
 
 __all__ = ["EdgeDelta", "DeltaStats", "apply_delta",
            "CompactStats", "compact"]
+
+
+def _remap_rows(remap: np.ndarray, v_max_after: int, state: np.ndarray,
+                fill) -> np.ndarray:
+    """Carry a live ``[P, v_max_before(, K)]`` per-partition array across a
+    re-layout described by ``remap``: surviving rows move to their new local
+    index, evicted/padded rows get ``fill``."""
+    state = np.asarray(state)
+    P, old_v = remap.shape
+    assert state.shape[:2] == (P, old_v), (state.shape, remap.shape)
+    out = np.full((P, v_max_after) + state.shape[2:], fill,
+                  dtype=state.dtype)
+    ip, iold = np.nonzero(remap >= 0)
+    out[ip, remap[ip, iold]] = state[ip, iold]
+    return out
 
 
 @dataclasses.dataclass
@@ -95,10 +128,22 @@ class DeltaStats:
     n_slots_before: int = 0
     n_slots_after: int = 0
     warm_start_safe: bool = False    # True for insert-only deltas
+    v_max_before: int = 0
+    v_max_after: int = 0
+    # [P, v_max_before] int32: old local row -> new local row. Membership is
+    # grow-only under a delta, so every pre-patch member survives; -1 marks
+    # only padding rows. None for an empty delta (nothing was applied, so
+    # the layout is unchanged).
+    remap: Optional[np.ndarray] = None
 
-
-def _round_up(n: int, m: int) -> int:
-    return int(-(-max(n, 1) // m) * m)
+    def remap_state(self, state: np.ndarray, fill) -> np.ndarray:
+        """Carry a live ``[P, v_max_before(, K)]`` per-partition array (e.g.
+        a cached warm-result block) across this patch's row re-layout —
+        the delta counterpart of ``CompactStats.remap_state``. An empty
+        delta never moved a row, so its remap is the identity."""
+        if self.remap is None:
+            return np.asarray(state)
+        return _remap_rows(self.remap, self.v_max_after, state, fill)
 
 
 def _grow_cols(arr: np.ndarray, n: int, fill) -> np.ndarray:
@@ -116,7 +161,8 @@ def _edge_key(src: np.ndarray, dst: np.ndarray, n_vertices: int) -> np.ndarray:
 
 
 def apply_delta(pg: PartitionedGraph, ctx: StreamContext, delta: EdgeDelta,
-                *, pad_multiple: int = 8) -> DeltaStats:
+                *, pad_multiple: int = 8,
+                shape_policy: Optional[ShapePolicy] = None) -> DeltaStats:
     """Apply ``delta`` to ``pg`` in place, routing through ``ctx``.
 
     Deletions remove *every* resident copy of a (src, dst) pair in the
@@ -130,11 +176,15 @@ def apply_delta(pg: PartitionedGraph, ctx: StreamContext, delta: EdgeDelta,
     ``DeltaBuffer``'s job (stream/buffer.py), which resolves op order
     *before* anything reaches this function.
     """
+    policy = resolve_shape_policy(shape_policy, pad_multiple)
     stats = DeltaStats(n_slots_before=pg.n_slots,
-                       warm_start_safe=delta.n_dels == 0)
+                       warm_start_safe=delta.n_dels == 0,
+                       v_max_before=pg.v_max, v_max_after=pg.v_max)
     if delta.n_adds == 0 and delta.n_dels == 0:
         stats.n_slots_after = pg.n_slots
         return stats
+    old_v_max = pg.v_max
+    old_nv = pg.vmask.sum(axis=1)    # rows are packed at the front
 
     # ---- id-space growth ------------------------------------------------ #
     new_v = max(pg.n_vertices, delta.max_id + 1)
@@ -188,14 +238,17 @@ def apply_delta(pg: PartitionedGraph, ctx: StreamContext, delta: EdgeDelta,
             stats.n_added += int(asel.sum())
 
         # grow-only membership: old members stay, new endpoints join
-        lv = np.unique(np.concatenate([pg.gvid[p][pg.vmask[p]], gs, gd]))
-        staged[p] = (lv, gs, gd, w)
+        old_lv = pg.gvid[p][pg.vmask[p]]
+        lv = np.unique(np.concatenate([old_lv, gs, gd]))
+        staged[p] = (lv, gs, gd, w, old_lv)
         need_e = max(need_e, gs.shape[0])
         need_v = max(need_v, lv.shape[0])
 
-    # ---- capacity growth (shared padded dims) ---------------------------- #
-    new_e_max = _round_up(need_e, pad_multiple) if need_e > pg.e_max else pg.e_max
-    new_v_max = _round_up(need_v, pad_multiple) if need_v > pg.v_max else pg.v_max
+    # ---- capacity growth (shared padded dims, policy-bucketed) ----------- #
+    new_e_max = max(pg.e_max, policy.bucket(need_e)) \
+        if need_e > pg.e_max else pg.e_max
+    new_v_max = max(pg.v_max, policy.bucket(need_v)) \
+        if need_v > pg.v_max else pg.v_max
     if new_e_max > pg.e_max or new_v_max > pg.v_max:
         stats.repadded = True
         pg.esrc = _grow_cols(pg.esrc, new_e_max, 0)
@@ -211,7 +264,7 @@ def apply_delta(pg: PartitionedGraph, ctx: StreamContext, delta: EdgeDelta,
         if pg.vlabel is not None:
             pg.vlabel = _grow_cols(pg.vlabel, new_v_max, 0)
 
-    for p, (lv, gs, gd, w) in staged.items():
+    for p, (lv, gs, gd, w, _) in staged.items():
         nv, ne = lv.shape[0], gs.shape[0]
         pg.gvid[p] = -1
         pg.gvid[p, :nv] = lv
@@ -229,6 +282,23 @@ def apply_delta(pg: PartitionedGraph, ctx: StreamContext, delta: EdgeDelta,
     stats.parts_patched = len(staged)
     pg.n_edges += stats.n_added - stats.n_deleted
     pg.edge_part = None   # host-side assignment is stale after a patch
+
+    # ---- old-row -> new-row remap (carries device-layout state) ----------- #
+    # Patched partitions: old members keep their values at a new sorted
+    # position; untouched partitions: rows do not move (column growth only
+    # appends padding).
+    remap = np.full((pg.n_parts, old_v_max), -1, np.int32)
+    for p in range(pg.n_parts):
+        st = staged.get(p)
+        if st is None:
+            n = int(old_nv[p])
+            remap[p, :n] = np.arange(n, dtype=np.int32)
+        else:
+            lv, old_lv = st[0], st[4]
+            remap[p, :old_lv.shape[0]] = np.searchsorted(
+                lv, old_lv).astype(np.int32)
+    stats.remap = remap
+    stats.v_max_after = pg.v_max
 
     # ---- write refreshed full degrees to every replica -------------------- #
     # (rows of patched partitions were re-ordered and new members appeared,
@@ -270,18 +340,12 @@ class CompactStats:
         the compaction: surviving rows move to their new local index, evicted
         and padded rows get ``fill`` (use the program's combiner identity for
         warm-state blocks)."""
-        state = np.asarray(state)
-        P, old_v = self.remap.shape
-        assert state.shape[:2] == (P, old_v), (state.shape, self.remap.shape)
-        out = np.full((P, self.v_max_after) + state.shape[2:], fill,
-                      dtype=state.dtype)
-        ip, iold = np.nonzero(self.remap >= 0)
-        out[ip, self.remap[ip, iold]] = state[ip, iold]
-        return out
+        return _remap_rows(self.remap, self.v_max_after, state, fill)
 
 
 def compact(pg: PartitionedGraph, ctx: StreamContext,
-            *, pad_multiple: int = 8) -> CompactStats:
+            *, pad_multiple: int = 8,
+            shape_policy: Optional[ShapePolicy] = None) -> CompactStats:
     """Evict edge-less members and shrink the padded capacities in place.
 
     Membership after compaction is exactly what a from-scratch re-ingest of
@@ -297,6 +361,12 @@ def compact(pg: PartitionedGraph, ctx: StreamContext,
     Returns ``CompactStats``; ``stats.remap_state`` carries live
     ``[P, v_max, K]`` device-layout state into the compacted layout. Global
     ``[n_vertices]`` results (``pg.collect``) are untouched by compaction.
+
+    Under a bucketed ``shape_policy`` the capacities shrink to the **bucket
+    floor** (the smallest bucket that still fits the compacted content), not
+    the exact minimum — so a session that compacts and then regrows inside
+    the same bucket keeps its padded shapes, and with them every compiled
+    runner.
     """
     assert ctx.n_parts == pg.n_parts, (ctx.n_parts, pg.n_parts)
     P = pg.n_parts
@@ -325,7 +395,8 @@ def compact(pg: PartitionedGraph, ctx: StreamContext,
                 members[p] = np.unique(np.concatenate([members[p], mine]))
 
     stats.remap = repack_partitions(pg, members, part_edges,
-                                    pad_multiple=pad_multiple)
+                                    pad_multiple=pad_multiple,
+                                    shape_policy=shape_policy)
     stats.n_evicted = members_before - int(pg.vmask.sum())
     stats.v_max_after = pg.v_max
     stats.e_max_after = pg.e_max

@@ -15,6 +15,13 @@ pipeline's per-partition spill shards (repro.stream.ingest pass 2).
 Writes are streaming-append (``EdgeLogWriter.append``) with an atomic
 manifest rename on ``close()``, so a crashed producer never leaves a log
 that parses as complete.
+
+Invariants: chunk order preserves append order (ingest parity with the
+in-memory path depends on it); ``BYTES_PER_EDGE`` (int64 src + int64 dst +
+float32 w = 20) is the accounting constant the ingest memory contract and
+the benchmarks bill transient edge buffers with; the manifest's
+``n_vertices`` covers every appended id (the writer tracks ``max(id) + 1``
+and widens a caller-declared id-space that turns out too small).
 """
 from __future__ import annotations
 
@@ -137,7 +144,10 @@ class EdgeLogWriter:
             return self.meta
         if self._buffered:
             self._drain(1)   # flush everything, remainder included
-        n_v = self._given_nv if self._given_nv is not None else self._max_id + 1
+        # cover every appended id even when the caller declared a smaller
+        # id-space (a short manifest would crash ingest's degree bincount)
+        n_v = self._max_id + 1 if self._given_nv is None \
+            else max(self._given_nv, self._max_id + 1)
         meta = dict(n_vertices=int(max(n_v, 0)), n_edges=self._n_edges,
                     weighted=self.weighted, chunk_size=self.chunk_size,
                     chunk_edges=self._chunk_edges)

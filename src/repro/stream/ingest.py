@@ -12,7 +12,12 @@ Assembly:            per partition, read the spill shard back (one partition
 
 Because the routers are pure per-edge functions, the result is bit-identical
 to the one-shot in-memory path (``partition_and_build``) — the parity the
-tests pin down. Peak *edge* memory is O(chunk_size), never O(|E|): the
+tests pin down (that parity contract is also why the default
+``ShapePolicy`` here is the *exact* one; a session passes its bucketed
+policy explicitly). The returned ``StreamContext`` freezes the routing
+inputs (partitioner, seed, degree snapshot, ingest-time id-space size):
+every later delta must route through it unchanged or resident edges stop
+being findable. Peak *edge* memory is O(chunk_size), never O(|E|): the
 ``ChunkAccountant`` measures every transient edge buffer the passes hold and
 ``streaming_ingest`` asserts the measured peak against an analytic
 O(chunk_size) bound. O(n_vertices) columnar state (degree counters, the
@@ -32,7 +37,8 @@ from typing import Optional, Union
 import numpy as np
 
 from repro.core.partition import STREAM_ROUTERS, route_vertices_rh
-from repro.core.subgraph import PartitionedGraph, assemble_partitioned_graph
+from repro.core.subgraph import (PartitionedGraph, ShapePolicy,
+                                 assemble_partitioned_graph)
 from repro.stream.edgelog import (BYTES_PER_EDGE, EdgeLogReader,
                                   EdgeLogWriter)
 
@@ -131,7 +137,9 @@ def _chunk_nbytes(src, dst, w) -> int:
 
 def streaming_ingest(log: Union[str, EdgeLogReader], n_parts: int,
                      partitioner: str = "cdbh", *, seed: int = 0,
-                     pad_multiple: int = 8, include_isolated: bool = True,
+                     pad_multiple: int = 8,
+                     shape_policy: Optional[ShapePolicy] = None,
+                     include_isolated: bool = True,
                      spill_dir: Optional[str] = None, cleanup: bool = True,
                      ) -> tuple[PartitionedGraph, StreamContext, IngestStats]:
     """Stream an edge log into a PartitionedGraph without materializing |E|.
@@ -139,6 +147,10 @@ def streaming_ingest(log: Union[str, EdgeLogReader], n_parts: int,
     Returns ``(pg, ctx, stats)`` — ``ctx`` is the frozen routing context for
     later incremental deltas (stream.delta.apply_delta). An assertion inside
     enforces the chunk-bounded memory contract on the streaming passes.
+    ``shape_policy`` picks the padded capacities (exact round-up by default
+    — the bit-identical parity contract with ``partition_and_build``;
+    sessions pass their bucketed policy so ingest lands on bucket
+    boundaries from the start).
     """
     if isinstance(log, str):
         log = EdgeLogReader(log)
@@ -245,7 +257,8 @@ def streaming_ingest(log: Union[str, EdgeLogReader], n_parts: int,
 
     pg = assemble_partitioned_graph(
         n_parts, V, meta.n_edges, part_vertices, edge_counts, load_edges,
-        out_deg, in_deg, pad_multiple=pad_multiple, edge_part=None)
+        out_deg, in_deg, pad_multiple=pad_multiple,
+        shape_policy=shape_policy, edge_part=None)
     stats.assemble_time = time.perf_counter() - t0
     stats.peak_assemble_bytes = acct.peak_assemble
 

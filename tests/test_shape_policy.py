@@ -1,0 +1,324 @@
+"""Shape-bucketed serving: ShapePolicy math, bucket-boundary flushes,
+compact-to-bucket-floor runner stability, LRU eviction order under mixed
+multi-algorithm traffic, and warm-memory carry across a bucket growth
+(ISSUE 4 tentpole; docs/ARCHITECTURE.md "shape-bucket lifecycle")."""
+import numpy as np
+import pytest
+
+import jax._src.test_util as jtu
+
+from repro.algos import ConnectedComponents, PageRank, SSSP
+from repro.core import ShapePolicy, partition_and_build, run_sim
+from repro.core.engine import EngineConfig
+from repro.graphgen import powerlaw_graph
+from repro.session import GraphSession
+from repro.stream import EdgeDelta, StreamContext, apply_delta
+
+
+# --------------------------------------------------------------------------- #
+# policy math
+# --------------------------------------------------------------------------- #
+def test_bucket_series_is_geometric():
+    p = ShapePolicy(growth=2.0, pad_multiple=8)
+    assert [p.bucket(n) for n in (1, 8, 9, 16, 17, 100, 1000)] == \
+        [8, 8, 16, 16, 32, 128, 1024]
+    # bucket values are fixed points: landing on a boundary stays there
+    for n in (8, 16, 32, 64, 1024):
+        assert p.bucket(n) == n
+    # monotone and always sufficient
+    last = 0
+    for n in range(1, 3000, 37):
+        b = p.bucket(n)
+        assert b >= n and b >= last
+        last = b
+
+
+def test_exact_policy_is_legacy_round_up():
+    p = ShapePolicy.exact(pad_multiple=8)
+    for n in (1, 7, 8, 9, 100, 1001):
+        assert p.bucket(n) == -(-n // 8) * 8
+    # exact policy never buckets the slot count (legacy shape key)
+    assert p.slot_capacity(701) == 701
+    assert ShapePolicy().slot_capacity(701) == 1024
+
+
+def test_headroom_rounds_up_early():
+    assert ShapePolicy(growth=2.0, headroom=1.5, pad_multiple=8).bucket(12) \
+        == 32  # 12 * 1.5 = 18 -> next bucket after 16
+    assert ShapePolicy(growth=2.0, headroom=1.0, pad_multiple=8).bucket(12) \
+        == 16
+
+
+def test_policy_validates():
+    with pytest.raises(ValueError, match="growth"):
+        ShapePolicy(growth=0.5)
+    with pytest.raises(ValueError, match="headroom"):
+        ShapePolicy(headroom=0.9)
+    with pytest.raises(ValueError, match="pad_multiple"):
+        ShapePolicy(pad_multiple=0)
+    assert hash(ShapePolicy()) is not None  # usable inside cache keys
+
+
+# --------------------------------------------------------------------------- #
+# delta remap (the carry mechanism behind warm-across-growth)
+# --------------------------------------------------------------------------- #
+def test_delta_remap_carries_rows():
+    g = powerlaw_graph(300, seed=5, weighted=True).as_undirected()
+    pg = partition_and_build(g, 4, "cdbh")
+    ctx = StreamContext(partitioner="cdbh", n_parts=4, seed=0,
+                        n_vertices=g.n_vertices,
+                        routing_degrees=g.total_degrees())
+    # state[p, i] = that row's global id, so carried rows are self-checking
+    state = pg.gvid.astype(np.int64).copy()
+    state[~pg.vmask] = -1
+    new = np.arange(g.n_vertices, g.n_vertices + 40, dtype=np.int64)
+    st = apply_delta(pg, ctx, EdgeDelta(
+        add_src=np.concatenate([np.zeros(40, np.int64), new]),
+        add_dst=np.concatenate([new, np.zeros(40, np.int64)])))
+    assert st.remap is not None and st.v_max_before == st.remap.shape[1]
+    carried = st.remap_state(state, fill=-1)
+    assert carried.shape == (pg.n_parts, pg.v_max)
+    # every surviving row landed on the row now holding its global id;
+    # brand-new members (and padding) hold the fill
+    expect = pg.gvid.astype(np.int64).copy()
+    expect[~pg.vmask] = -1
+    expect[pg.vmask & ~np.isin(pg.gvid, state[state >= 0])] = -1
+    np.testing.assert_array_equal(carried, expect)
+
+
+# --------------------------------------------------------------------------- #
+# session-level bucket lifecycle
+# --------------------------------------------------------------------------- #
+@pytest.fixture(scope="module")
+def graph():
+    return powerlaw_graph(600, seed=3, weighted=True).as_undirected()
+
+
+def _distinct_resident_pairs(pg, p):
+    """Distinct (src, dst) global-id pairs resident in partition p."""
+    m = pg.emask[p]
+    gs = pg.gvid[p][pg.esrc[p][m]]
+    gd = pg.gvid[p][pg.edst[p][m]]
+    key = gs * np.int64(pg.n_vertices) + gd
+    _, idx = np.unique(key, return_index=True)
+    return gs[idx], gd[idx]
+
+
+def test_flush_exactly_at_bucket_boundary_keeps_runner(graph):
+    """Fill the most-slack partition's edge capacity to exactly e_max with
+    parallel copies of resident pairs (membership untouched): need == bucket
+    is *inside* the bucket, so the compiled runner survives; one more edge
+    crosses the boundary and rebuilds exactly once."""
+    sess = GraphSession.from_graph(graph, 4, "cdbh")
+    sess.query(SSSP(), {"source": 0})
+    key0 = sess.shape_key
+    pg = sess.pg
+
+    p = int(np.argmin(pg.edges_per_part))
+    gs, gd = _distinct_resident_pairs(pg, p)
+    slack = int(pg.e_max - pg.edges_per_part[p])
+    assert slack > 0, "bucketed padding should leave slack"
+    while slack > 0:                       # parallel copies, heavy weights
+        k = min(slack, gs.shape[0])
+        sess.update(adds=(gs[:k], gd[:k], np.full(k, 77.0, np.float32)))
+        st = sess.flush()
+        assert not st.repadded
+        slack -= k
+    assert int(sess.pg.edges_per_part[p]) == sess.pg.e_max  # exactly full
+    assert sess.shape_key == key0
+
+    misses = sess.stats.cache_misses
+    with jtu.count_jit_tracing_cache_miss() as tr:
+        r_at, s_at = sess.query(SSSP(), {"source": 0})
+    assert tr[0] == 0 and s_at.compile_time == 0.0
+    assert sess.stats.cache_misses == misses
+
+    # one edge past the boundary: the bucket grows, one rebuild
+    sess.update(adds=(gs[:1], gd[:1], [77.0]))
+    st = sess.flush()
+    assert st.repadded and sess.shape_key != key0
+    _, s_over = sess.query(SSSP(), {"source": 0})
+    assert s_over.compile_time > 0.0
+    assert sess.stats.cache_misses == misses + 1
+    np.testing.assert_array_equal(
+        sess.pg.collect(np.asarray(r_at), fill=np.float32(np.inf)),
+        sess.pg.collect(np.asarray(sess.query(SSSP(), {"source": 0},
+                                              warm=False)[0]),
+                        fill=np.float32(np.inf)))
+
+
+def test_slot_bucket_absorbs_frontier_churn(graph):
+    """Inserts that change n_slots (new replicas) but stay inside the slot
+    bucket keep the shape key — the churn legacy exact shapes would always
+    recompile on."""
+    sess = GraphSession.from_graph(graph, 4, "cdbh")
+    sess.query(ConnectedComponents())
+    key0, slots0 = sess.shape_key, sess.pg.n_slots
+    rng = np.random.default_rng(0)
+    s = rng.integers(0, graph.n_vertices, 64).astype(np.int64)
+    d = (s + graph.n_vertices // 2) % graph.n_vertices
+    keep = s != d
+    sess.update(adds=(np.concatenate([s[keep], d[keep]]),
+                      np.concatenate([d[keep], s[keep]])))
+    sess.flush()
+    assert sess.pg.n_slots != slots0, "expected the frontier to re-elect"
+    assert sess.shape_key == key0, "slot bucket must absorb the churn"
+    with jtu.count_jit_tracing_cache_miss() as tr:
+        _, st = sess.query(ConnectedComponents())
+    assert tr[0] == 0 and st.compile_time == 0.0
+
+
+def test_compact_to_bucket_floor_then_regrow_rehits_runner(graph):
+    """delete -> compact -> re-insert staying inside one bucket: the padded
+    shapes never move, so the original compiled runner serves the whole
+    sequence (trace-counter pinned; at HEAD, compact's exact-minimum shrink
+    evicted everything)."""
+    sess = GraphSession.from_graph(graph, 4, "cdbh")
+    sess.query(SSSP(), {"source": 0})
+    key0 = sess.shape_key
+    assert sess.stats.cache_misses == 1
+
+    n_del = graph.n_edges // 20
+    ds, dd = graph.src[:n_del], graph.dst[:n_del]
+    sess.update(deletes=(np.concatenate([ds, dd]),
+                         np.concatenate([dd, ds])))
+    sess.flush()
+    cs = sess.compact()
+    assert not cs.shrunk, "a modest delete must stay on the bucket floor"
+    assert sess.shape_key == key0
+    assert len(sess._runners) == 1, "bucket-floor compact keeps the runner"
+
+    w = np.full(ds.shape, 5.0, np.float32)
+    sess.update(adds=(np.concatenate([ds, dd]), np.concatenate([dd, ds]),
+                      np.concatenate([w, w])))
+    sess.flush()
+    assert sess.shape_key == key0
+
+    with jtu.count_jit_tracing_cache_miss() as tr:
+        res, st = sess.query(SSSP(), {"source": 0})
+    assert tr[0] == 0 and st.compile_time == 0.0
+    assert sess.stats.cache_misses == 1, \
+        "the whole delete/compact/regrow cycle must reuse one compilation"
+    ref, _ = run_sim(SSSP(), sess.pg, {"source": 0}, EngineConfig())
+    np.testing.assert_array_equal(np.asarray(res), np.asarray(ref))
+
+
+def test_lru_eviction_order_mixed_traffic(graph):
+    sess = GraphSession.from_graph(graph, 4, "cdbh", max_runners=2)
+    r_sssp0, _ = sess.query(SSSP(), {"source": 0})          # miss: [S]
+    r_cc0, _ = sess.query(ConnectedComponents())            # miss: [S, C]
+    _, st = sess.query(SSSP(), {"source": 0})               # hit:  [C, S]
+    assert st.compile_time == 0.0
+    pr_params = {"n_vertices": graph.n_vertices}
+    _, st = sess.query(PageRank(tol=1e-9), pr_params)       # miss: evict C
+    assert st.evicted_runners == 1
+    assert sess.stats.cache_evictions_lru == 1
+    info = sess.cache_info()
+    assert [e["program"] for e in info] == ["SSSP", "PageRank"]
+
+    # the evicted CC runner recompiles transparently and agrees bit-for-bit
+    r_cc1, st = sess.query(ConnectedComponents())           # miss: evict S
+    assert st.compile_time > 0.0 and st.evicted_runners == 1
+    np.testing.assert_array_equal(np.asarray(r_cc0), np.asarray(r_cc1))
+    assert [e["program"] for e in sess.cache_info()] == ["PageRank",
+                                                         "ConnectedComponents"]
+    r_sssp1, st = sess.query(SSSP(), {"source": 0}, warm=False)
+    assert st.compile_time > 0.0                            # was evicted
+    np.testing.assert_array_equal(np.asarray(r_sssp0), np.asarray(r_sssp1))
+    assert sess.stats.cache_evictions_lru == 3
+    assert len(sess._runners) == 2
+    # hit counters survive in the introspection snapshot
+    assert all(isinstance(e["hits"], int) for e in sess.cache_info())
+
+
+def test_readonly_session_pads_exactly(graph):
+    """A session that can never mutate (non-streamable partitioner, no
+    StreamContext) gains nothing from buckets — it must not pay the padded
+    sweep/exchange overhead."""
+    ro = GraphSession.from_graph(graph, 4, "greedy-ec")
+    assert ro.buffer is None
+    ref = partition_and_build(graph, 4, "greedy-ec")
+    assert (ro.pg.v_max, ro.pg.e_max) == (ref.v_max, ref.e_max)
+    assert ro.slot_capacity == ro.pg.n_slots
+    # a mutable session on the same graph does bucket
+    rw = GraphSession.from_graph(graph, 4, "cdbh")
+    assert rw.slot_capacity >= rw.pg.n_slots
+
+
+def test_lru_eviction_prunes_id_keyed_program_pins(graph):
+    """Programs with unhashable dataclass fields fall back to id()-keyed
+    cache entries and are pinned alive; once neither a runner nor a warm
+    entry can reference the id anymore, the pin must be released."""
+    import dataclasses as dc
+
+    @dc.dataclass
+    class ListySSSP(SSSP):
+        junk: list = dc.field(default_factory=list)
+
+    sess = GraphSession.from_graph(graph, 4, "cdbh", max_runners=1)
+    a, b = ListySSSP(), ListySSSP()
+    r_a, _ = sess.query(a, {"source": 0})
+    assert len(sess._keepalive) == 1
+    r_b, _ = sess.query(b, {"source": 0})        # evicts a's runner...
+    np.testing.assert_array_equal(np.asarray(r_a), np.asarray(r_b))
+    assert sess.stats.cache_evictions_lru == 1
+    # ...but a's warm entry still references its id: the pin must survive
+    # (an id reuse could otherwise serve a's converged result to a stranger)
+    assert len(sess._keepalive) == 2
+    sess.update(deletes=(graph.src[:4], graph.dst[:4]))
+    sess.flush()                                 # deleting flush drops warm
+    assert len(sess._keepalive) == 1, \
+        "only the resident runner's program may stay pinned"
+
+
+def test_warm_memory_is_lru_bounded(graph):
+    """Warm results are bounded like the runner cache: many distinct
+    parameter values must not grow host memory (or per-flush remap cost)
+    without bound, and an evicted entry just runs cold again — correctly."""
+    sess = GraphSession.from_graph(graph, 4, "cdbh", max_warm_entries=2)
+    r0, _ = sess.query(SSSP(), {"source": 0})
+    for src in (1, 2, 3):
+        sess.query(SSSP(), {"source": src})
+    assert len(sess._warm) == 2 and sess.stats.warm_evictions == 2
+    with pytest.raises(ValueError, match="no previous converged result"):
+        sess.query(SSSP(), {"source": 0}, warm=True)   # evicted
+    r0b, _ = sess.query(SSSP(), {"source": 0})          # cold, correct
+    np.testing.assert_array_equal(np.asarray(r0), np.asarray(r0b))
+    # querying an entry refreshes its recency
+    sess.query(SSSP(), {"source": 0})                   # warm hit: refresh
+    sess.query(SSSP(), {"source": 7})                   # evicts 3, not 0
+    sess.query(SSSP(), {"source": 0}, warm=True)        # still warm
+
+
+def test_warm_memory_carries_across_bucket_growth(graph):
+    """An insert-only flush that crosses a v_max bucket rebuilds the runner
+    (once) but must NOT lose warm="auto" memory: the device-layout block is
+    remapped through DeltaStats.remap_state, and the warm query converges
+    faster than cold with a bit-identical result."""
+    sess = GraphSession.from_graph(graph, 4, "cdbh")
+    sess.query(SSSP(), {"source": 0})
+    (wkey,) = sess._warm.keys()
+    v0 = sess.pg.v_max
+
+    # attach enough brand-new vertices to overflow the vertex bucket
+    n_new = sess.pg.v_max * sess.pg.n_parts  # certainly > remaining slack
+    new = np.arange(sess.pg.n_vertices, sess.pg.n_vertices + n_new,
+                    dtype=np.int64)
+    anchors = np.arange(n_new, dtype=np.int64) % graph.n_vertices
+    sess.update(adds=(np.concatenate([anchors, new]),
+                      np.concatenate([new, anchors]),
+                      np.full(2 * n_new, 9.0, np.float32)))
+    st = sess.flush()
+    assert st.repadded and sess.pg.v_max > v0
+
+    entry = sess._warm[wkey]
+    assert entry.device_block is not None, \
+        "bucket growth must remap the warm block, not drop it"
+    assert entry.device_block.shape[:2] == (sess.pg.n_parts, sess.pg.v_max)
+
+    warm, st_w = sess.query(SSSP(), {"source": 0})          # warm="auto"
+    assert st_w.compile_time > 0.0                          # new bucket
+    assert sess.stats.warm_queries == 1
+    cold, st_c = sess.query(SSSP(), {"source": 0}, warm=False)
+    np.testing.assert_array_equal(np.asarray(warm), np.asarray(cold))
+    assert st_w.supersteps < st_c.supersteps

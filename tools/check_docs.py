@@ -1,0 +1,200 @@
+"""Docs link-and-reference check: every code path / symbol a markdown doc
+mentions must exist in the repo, so README.md and docs/*.md cannot rot
+silently as the code moves (run in CI next to the tier-1 tests).
+
+    python tools/check_docs.py            # checks README.md + docs/*.md
+
+What is checked (inline ``code`` spans only — fenced example blocks are
+illustrative and skipped):
+
+  - repo paths (``docs/API.md``, ``core/engine.py`` — also resolved under
+    ``src/repro/``), including ``path::test`` / ``path:symbol`` anchors,
+    whose symbol must appear as a def/class/assignment in that file;
+  - dotted ``repro.*`` references: the module must exist; a trailing
+    non-module component must be defined in the module's source;
+  - ``TitleCase`` names (optionally ``TitleCase.attr``): the class must be
+    defined somewhere in ``src/``, and ``attr`` must occur in that file;
+  - ``name()`` call mentions: a ``def name`` must exist in the repo.
+
+Anything else (flags, shell fragments, format sketches like ``[P, v_max]``)
+is deliberately not interpreted. Names from the *source papers'* APIs
+(cited in the paper-to-code docs but intentionally absent from the repo)
+go in ``EXTERNAL_NAMES`` below instead of being reworded out of the docs.
+"""
+from __future__ import annotations
+
+import glob
+import os
+import re
+import sys
+
+# Paper / external-system API names the docs may cite in code spans without
+# a corresponding definition in this repo (DRONE §5.1, GoFFish, Pregel).
+EXTERNAL_NAMES = {
+    "getDegree", "addPairToVector", "voteToHalt", "Compute",
+}
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(ROOT, "src")
+CODE_DIRS = ("src", "benchmarks", "examples", "tests", "tools")
+PATH_EXTS = (".py", ".md", ".yml", ".yaml", ".json", ".txt")
+
+_span = re.compile(r"`([^`]+)`")
+_fence = re.compile(r"^(```|~~~)")
+_dotted = re.compile(r"^repro(\.\w+)+$")
+_classy = re.compile(r"^[A-Z]\w*(\.\w+)?$")
+_call = re.compile(r"^(\w+)\(\)$")
+
+
+def _iter_inline_spans(path):
+    in_fence = False
+    for ln, line in enumerate(open(path, encoding="utf-8"), 1):
+        if _fence.match(line.strip()):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        for m in _span.finditer(line):
+            yield ln, m.group(1).strip()
+
+
+def _source_files():
+    out = []
+    for d in CODE_DIRS:
+        out += glob.glob(os.path.join(ROOT, d, "**", "*.py"), recursive=True)
+    return out
+
+
+_SOURCES = None
+
+
+def _sources():
+    global _SOURCES
+    if _SOURCES is None:
+        _SOURCES = {f: open(f, encoding="utf-8").read()
+                    for f in _source_files()}
+    return _SOURCES
+
+
+def _defined_in(text, name):
+    return re.search(
+        rf"^\s*(def|class)\s+{re.escape(name)}\b"
+        rf"|^\s*{re.escape(name)}\s*[:=]", text, re.M) is not None
+
+
+def _mentions(text, name):
+    return re.search(rf"\b{re.escape(name)}\b", text) is not None
+
+
+def _resolve_path(token):
+    """Existing file for a path-like token, or None."""
+    for base in (ROOT, os.path.join(SRC, "repro"), SRC):
+        p = os.path.join(base, token)
+        if os.path.exists(p):
+            return p
+    return None
+
+
+def _check_path(token):
+    sym = None
+    if "::" in token:
+        token, sym = token.split("::", 1)
+    elif token.endswith(".py") is False and token.count(":") == 1 \
+            and token.rsplit(":", 1)[0].endswith(".py"):
+        token, sym = token.rsplit(":", 1)
+    p = _resolve_path(token)
+    if p is None:
+        return f"path does not exist: {token}"
+    if sym:
+        text = open(p, encoding="utf-8").read()
+        if not _defined_in(text, sym.split("[", 1)[0]):
+            return f"{token} does not define {sym!r}"
+    return None
+
+
+def _check_dotted(token):
+    parts = token.split(".")
+    mod_path = os.path.join(SRC, *parts)
+    if os.path.isdir(mod_path) or os.path.exists(mod_path + ".py"):
+        return None                               # a module / package
+    mod, sym = parts[:-1], parts[-1]
+    base = os.path.join(SRC, *mod)
+    for cand in (base + ".py", os.path.join(base, "__init__.py")):
+        if os.path.exists(cand):
+            text = open(cand, encoding="utf-8").read()
+            if _defined_in(text, sym) or _mentions(text, sym):
+                return None
+            return f"{'.'.join(mod)} does not define {sym!r}"
+    return f"module {'.'.join(mod)} does not exist"
+
+
+def _check_classy(token):
+    name, _, attr = token.partition(".")
+    hits = [f for f, text in _sources().items()
+            if re.search(rf"^\s*class\s+{name}\b", text, re.M)]
+    if not hits:
+        # not a class in this repo (e.g. `True`, `None`, jax types): only
+        # flag TitleCase names that LOOK like ours but vanished — i.e.
+        # nothing. Unknown names are skipped to avoid false positives on
+        # external symbols.
+        return None
+    if attr and not any(_mentions(_sources()[f], attr) for f in hits):
+        return f"class {name} exists but {attr!r} is not mentioned in its module"
+    return None
+
+
+def _check_call(name):
+    for text in _sources().values():
+        if re.search(rf"^\s*def\s+{name}\b", text, re.M):
+            return None
+    return f"no `def {name}` anywhere in the repo"
+
+
+def check_token(token):
+    token = token.rstrip(".,;:").strip()
+    if not token or any(c in token for c in "<>*{}$| "):
+        return None
+    if token.rstrip("()").split(".")[0] in EXTERNAL_NAMES:
+        return None
+    if "/" in token:
+        head = token.split()[0]
+        if head.split("::")[0].split(":")[0].endswith(PATH_EXTS) \
+                or _resolve_path(head) is not None:
+            return _check_path(head)
+        return None
+    if _dotted.match(token):
+        return _check_dotted(token)
+    m = _call.match(token)
+    if m:
+        return _check_call(m.group(1))
+    if _classy.match(token) and not token.isupper():
+        return _check_classy(token)
+    return None
+
+
+def main():
+    docs = sorted(glob.glob(os.path.join(ROOT, "docs", "*.md")))
+    readme = os.path.join(ROOT, "README.md")
+    if os.path.exists(readme):
+        docs.insert(0, readme)
+    if not docs:
+        print("check_docs: no markdown files found", file=sys.stderr)
+        return 1
+    errors = []
+    n_checked = 0
+    for doc in docs:
+        for ln, token in _iter_inline_spans(doc):
+            err = check_token(token)
+            n_checked += 1
+            if err:
+                rel = os.path.relpath(doc, ROOT)
+                errors.append(f"{rel}:{ln}: `{token}` — {err}")
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"check_docs: {len(docs)} files, {n_checked} spans, "
+          f"{len(errors)} broken references")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
