@@ -17,9 +17,18 @@ recompile counts and p50 query latency. The bucketed session must reach a
 steady state with **zero** recompiles per cycle while the exact session
 recompiles on (nearly) every growth flush.
 
+``--edge-backend`` selects the sweep's edge-compute backend
+(``EngineConfig.edge_backend``) for every section; ``--edge-backend all``
+adds a dedicated comparison section instead — the same streaming-growth
+cycle on ``coo`` / ``pallas_tiles`` / ``pallas_windows``, asserting under
+``--smoke`` that the Pallas backends (interpret mode on CPU) reach the same
+zero-recompile steady state with bit-identical SSSP answers.
+
     PYTHONPATH=src python -m benchmarks.serving_queries [--scale 14]
     PYTHONPATH=src python -m benchmarks.serving_queries --grow
-    PYTHONPATH=src python -m benchmarks.serving_queries --smoke --grow  # CI
+    PYTHONPATH=src python -m benchmarks.serving_queries --edge-backend all
+    PYTHONPATH=src python -m benchmarks.serving_queries \
+        --smoke --grow --edge-backend all                             # CI
 """
 from __future__ import annotations
 
@@ -30,9 +39,11 @@ import numpy as np
 
 from benchmarks.common import save, table
 from repro.algos import ConnectedComponents, PageRank, SSSP
-from repro.core import ShapePolicy
+from repro.core import EngineConfig, ShapePolicy
 from repro.graphgen import kronecker_graph, powerlaw_graph
 from repro.session import GraphSession
+
+EDGE_BACKENDS = ("coo", "pallas_tiles", "pallas_windows")
 
 
 def _quantiles(xs):
@@ -116,7 +127,7 @@ def bench_update_query(sess, n_cycles):
             "update_cycle_recompiles": int(recompiles)}
 
 
-def bench_grow(n0, n_parts, n_cycles, per_cycle, smoke):
+def bench_grow(n0, n_parts, n_cycles, per_cycle, smoke, eb="coo"):
     """Growing-graph serving: each cycle attaches ``per_cycle`` brand-new
     vertices (plus edges onto random existing ones) and immediately queries
     SSSP — the continuous-update regime DRONE targets, where skewed degree
@@ -128,7 +139,8 @@ def bench_grow(n0, n_parts, n_cycles, per_cycle, smoke):
         g = powerlaw_graph(n0, avg_degree=8, seed=11,
                            weighted=True).as_undirected()
         sess = GraphSession.from_graph(g, n_parts, "cdbh",
-                                       shape_policy=policy)
+                                       shape_policy=policy,
+                                       cfg=EngineConfig(edge_backend=eb))
         sess.query(SSSP(), {"source": 0})            # warm the cache
         rng = np.random.default_rng(2)
         lat, tail = [], []
@@ -170,6 +182,67 @@ def bench_grow(n0, n_parts, n_cycles, per_cycle, smoke):
     return recs
 
 
+def bench_edge_backends(n0, n_parts, n_cycles, per_cycle, smoke):
+    """Streaming growth on every edge-compute backend: each runs the same
+    insert-flush/warm-query cycle on its own (identically built) session.
+    The Pallas backends must hold the serving contract — a zero-recompile
+    steady state once the bucketed layout capacities settle — and return
+    bit-identical SSSP distances (min_plus is exact on every backend)."""
+    rows, recs = [], {}
+    finals = {}
+    for eb in EDGE_BACKENDS:
+        g = powerlaw_graph(n0, avg_degree=8, seed=13,
+                           weighted=True).as_undirected()
+        sess = GraphSession.from_graph(g, n_parts, "cdbh",
+                                       cfg=EngineConfig(edge_backend=eb))
+        _, st0 = sess.query(SSSP(), {"source": 0})
+        rng = np.random.default_rng(3)
+        lat, tail = [], []
+        for _ in range(n_cycles):
+            nv = sess.pg.n_vertices
+            new = np.arange(nv, nv + per_cycle, dtype=np.int64)
+            anchors = rng.integers(0, nv, per_cycle).astype(np.int64)
+            w = rng.uniform(1, 5, per_cycle).astype(np.float32)
+            sess.update(adds=(np.concatenate([anchors, new]),
+                              np.concatenate([new, anchors]),
+                              np.concatenate([w, w])))
+            sess.flush()
+            res, st = sess.query(SSSP(), {"source": 0})   # warm="auto"
+            lat.append(st.wall_time)
+            tail.append(int(st.compile_time > 0.0))
+        finals[eb] = sess.pg.collect(np.asarray(res), fill=np.inf)
+        recompile_cycles = sum(tail)
+        steady = n_cycles - (max(i for i, r in enumerate(tail) if r) + 1) \
+            if any(tail) else n_cycles
+        p50, p95 = _quantiles(lat)
+        rows.append([eb, recompile_cycles, steady, f"{p50*1e3:.0f}",
+                     f"{p95*1e3:.0f}", f"{st.backend_flops/1e6:.1f}",
+                     f"{st.tile_density:.3f}" if eb == "pallas_tiles"
+                     else "-"])
+        recs[f"eb_{eb}_recompile_cycles"] = int(recompile_cycles)
+        recs[f"eb_{eb}_steady_cycles"] = int(steady)
+        recs[f"eb_{eb}_p50_ms"] = p50 * 1e3
+        recs[f"eb_{eb}_flops_per_query"] = int(st.backend_flops)
+        if eb == "pallas_tiles":
+            recs["eb_tile_density"] = float(st.tile_density)
+    table(f"Edge-compute backends under streaming growth ({n_cycles} "
+          f"cycles x {per_cycle} new vertices, P={n_parts})",
+          ["backend", "recompile cycles", "steady tail", "p50 ms",
+           "p95 ms", "Mflops/query", "tile density"], rows)
+    for eb in EDGE_BACKENDS[1:]:
+        np.testing.assert_array_equal(
+            finals["coo"], finals[eb],
+            err_msg=f"{eb} diverged from the COO reference")
+    if smoke:
+        for eb in EDGE_BACKENDS:
+            assert recs[f"eb_{eb}_steady_cycles"] >= 2, \
+                (f"{eb}: streaming growth must reach a zero-recompile "
+                 f"steady state (got {recs[f'eb_{eb}_steady_cycles']})")
+    print("edge-backend parity: SSSP bit-identical across "
+          f"{', '.join(EDGE_BACKENDS)}")
+    return recs
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", type=int, default=14,
@@ -185,6 +258,10 @@ def main():
     ap.add_argument("--grow-cycles", type=int, default=16)
     ap.add_argument("--grow-per-cycle", type=int, default=400,
                     help="new vertices attached per --grow cycle")
+    ap.add_argument("--edge-backend", default="coo",
+                    choices=EDGE_BACKENDS + ("all",),
+                    help="edge-compute backend for every section, or 'all' "
+                         "for the dedicated comparison section")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny sizes for CI: exercise every path, skip scale")
     args = ap.parse_args()
@@ -193,18 +270,31 @@ def main():
         args.repeat, args.sources, args.cycles = 3, 5, 3
         args.grow_n0, args.grow_cycles, args.grow_per_cycle = 3_000, 8, 120
 
+    session_eb = "coo" if args.edge_backend == "all" else args.edge_backend
     g = kronecker_graph(args.scale, seed=7)
-    sess = GraphSession.from_graph(g, args.parts, "cdbh")
+    sess = GraphSession.from_graph(g, args.parts, "cdbh",
+                                   cfg=EngineConfig(edge_backend=session_eb))
     print(f"graph: {g.n_vertices} vertices, {g.n_edges} edges, "
-          f"P={args.parts}")
+          f"P={args.parts}, edge_backend={args.edge_backend}")
 
     rec = {"n_vertices": g.n_vertices, "n_edges": g.n_edges,
-           "n_parts": args.parts, "smoke": args.smoke}
+           "n_parts": args.parts, "smoke": args.smoke,
+           "edge_backend": args.edge_backend}
     rec.update(bench_query_latency(sess, args.repeat, args.sources))
     rec.update(bench_update_query(sess, args.cycles))
     if args.grow:
         rec.update(bench_grow(args.grow_n0, args.parts, args.grow_cycles,
-                              args.grow_per_cycle, args.smoke))
+                              args.grow_per_cycle, args.smoke,
+                              eb=session_eb))
+    if args.edge_backend == "all":
+        # deliberately small: the interpret-mode tile kernel (CPU) pays
+        # ~100x over the compiled TPU path, and a big power-law graph is
+        # exactly the low-density regime the density column warns tiles
+        # away from anyway — this section is a contract check, not a race
+        eb_n0, eb_parts, eb_cycles, eb_per = (1_200, 4, 6, 60) if args.smoke \
+            else (2_000, 8, 8, 100)
+        rec.update(bench_edge_backends(eb_n0, eb_parts, eb_cycles, eb_per,
+                                       args.smoke))
     rec["compile_time_total_s"] = sess.stats.compile_time_total
     rec["cache_misses"] = sess.stats.cache_misses
     rec["cache_hits"] = sess.stats.cache_hits

@@ -13,7 +13,7 @@ import dataclasses
 
 import jax.numpy as jnp
 
-from repro.core.api import DeviceSubgraph, VertexProgram
+from repro.core.api import DeviceSubgraph, SemiringSweep, VertexProgram
 
 _IMAX = 2**31 - 1
 
@@ -27,6 +27,10 @@ class ConnectedComponents(VertexProgram):
     monotone: bool = True       # labels only decrease -> warm-startable
     value_key: str = "label"
 
+    # min-plus over zero-valued edges == min-label propagation; int32 all
+    # the way through every backend (the Pallas kernels honor the dtype)
+    sweep_spec = SemiringSweep("min_plus", "zero")
+
     def init(self, sg: DeviceSubgraph, params, ec):
         return {"label": jnp.where(sg.vmask, sg.vid32, _IMAX)}
 
@@ -37,11 +41,11 @@ class ConnectedComponents(VertexProgram):
         changed = jnp.sum(new < state["label"], dtype=jnp.int32)
         return {"label": new}, changed
 
-    def sweep(self, sg, params, state, ec):
+    def sweep_values(self, sg, params, state):
+        return state["label"]
+
+    def sweep_fold(self, sg, params, state, agg):
         lab = state["label"]
-        cand = jnp.where(sg.emask, lab[sg.esrc], _IMAX)
-        agg = jnp.full((sg.v_max,), _IMAX, jnp.int32).at[sg.edst].min(cand)
-        agg = ec.min(agg)                     # edge-parallel partial combine
         new = jnp.where(sg.vmask, jnp.minimum(lab, agg), lab)
         changed = jnp.sum(new < lab, dtype=jnp.int32)
         return {"label": new}, changed

@@ -24,7 +24,7 @@ import dataclasses
 
 import jax.numpy as jnp
 
-from repro.core.api import DeviceSubgraph, VertexProgram
+from repro.core.api import DeviceSubgraph, SemiringSweep, VertexProgram
 
 
 @dataclasses.dataclass
@@ -35,6 +35,10 @@ class PageRank(VertexProgram):
     delta_based: bool = True
     tol: float = 1e-7
     alpha: float = 0.85
+
+    # plus-times over unit edges: the alpha/out_deg rate rides the vertex
+    # values (sweep_values), so the edge-value map stays declarative
+    sweep_spec = SemiringSweep("plus_times", "one")
 
     # -------------------------------------------------------------- #
     def _push(self, sg: DeviceSubgraph, d, ec):
@@ -64,13 +68,24 @@ class PageRank(VertexProgram):
         changed = jnp.sum(sig & sg.frontier, dtype=jnp.int32)
         return {"pr": pr, "delta": delta}, changed
 
-    def sweep(self, sg, params, state, ec):
+    def _processable(self, sg, state):
+        """Internal vertices whose pending accumulator is significant, and
+        the value they consume (shared by sweep_values and sweep_fold)."""
         d = state["delta"]
         proc = sg.internal & (jnp.abs(d) > self.tol)
-        dp = jnp.where(proc, d, 0.0)
+        return proc, jnp.where(proc, d, 0.0)
+
+    def sweep_values(self, sg, params, state):
+        _, dp = self._processable(sg, state)
+        rate = jnp.where(sg.out_deg > 0,
+                         self.alpha / jnp.maximum(sg.out_deg, 1.0), 0.0)
+        return dp * rate
+
+    def sweep_fold(self, sg, params, state, agg):
+        proc, dp = self._processable(sg, state)
         pr = state["pr"] + dp
-        inflow = self._push(sg, dp, ec)
-        delta = jnp.where(proc, 0.0, d) + jnp.where(sg.vmask, inflow, 0.0)
+        delta = jnp.where(proc, 0.0, state["delta"]) \
+            + jnp.where(sg.vmask, agg, 0.0)
         changed = jnp.sum(proc, dtype=jnp.int32)
         return {"pr": pr, "delta": delta}, changed
 

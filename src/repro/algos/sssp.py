@@ -15,7 +15,7 @@ import dataclasses
 
 import jax.numpy as jnp
 
-from repro.core.api import DeviceSubgraph, VertexProgram
+from repro.core.api import DeviceSubgraph, SemiringSweep, VertexProgram
 
 INF = jnp.float32(jnp.inf)
 
@@ -29,6 +29,10 @@ class SSSP(VertexProgram):
     monotone: bool = True          # distances only tighten -> warm-startable
     value_key: str = "dist"
 
+    # declarative sweep: min-plus relax over the edge weights; the engine
+    # routes the product through the configured edge-compute backend
+    sweep_spec = SemiringSweep("min_plus", "weight")
+
     def init(self, sg: DeviceSubgraph, params, ec):
         src = params["source"]  # global vertex id (replicated scalar)
         dist = jnp.where(sg.vid32 == src, 0.0, INF).astype(jnp.float32)
@@ -41,11 +45,11 @@ class SSSP(VertexProgram):
         changed = jnp.sum(new < state["dist"], dtype=jnp.int32)
         return {"dist": new}, changed
 
-    def sweep(self, sg, params, state, ec):
+    def sweep_values(self, sg, params, state):
+        return state["dist"]
+
+    def sweep_fold(self, sg, params, state, agg):
         d = state["dist"]
-        cand = jnp.where(sg.emask, d[sg.esrc] + sg.ew, INF)
-        agg = jnp.full((sg.v_max,), INF, jnp.float32).at[sg.edst].min(cand)
-        agg = ec.min(agg)
         new = jnp.where(sg.vmask, jnp.minimum(d, agg), d)
         changed = jnp.sum(new < d, dtype=jnp.int32)
         return {"dist": new}, changed

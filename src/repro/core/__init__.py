@@ -1,6 +1,8 @@
-from repro.core.api import DeviceSubgraph, VertexProgram
+from repro.core.api import DeviceSubgraph, SemiringSweep, VertexProgram
 from repro.core.engine import (EdgeCombine, EngineConfig, make_bsp_runner,
-                               make_sim_runner, run, run_sim, run_shard_map)
+                               make_sim_runner, resolve_edge_backend, run,
+                               run_sim, run_shard_map)
+from repro.core.layouts import EdgeLayouts, TileBlock, WindowBlock
 from repro.core.graph import Graph
 from repro.core.metrics import ExecutionStats, PartitionMetrics, partition_metrics
 from repro.core.partition import (PARTITIONERS, STREAM_ROUTERS,
@@ -13,8 +15,10 @@ from repro.core.subgraph import (PartitionedGraph, ShapePolicy,
                                  recompute_frontier, repack_partitions)
 
 __all__ = [
-    "DeviceSubgraph", "VertexProgram", "EdgeCombine", "EngineConfig", "run",
+    "DeviceSubgraph", "SemiringSweep", "VertexProgram", "EdgeCombine",
+    "EngineConfig", "run",
     "run_sim", "run_shard_map", "make_bsp_runner", "make_sim_runner",
+    "resolve_edge_backend", "EdgeLayouts", "TileBlock", "WindowBlock",
     "Graph", "ExecutionStats", "PartitionMetrics",
     "partition_metrics", "PARTITIONERS", "STREAM_ROUTERS", "cdbh_vertex_cut",
     "greedy_edge_cut", "grid_vertex_cut", "random_hash_edge_cut",

@@ -9,6 +9,12 @@ The paper exposes ``Compute(g Subgraph, M message) -> vector`` plus
   - one local relaxation sweep over the partition                 (sweep)
   - which per-vertex payload to contribute to SBS                 (frontier_out)
 
+Programs whose sweep is a semiring SpMV declare it as a ``SemiringSweep``
+spec plus ``sweep_values``/``sweep_fold`` transforms instead of overriding
+``sweep``: the base-class ``sweep`` then runs the COO reference product
+(``coo_semiring_product``), and the engine can swap in a Pallas kernel
+backend (``EngineConfig.edge_backend``) without the program noticing.
+
 The engine (engine.py) iterates ``sweep`` to a local fixed point per superstep
 ("think like a graph"; ``max_local_iters=1`` degrades to the vertex-centric
 baseline), performs SBS with the program's combiner, counts changed
@@ -18,10 +24,12 @@ no partition emits changes (voteToHalt + no pending messages).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, NamedTuple, Optional
+from typing import Any, ClassVar, NamedTuple, Optional
 
 import jax.numpy as jnp
 import numpy as np
+
+from repro.kernels.ref import combine_identity as _combine_identity
 
 
 class DeviceSubgraph(NamedTuple):
@@ -67,13 +75,14 @@ class DeviceSubgraph(NamedTuple):
         return self.vmask & ~self.is_frontier
 
 
+# The engine's supported (combiner, dtype) envelope. Values delegate to the
+# one generic implementation in kernels/ref.py (the kernels share it), so
+# identity semantics cannot silently diverge between the COO and Pallas
+# paths; the dict itself stays the strict allowlist the error message names.
 COMBINER_IDENTITY = {
-    ("min", jnp.float32.dtype): np.float32(np.inf),
-    ("min", jnp.int32.dtype): np.int32(np.iinfo(np.int32).max),
-    ("max", jnp.float32.dtype): np.float32(-np.inf),
-    ("max", jnp.int32.dtype): np.int32(np.iinfo(np.int32).min),
-    ("sum", jnp.float32.dtype): np.float32(0),
-    ("sum", jnp.int32.dtype): np.int32(0),
+    (c, jnp.dtype(d)): _combine_identity(c, d)
+    for c in ("min", "max", "sum")
+    for d in (jnp.float32, jnp.int32)
 }
 
 
@@ -88,6 +97,88 @@ def combiner_identity(combiner: str, dtype) -> np.generic:
             f"no combiner identity for (combiner={combiner!r}, "
             f"dtype={jnp.dtype(dtype).name}); supported (combiner, dtype) "
             f"pairs: {supported}") from None
+
+
+@dataclasses.dataclass(frozen=True)
+class SemiringSweep:
+    """Declarative local-sweep spec: the partition-local relaxation is a
+    semiring SpMV over the partition's adjacency (kernels/ref.py):
+
+      min_plus    agg[d] = min_e  vals[src(e)] + ev(e)     (SSSP relax, CC
+                  min-label propagation with ev = 0)
+      plus_times  agg[d] = sum_e  vals[src(e)] * ev(e)     (PageRank push
+                  with ev = 1; vals carry the alpha/out_deg rate)
+
+    ``edge_values`` names the edge-value map ``ev`` declaratively
+    (``'weight'`` | ``'zero'`` | ``'one'``) so edge-compute backends can
+    bake it into device layouts at assembly time (core/layouts.py). The
+    vertex-side pre/post transforms around the product are the program's
+    ``sweep_values``/``sweep_fold`` methods.
+
+    A program that publishes a spec (``sweep_spec``) gets its ``sweep``
+    generated: the engine routes the product through the backend selected
+    by ``EngineConfig.edge_backend`` — COO gather/scatter, dense Pallas
+    tiles, or windowed Pallas combine — while pre/post transforms and the
+    changed-count stay the program's own code. Programs whose sweep does
+    not fit the shape (graph simulation's label-indexed joins, or anything
+    stateful per edge) leave ``sweep_spec`` as None and override ``sweep``
+    directly; they always run on the COO path.
+    """
+
+    semiring: str                    # 'min_plus' | 'plus_times'
+    edge_values: str = "weight"      # 'weight' | 'zero' | 'one'
+
+    _SEMIRINGS = ("min_plus", "plus_times")
+    _EDGE_VALUES = ("weight", "zero", "one")
+
+    def __post_init__(self):
+        if self.semiring not in self._SEMIRINGS:
+            raise ValueError(f"SemiringSweep.semiring={self.semiring!r}: "
+                             f"allowed values are {self._SEMIRINGS}")
+        if self.edge_values not in self._EDGE_VALUES:
+            raise ValueError(
+                f"SemiringSweep.edge_values={self.edge_values!r}: allowed "
+                f"values are {self._EDGE_VALUES}")
+
+    @property
+    def combiner(self) -> str:
+        """The reduce-by-destination combiner of the semiring's 'addition'."""
+        return "min" if self.semiring == "min_plus" else "sum"
+
+    def identity(self, dtype) -> np.generic:
+        """Absorbing element absent edges contribute (inf / int-max / 0)."""
+        return combiner_identity(self.combiner, dtype)
+
+
+def coo_semiring_product(sg: "DeviceSubgraph", spec: SemiringSweep, vals):
+    """The reference edge-compute backend: one semiring product over the
+    partition's COO edge list (dense gather + segment scatter). This is
+    bit-for-bit the historical hand-rolled sweep body of SSSP/CC/PageRank;
+    the Pallas backends (engine.py) must match it exactly for ``min_plus``
+    and to float tolerance for ``plus_times``.
+
+    ``vals`` is [v_max] or [v_max, K]; returns an aggregate of the same
+    shape (identity where a vertex has no in-edge).
+    """
+    ident = spec.identity(vals.dtype)
+    if spec.edge_values == "weight":
+        ev = sg.ew.astype(vals.dtype)
+    elif spec.edge_values == "zero":
+        ev = jnp.zeros_like(sg.ew, dtype=vals.dtype)
+    else:
+        ev = jnp.ones_like(sg.ew, dtype=vals.dtype)
+    sv = vals[sg.esrc]                               # [e_max(, K)]
+    if vals.ndim == 2:
+        ev = ev[:, None]
+        emask = sg.emask[:, None]
+    else:
+        emask = sg.emask
+    cand = sv + ev if spec.semiring == "min_plus" else sv * ev
+    cand = jnp.where(emask, cand, ident)
+    agg = jnp.full(vals.shape, ident, vals.dtype)
+    if spec.semiring == "min_plus":
+        return agg.at[sg.edst].min(cand)
+    return agg.at[sg.edst].add(cand)
 
 
 @dataclasses.dataclass
@@ -133,9 +224,38 @@ class VertexProgram:
         Returns (state, n_changed:int32)."""
         raise NotImplementedError
 
-    def sweep(self, sg: DeviceSubgraph, params, state):
-        """One local relaxation pass. Returns (state, n_changed:int32)."""
+    # ---- local sweep: declarative spec or hand-rolled override -------- #
+    # Class-level (ClassVar, not a dataclass field): the spec is part of a
+    # program's *type*, like its method overrides — per-instance knobs that
+    # change the traced computation belong in dataclass fields instead.
+    sweep_spec: ClassVar[Optional[SemiringSweep]] = None
+
+    def sweep_values(self, sg: DeviceSubgraph, params, state):
+        """Per-vertex values entering the semiring product ([v_max] or
+        [v_max, K]); only consulted when ``sweep_spec`` is set."""
         raise NotImplementedError
+
+    def sweep_fold(self, sg: DeviceSubgraph, params, state, agg):
+        """Fold the product's aggregate (same shape as ``sweep_values``)
+        back into state. Returns (state, n_changed:int32)."""
+        raise NotImplementedError
+
+    def sweep(self, sg: DeviceSubgraph, params, state, ec):
+        """One local relaxation pass. Returns (state, n_changed:int32).
+
+        Programs with a ``sweep_spec`` inherit this implementation — the
+        COO reference backend; ``EngineConfig.edge_backend`` swaps the
+        product for a Pallas kernel without touching the program. Programs
+        without a spec override the whole method."""
+        spec = self.sweep_spec
+        if spec is None:
+            raise NotImplementedError(
+                f"{type(self).__name__} defines neither sweep_spec nor a "
+                "sweep override")
+        vals = self.sweep_values(sg, params, state)
+        agg = coo_semiring_product(sg, spec, vals)
+        agg = ec.min(agg) if spec.semiring == "min_plus" else ec.sum(agg)
+        return self.sweep_fold(sg, params, state, agg)
 
     def frontier_out(self, sg: DeviceSubgraph, params, state) -> jnp.ndarray:
         """Per-vertex SBS contribution [v_max, K]."""

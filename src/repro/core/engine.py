@@ -66,12 +66,16 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.core import sbs
-from repro.core.api import DeviceSubgraph, VertexProgram
+from repro.core.api import DeviceSubgraph, SemiringSweep, VertexProgram
+from repro.core.layouts import EdgeLayouts, TileBlock, WindowBlock
 from repro.core.metrics import ExecutionStats
 from repro.core.subgraph import PartitionedGraph
+from repro.kernels.bsp_spmv import TM, TN, bsp_spmv
+from repro.kernels.ref import combine_identity, tile_pad_identity
+from repro.kernels.segment_combine import W, segment_combine_windowed
 
 __all__ = ["EngineConfig", "EdgeCombine", "run", "run_sim", "run_shard_map",
-           "make_sim_runner", "make_bsp_runner"]
+           "make_sim_runner", "make_bsp_runner", "resolve_edge_backend"]
 
 
 # --------------------------------------------------------------------------- #
@@ -106,6 +110,11 @@ class EngineConfig:
     max_local_iters: int = 10_000     # straggler bound (DESIGN.md §7)
     max_supersteps: int = 100_000
     backend: str = "sim"              # 'sim' | 'shard_map'
+    edge_backend: str = "coo"         # 'coo' | 'pallas_tiles' |
+                                      # 'pallas_windows' — how the local
+                                      # sweep's semiring product is computed
+                                      # for SemiringSweep programs (programs
+                                      # without a spec always run COO)
     trace: bool = False               # python superstep loop w/ per-step stats
     sparse_sync_capacity: int = 0     # >0: compacted all-gather SBS (shard)
     shard_slots: bool = False         # shard the SBS buffer over edge_axes
@@ -119,6 +128,7 @@ class EngineConfig:
 
     _MODES = ("sc", "vc")
     _BACKENDS = ("sim", "shard_map")
+    _EDGE_BACKENDS = ("coo", "pallas_tiles", "pallas_windows")
 
     def __post_init__(self):
         """Fail at construction, not deep inside a run (a typo'd mode would
@@ -132,6 +142,10 @@ class EngineConfig:
             raise ValueError(
                 f"EngineConfig.backend={self.backend!r}: allowed values are "
                 f"{self._BACKENDS}")
+        if self.edge_backend not in self._EDGE_BACKENDS:
+            raise ValueError(
+                f"EngineConfig.edge_backend={self.edge_backend!r}: allowed "
+                f"values are {self._EDGE_BACKENDS}")
         for name in ("subgraph_axes", "edge_axes"):
             axes = getattr(self, name)
             if isinstance(axes, str) or not all(
@@ -172,18 +186,152 @@ def _device_subgraph(pg: PartitionedGraph) -> DeviceSubgraph:
     )
 
 
+# --------------------------------------------------------------------------- #
+# Edge-compute backends: how a SemiringSweep program's local relaxation
+# product is evaluated. 'coo' is the reference dense gather/scatter
+# (api.coo_semiring_product, inside program.sweep); the Pallas backends
+# route the product through the kernels in repro.kernels against the
+# device layouts built by core.layouts (interpret mode off-TPU).
+# --------------------------------------------------------------------------- #
+def resolve_edge_backend(program: VertexProgram, cfg: EngineConfig) -> str:
+    """The backend this (program, config) pair actually runs: programs
+    without a ``sweep_spec`` (gsim, MSSP) always take the COO path — their
+    hand-rolled ``sweep`` *is* the computation, there is nothing to swap."""
+    return "coo" if program.sweep_spec is None else cfg.edge_backend
+
+
+def _tile_product(blk: TileBlock, vals, spec: SemiringSweep, v_max: int):
+    """Semiring product via bsp_spmv for one partition ([v_max, K] vals) or
+    the whole stacked graph ([P, v_max, K]): the stacked case flattens every
+    partition's tile list into ONE kernel launch by offsetting the tile ids
+    with ``p * n_tiles_per_partition`` — per-partition lists are dst-major
+    sorted, so the concatenation is too, and each partition covers its own
+    dst rows (no cross-partition accumulation is possible)."""
+    ident = tile_pad_identity(spec.semiring, vals.dtype)
+    if not jnp.issubdtype(vals.dtype, jnp.floating):
+        # integer min_plus: pads are ADDED to values — clamp so that
+        # ident + ident cannot wrap (sound below 2**30, see kernels/ref.py)
+        vals = jnp.minimum(vals, ident)
+    ndt = max(-(-v_max // TM), 1)
+    nst = max(-(-v_max // TN), 1)
+    if vals.ndim == 2:                                     # one partition
+        K = vals.shape[-1]
+        v = jnp.pad(vals, ((0, nst * TN - v_max), (0, 0)),
+                    constant_values=ident)
+        out = bsp_spmv(blk.tiles, blk.tile_dst, blk.tile_src,
+                       v.reshape(nst, TN, K), n_dst_tiles=ndt,
+                       semiring=spec.semiring)
+        return out.reshape(ndt * TM, K)[:v_max]
+    P, _, K = vals.shape                                   # stacked [P, ...]
+    t_max = blk.tiles.shape[1]
+    v = jnp.pad(vals, ((0, 0), (0, nst * TN - v_max), (0, 0)),
+                constant_values=ident)
+    offs = jnp.arange(P, dtype=jnp.int32)[:, None]
+    out = bsp_spmv(blk.tiles.reshape(P * t_max, TM, TN),
+                   (blk.tile_dst + offs * ndt).reshape(-1),
+                   (blk.tile_src + offs * nst).reshape(-1),
+                   v.reshape(P * nst, TN, K), n_dst_tiles=P * ndt,
+                   semiring=spec.semiring)
+    return out.reshape(P, ndt * TM, K)[:, :v_max]
+
+
+def _edge_messages(spec: SemiringSweep, vals, esrc, ew):
+    """Per-edge semiring messages ``vals[src] (+|*) ev`` (padding edges are
+    computed too — their buffer slot is out of range and dropped)."""
+    sv = jnp.take_along_axis(vals, esrc[..., None], axis=-2) \
+        if vals.ndim == 3 else vals[esrc]
+    if spec.edge_values == "weight":
+        ev = ew.astype(vals.dtype)[..., None]
+        return sv + ev if spec.semiring == "min_plus" else sv * ev
+    if spec.edge_values == "zero":
+        return sv if spec.semiring == "min_plus" else jnp.zeros_like(sv)
+    return sv                        # 'one': + 0 / * 1 are both identities
+
+
+def _window_product(blk: WindowBlock, vals, spec: SemiringSweep, v_max: int,
+                    esrc, ew):
+    """Semiring product via segment_combine_windowed; same one-partition /
+    stacked duality (window ids offset by ``p * n_windows``)."""
+    ident = combine_identity(spec.combiner, vals.dtype)
+    nw = max(-(-v_max // W), 1)
+    msgs = _edge_messages(spec, vals, esrc, ew)
+    if vals.ndim == 2:
+        K = vals.shape[-1]
+        n_buf = blk.ldst.shape[-1]
+        slot = jnp.where(blk.eslot >= 0, blk.eslot, n_buf)   # pad -> dropped
+        buf = jnp.full((n_buf, K), ident, vals.dtype)
+        buf = buf.at[slot].set(msgs, mode="drop")
+        out = segment_combine_windowed(buf, blk.ldst, blk.bwin, n_windows=nw,
+                                       combiner=spec.combiner)
+        return out.reshape(nw * W, K)[:v_max]
+    P, _, K = vals.shape
+    n_buf = blk.ldst.shape[-1]
+    offs = jnp.arange(P, dtype=jnp.int32)[:, None]
+    slot = jnp.where(blk.eslot >= 0, blk.eslot + offs * n_buf, P * n_buf)
+    buf = jnp.full((P * n_buf, K), ident, vals.dtype)
+    buf = buf.at[slot.reshape(-1)].set(msgs.reshape(-1, K), mode="drop")
+    out = segment_combine_windowed(
+        buf, blk.ldst.reshape(-1), (blk.bwin + offs * nw).reshape(-1),
+        n_windows=P * nw, combiner=spec.combiner)
+    return out.reshape(P, nw * W, K)[:, :v_max]
+
+
+def _make_pallas_sweep(program: VertexProgram, edge_backend: str):
+    """Per-partition sweep closure for the shard_map body (and the
+    superstep of ``_batched_local_phase``): pre-transform -> kernel product
+    -> edge-combine -> fold, exactly the shape of the base-class COO sweep
+    in api.py."""
+    spec = program.sweep_spec
+
+    def sweep(sg: DeviceSubgraph, lay_blk, params, state, ec: EdgeCombine):
+        vals = program.sweep_values(sg, params, state)
+        squeeze = vals.ndim == sg.vmask.ndim           # [.., v_max] -> K=1
+        v = vals[..., None] if squeeze else vals
+        v_max = sg.vmask.shape[-1]
+        if edge_backend == "pallas_tiles":
+            agg = _tile_product(lay_blk, v, spec, v_max)
+        else:
+            agg = _window_product(lay_blk, v, spec, v_max, sg.esrc, sg.ew)
+        agg = ec.min(agg) if spec.semiring == "min_plus" else ec.sum(agg)
+        if squeeze:
+            agg = agg[..., 0]
+        return program.sweep_fold(sg, params, state, agg)
+
+    return sweep
+
+
+def _layout_block_from(lay: EdgeLayouts, pg: PartitionedGraph,
+                       program: VertexProgram, edge_backend: str):
+    """Device layout pytree a Pallas runner takes as an explicit input
+    (never closed over: the arrays change under streaming, the compiled
+    runner must not bake them in)."""
+    spec = program.sweep_spec
+    if edge_backend == "pallas_tiles":
+        if not jnp.issubdtype(jnp.dtype(program.dtype), jnp.floating):
+            assert pg.n_vertices < 2**30, \
+                ("integer min_plus through the tile kernel clamps values to "
+                 "iinfo.max >> 1 (kernels/ref.py tile_pad_identity); ids "
+                 "must stay below 2**30")
+        return lay.device_tiles(pg, spec.semiring, spec.edge_values,
+                                program.dtype)
+    return lay.device_windows()
+
+
 def _local_phase(program: VertexProgram, sg: DeviceSubgraph, params, state,
-                 merged_v, ec: EdgeCombine, bound: int, first):
+                 merged_v, ec: EdgeCombine, bound: int, first,
+                 sweep_fn=None):
     """apply incoming -> sweep to local fixed point (or one hop).
 
     ``first`` is True at superstep 0, where there are no incoming messages
     (paper Algorithm 1's ``if superstep = 0`` branch) and apply is skipped.
+    ``sweep_fn`` overrides ``program.sweep`` (Pallas edge backends).
     """
+    sweep = sweep_fn if sweep_fn is not None else program.sweep
     state = jax.lax.cond(
         first, lambda st: st,
         lambda st: program.apply_frontier(sg, params, st, merged_v, ec)[0],
         state)
-    state, ch = program.sweep(sg, params, state, ec)
+    state, ch = sweep(sg, params, state, ec)
 
     def cond(c):
         i, _, chg = c
@@ -191,11 +339,69 @@ def _local_phase(program: VertexProgram, sg: DeviceSubgraph, params, state,
 
     def body(c):
         i, st, _ = c
-        st, chg = program.sweep(sg, params, st, ec)
+        st, chg = sweep(sg, params, st, ec)
         return (i + 1, st, chg)
 
     i, state, last_ch = jax.lax.while_loop(cond, body, (jnp.int32(1), state, ch))
     out = program.frontier_out(sg, params, state)
+    return state, out, i, last_ch
+
+
+def _batched_local_phase(program: VertexProgram, sgs, lay_blk, params, state,
+                         merged_v, ec: EdgeCombine, bound: int, first,
+                         edge_backend: str):
+    """Stacked-graph local phase for the simulator's Pallas path.
+
+    The vmapped ``_local_phase`` cannot host a Pallas call (the batching
+    rule would have to lift the kernel); instead the whole [P, ...] stack
+    goes through ONE flattened kernel launch per sweep, and the while loop
+    emulates vmap-of-while semantics by hand: a partition whose local fixed
+    point is reached stops updating (its rows are select-frozen) while the
+    others continue — identical results, per-partition sweep counts, and
+    straggler bound as the vmapped COO path."""
+    state = jax.lax.cond(
+        first, lambda st: st,
+        lambda st: jax.vmap(
+            lambda sg, s, m: program.apply_frontier(sg, params, s, m, ec)[0]
+        )(sgs, st, merged_v), state)
+
+    def sweep_all(st):
+        vals = jax.vmap(
+            lambda sg, s: program.sweep_values(sg, params, s))(sgs, st)
+        squeeze = vals.ndim == 2
+        v = vals[..., None] if squeeze else vals
+        v_max = sgs.vmask.shape[-1]
+        if edge_backend == "pallas_tiles":
+            agg = _tile_product(lay_blk, v, program.sweep_spec, v_max)
+        else:
+            agg = _window_product(lay_blk, v, program.sweep_spec, v_max,
+                                  sgs.esrc, sgs.ew)
+        if squeeze:
+            agg = agg[..., 0]
+        return jax.vmap(
+            lambda sg, s, a: program.sweep_fold(sg, params, s, a)
+        )(sgs, st, agg)
+
+    state, ch = sweep_all(state)
+    n_parts = sgs.vmask.shape[0]
+    i0 = jnp.ones((n_parts,), jnp.int32)
+
+    def cond(c):
+        i, _, chg = c
+        return jnp.any((chg > 0) & (i < bound))
+
+    def body(c):
+        i, st, chg = c
+        live = (chg > 0) & (i < bound)
+        st2, ch2 = sweep_all(st)
+        st = jax.tree.map(
+            lambda a, b: jnp.where(live.reshape((-1,) + (1,) * (b.ndim - 1)),
+                                   b, a), st, st2)
+        return (jnp.where(live, i + 1, i), st, jnp.where(live, ch2, chg))
+
+    i, state, last_ch = jax.lax.while_loop(cond, body, (i0, state, ch))
+    out = jax.vmap(
+        lambda sg, s: program.frontier_out(sg, params, s))(sgs, state)
     return state, out, i, last_ch
 
 
@@ -253,22 +459,43 @@ def _exchange_bytes_per_step(cfg: EngineConfig, n_slots: int, K: int,
     return (n_slots + 1) * K * itemsize * n_parts
 
 
+def _flops_per_sweep(program: VertexProgram, edge_backend: str,
+                     pg: PartitionedGraph,
+                     lay: Optional[EdgeLayouts]) -> np.ndarray:
+    """[P] semiring ops one local sweep issues per partition, for
+    ``ExecutionStats.backend_flops``: the COO path pays one combine + one
+    reduce per resident edge per payload lane; the Pallas backends pay for
+    the dense tiles/blocks they actually launch (identity padding included —
+    that is the density tax the stats make visible)."""
+    K = program.payload
+    if edge_backend == "coo" or lay is None:
+        return 2 * K * pg.edges_per_part.astype(np.int64)
+    return lay.flops_per_sweep(edge_backend, K)
+
+
 # --------------------------------------------------------------------------- #
 # Simulator backend
 # --------------------------------------------------------------------------- #
 def _make_sim_superstep(program: VertexProgram, cfg: EngineConfig,
-                        n_slots: int):
-    """One vmapped BSP superstep over the stacked [P, ...] pytree."""
+                        n_slots: int, edge_backend: str = "coo"):
+    """One BSP superstep over the stacked [P, ...] pytree: vmapped local
+    phase on the COO backend, one flattened Pallas launch per sweep on the
+    kernel backends. ``lay`` is the device layout pytree (None for COO)."""
     ident = program.identity
     ec = EdgeCombine(())
     ex = sbs.SimExchange()
 
-    def superstep(sgs, params, state, last_out, merged_buf, first):
+    def superstep(sgs, lay, params, state, last_out, merged_buf, first):
         merged_v = jax.vmap(lambda sg: sbs.gather_merged(merged_buf, sg.slot))(sgs)
-        state, out, sweeps, last_ch = jax.vmap(
-            lambda sg, st, m: _local_phase(program, sg, params, st, m, ec,
-                                           cfg.local_bound, first)
-        )(sgs, state, merged_v)
+        if edge_backend == "coo":
+            state, out, sweeps, last_ch = jax.vmap(
+                lambda sg, st, m: _local_phase(program, sg, params, st, m, ec,
+                                               cfg.local_bound, first)
+            )(sgs, state, merged_v)
+        else:
+            state, out, sweeps, last_ch = _batched_local_phase(
+                program, sgs, lay, params, state, merged_v, ec,
+                cfg.local_bound, first, edge_backend)
         bufs, changed = jax.vmap(
             lambda sg, o, lo: _pack(program, sg, o, lo, n_slots)
         )(sgs, out, last_out)
@@ -285,13 +512,20 @@ def make_sim_runner(program: VertexProgram, cfg: EngineConfig, n_slots: int,
                     *, warm_start=False):
     """Build the simulator BSP loop as a pure function
 
-        runner(sgs, params[, warm_block]) ->
+        runner(sgs[, lay], params[, warm_block]) ->
             (results, supersteps, total_messages, sweeps_per_part)
 
     ``sgs`` is the stacked [P, ...] DeviceSubgraph pytree, ``params`` the
     program's parameter pytree (traced — repeated calls with different
     params reuse one compilation), ``warm_block`` (``warm_start=True``) a
     [P, v_max, K] previous-result block threaded into ``program.warm_init``.
+
+    When ``resolve_edge_backend(program, cfg)`` picks a Pallas backend the
+    runner takes the device layout pytree (``TileBlock``/``WindowBlock``,
+    built by ``_layout_block_from``) as its second argument — an explicit
+    input,
+    not a closure, so a serving session's compiled executable keeps working
+    as the layouts evolve under streaming.
 
     ``run_sim`` calls the runner eagerly once per job; ``GraphSession``
     wraps it in ``jax.jit``, AOT-compiles it once per
@@ -300,9 +534,10 @@ def make_sim_runner(program: VertexProgram, cfg: EngineConfig, n_slots: int,
     K = program.payload
     ident = program.identity
     ec = EdgeCombine(())
-    superstep = _make_sim_superstep(program, cfg, n_slots)
+    edge_backend = resolve_edge_backend(program, cfg)
+    superstep = _make_sim_superstep(program, cfg, n_slots, edge_backend)
 
-    def runner(sgs, params, *warm):
+    def _run(sgs, lay, params, warm):
         n_parts, v_max = sgs.vmask.shape
         v_init = jax.vmap(lambda sg: program.init(sg, params, ec))(sgs)
         if warm_start:
@@ -320,7 +555,7 @@ def make_sim_runner(program: VertexProgram, cfg: EngineConfig, n_slots: int,
         def body(c):
             step, state, last_out, merged_buf, tot_msgs, tot_sweeps, _, _ = c
             state, out, merged_buf, msgs, active, sweeps = superstep(
-                sgs, params, state, last_out, merged_buf, step == 0)
+                sgs, lay, params, state, last_out, merged_buf, step == 0)
             return (step + 1, state, out, merged_buf, tot_msgs + msgs,
                     tot_sweeps + sweeps, msgs, active)
 
@@ -332,6 +567,13 @@ def make_sim_runner(program: VertexProgram, cfg: EngineConfig, n_slots: int,
         results = jax.vmap(
             lambda sg, st: program.result(sg, params, st))(sgs, state)
         return results, steps, tot_msgs, tot_sweeps
+
+    if edge_backend == "coo":
+        def runner(sgs, params, *warm):
+            return _run(sgs, None, params, warm)
+    else:
+        def runner(sgs, lay, params, *warm):
+            return _run(sgs, lay, params, warm)
 
     return runner
 
@@ -355,9 +597,19 @@ def run_sim(program: VertexProgram, pg: PartitionedGraph, params=None,
     sgs = _device_subgraph(pg)
     n_slots, K = pg.n_slots, program.payload
     warm = init_state is not None and program.monotone
+    edge_backend = resolve_edge_backend(program, cfg)
+    lay = lay_blk = None
+    if edge_backend != "coo":
+        lay = pg.ensure_edge_layouts()
+        lay_blk = _layout_block_from(lay, pg, program, edge_backend)
 
-    stats = ExecutionStats()
+    stats = ExecutionStats(edge_backend=edge_backend)
     epp_host = pg.edges_per_part.astype(np.int64)
+    flops_pp = _flops_per_sweep(program, edge_backend, pg, lay)
+    if edge_backend == "pallas_tiles":
+        spec = program.sweep_spec
+        stats.tile_density = lay.density(pg, spec.semiring, spec.edge_values,
+                                         program.dtype)
     t0 = time.perf_counter()
 
     if cfg.trace:
@@ -382,9 +634,9 @@ def run_sim(program: VertexProgram, pg: PartitionedGraph, params=None,
                                       ckpt["merged"])
             start_step = int(ckpt["step"])
 
-        superstep = _make_sim_superstep(program, cfg, n_slots)
+        superstep = _make_sim_superstep(program, cfg, n_slots, edge_backend)
         step_fn = jax.jit(lambda st, lo, mb, first: superstep(
-            sgs, params, st, lo, mb, first))
+            sgs, lay_blk, params, st, lo, mb, first))
         state, last_out, merged_buf = v_init, last0, merged0
         for step in range(start_step, cfg.max_supersteps):
             state, last_out, merged_buf, msgs, active, sweeps = step_fn(
@@ -393,8 +645,9 @@ def run_sim(program: VertexProgram, pg: PartitionedGraph, params=None,
             stats.messages_per_step.append(msgs)
             stats.active_parts_per_step.append(active)
             stats.total_messages += msgs
-            stats.processed_edges += int(
-                (np.asarray(sweeps, dtype=np.int64) * epp_host).sum())
+            sweeps_h = np.asarray(sweeps, dtype=np.int64)
+            stats.processed_edges += int((sweeps_h * epp_host).sum())
+            stats.backend_flops += int((sweeps_h * flops_pp).sum())
             stats.total_bytes += (n_slots + 1) * K * np.dtype(program.dtype).itemsize * pg.n_parts
             stats.supersteps = step + 1
             if cfg.checkpoint_every and (step + 1) % cfg.checkpoint_every == 0 \
@@ -411,14 +664,16 @@ def run_sim(program: VertexProgram, pg: PartitionedGraph, params=None,
     else:
         assert resume_from is None, "resume requires trace mode"
         runner = make_sim_runner(program, cfg, n_slots, warm_start=warm)
-        args = (sgs, params)
+        args = (sgs,) if edge_backend == "coo" else (sgs, lay_blk)
+        args += (params,)
         if warm:
             args += (jnp.asarray(_warm_block(program, pg, init_state)),)
         results, steps, tot_msgs, tot_sweeps = runner(*args)
         stats.supersteps = int(steps)
         stats.total_messages = int(tot_msgs)
-        stats.processed_edges = int(
-            (np.asarray(tot_sweeps, dtype=np.int64) * epp_host).sum())
+        sweeps_h = np.asarray(tot_sweeps, dtype=np.int64)
+        stats.processed_edges = int((sweeps_h * epp_host).sum())
+        stats.backend_flops = int((sweeps_h * flops_pp).sum())
         stats.total_bytes = stats.supersteps * (n_slots + 1) * K * \
             np.dtype(program.dtype).itemsize * pg.n_parts
 
@@ -448,13 +703,21 @@ def make_bsp_runner(program: VertexProgram, mesh: Mesh,
     [P, v_max, K] warm-state block sharded like the vertex tables, threaded
     into ``program.warm_init`` right after on-device init — the incremental
     recompute path (docs/STREAMING.md). The caller owns the soundness check
-    (monotone program, insert-only delta)."""
+    (monotone program, insert-only delta).
+
+    When ``resolve_edge_backend(program, cfg)`` picks a Pallas backend the
+    runner takes the device layout pytree as an additional input directly
+    after ``sgs`` (positional protocol: ``sgs[, layout][, warm][, params]``),
+    sharded over the subgraph axes like the vertex tables; each shard's
+    local sweep then runs one whole-partition kernel product, which is why
+    the Pallas backends refuse edge-axis sharding."""
     sub_axes = tuple(cfg.subgraph_axes)
     edge_axes = tuple(cfg.edge_axes)
     K = program.payload
     ident = program.identity
     ec = EdgeCombine(edge_axes)
     ex = sbs.ShardExchange(sub_axes)
+    edge_backend = resolve_edge_backend(program, cfg)
 
     edge_spec = P(sub_axes, edge_axes if edge_axes else None)
     vert_spec = P(sub_axes, None)
@@ -474,8 +737,29 @@ def make_bsp_runner(program: VertexProgram, mesh: Mesh,
     shard_slots = cfg.shard_slots and n_edge_shards > 1
     n_loc = -(-(n_slots + 1) // n_edge_shards) if shard_slots else n_slots + 1
 
-    def _body(sg_block, warm_block, params):
+    lay_specs = None
+    if edge_backend != "coo":
+        if n_edge_shards > 1:
+            raise ValueError(
+                f"edge_backend={edge_backend!r} computes whole-partition "
+                "tile/window products and cannot shard a partition's edges "
+                "over the model axes; use edge_backend='coo' with "
+                f"edge_axes={edge_axes}")
+        if edge_backend == "pallas_tiles":
+            lay_specs = TileBlock(tiles=P(sub_axes, None, None, None),
+                                  tile_dst=vert_spec, tile_src=vert_spec)
+        else:
+            lay_specs = WindowBlock(eslot=vert_spec, ldst=vert_spec,
+                                    bwin=vert_spec)
+        pallas_sweep = _make_pallas_sweep(program, edge_backend)
+
+    def _body(sg_block, lay_block, warm_block, params):
         sg = DeviceSubgraph(*[_squeeze(x) for x in sg_block])
+        sweep_fn = None
+        if lay_block is not None:
+            lay = type(lay_block)(*[_squeeze(x) for x in lay_block])
+            sweep_fn = (lambda sg_, p_, st_, ec_:
+                        pallas_sweep(sg_, lay, p_, st_, ec_))
         state = program.init(sg, params, ec)
         if warm_block is not None:
             state = program.warm_init(sg, params, state,
@@ -521,7 +805,7 @@ def make_bsp_runner(program: VertexProgram, mesh: Mesh,
         def superstep(state, last_out, merged_v, first):
             state, out, sweeps, last_ch = _local_phase(
                 program, sg, params, state, merged_v, ec, cfg.local_bound,
-                first)
+                first, sweep_fn=sweep_fn)
             ref = merged_v if cfg.lean_frontier else last_out
             changed = program.changed_mask(out, ref) & sg.frontier
             if shard_slots:
@@ -564,29 +848,24 @@ def make_bsp_runner(program: VertexProgram, mesh: Mesh,
 
     out_specs = (vert_spec, P(), P(), P(sub_axes))
     warm_spec = P(sub_axes, None, None)
+    # positional protocol (in this order): sgs [, layout][, warm][, params]
+    in_specs = [sg_specs]
+    if lay_specs is not None:
+        in_specs.append(lay_specs)
+    if warm_start:
+        in_specs.append(warm_spec)
     if params_as_input:
-        pspec = jax.tree.map(lambda _: P(), params)
-        if warm_start:
-            @partial(shard_map, mesh=mesh,
-                     in_specs=(sg_specs, warm_spec, pspec),
-                     out_specs=out_specs)
-            def go(sg_block, warm_block, params):
-                return _body(sg_block, warm_block, params)
-        else:
-            @partial(shard_map, mesh=mesh, in_specs=(sg_specs, pspec),
-                     out_specs=out_specs)
-            def go(sg_block, params):
-                return _body(sg_block, None, params)
-    elif warm_start:
-        @partial(shard_map, mesh=mesh, in_specs=(sg_specs, warm_spec),
-                 out_specs=out_specs)
-        def go(sg_block, warm_block):
-            return _body(sg_block, warm_block, params)
-    else:
-        @partial(shard_map, mesh=mesh, in_specs=(sg_specs,),
-                 out_specs=out_specs)
-        def go(sg_block):
-            return _body(sg_block, None, params)
+        in_specs.append(jax.tree.map(lambda _: P(), params))
+
+    @partial(shard_map, mesh=mesh, in_specs=tuple(in_specs),
+             out_specs=out_specs)
+    def go(*args):
+        it = iter(args)
+        sg_block = next(it)
+        lay_block = next(it) if lay_specs is not None else None
+        warm_block = next(it) if warm_start else None
+        p = next(it) if params_as_input else params
+        return _body(sg_block, lay_block, warm_block, p)
 
     return go
 
@@ -611,14 +890,18 @@ def run_shard_map(program: VertexProgram, pg: PartitionedGraph, mesh: Mesh,
     go = make_bsp_runner(program, mesh, cfg, n_slots, params=params,
                          has_vlabel=pg.vlabel is not None, warm_start=warm)
     sgs = _device_subgraph(pg)
+    edge_backend = resolve_edge_backend(program, cfg)
+    lay = None
+    args = (sgs,)
+    if edge_backend != "coo":
+        lay = pg.ensure_edge_layouts()
+        args += (_layout_block_from(lay, pg, program, edge_backend),)
 
     t0 = time.perf_counter()
     with mesh:
         if warm:
-            wv = jnp.asarray(_warm_block(program, pg, init_state))
-            res, steps, tot_msgs, sweeps_per_part = go(sgs, wv)
-        else:
-            res, steps, tot_msgs, sweeps_per_part = go(sgs)
+            args += (jnp.asarray(_warm_block(program, pg, init_state)),)
+        res, steps, tot_msgs, sweeps_per_part = go(*args)
     res = np.asarray(res)
     sweeps_per_part = np.asarray(sweeps_per_part, dtype=np.int64)
     stats = ExecutionStats(
@@ -628,7 +911,14 @@ def run_shard_map(program: VertexProgram, pg: PartitionedGraph, mesh: Mesh,
         total_bytes=int(steps) * _exchange_bytes_per_step(
             cfg, n_slots, K, program.dtype, pg.n_parts, n_edge),
         wall_time=time.perf_counter() - t0,
+        edge_backend=edge_backend,
+        backend_flops=int((sweeps_per_part * _flops_per_sweep(
+            program, edge_backend, pg, lay)).sum()),
     )
+    if edge_backend == "pallas_tiles":
+        spec = program.sweep_spec
+        stats.tile_density = lay.density(pg, spec.semiring, spec.edge_values,
+                                         program.dtype)
     return res, stats
 
 

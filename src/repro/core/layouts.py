@@ -1,0 +1,418 @@
+"""Engine-facing edge-compute layouts: stacked [P, ...] tile/window
+decompositions of a ``PartitionedGraph``'s per-partition adjacencies, feeding
+the Pallas semiring kernels (``repro.kernels``) from inside the BSP sweep.
+
+``repro.kernels.ops`` holds the single-partition reference builders; this
+module is their serving-grade counterpart, with three extra obligations:
+
+  - **stacked + padded** — every per-partition quantity is padded to a
+    shared capacity (``t_max`` tiles, ``b_max`` edge blocks) so the whole
+    graph is one dense pytree: the simulator backend flattens all P
+    partitions into a *single* kernel launch (tile/window ids offset by
+    ``p * n_dst_tiles``), and the shard_map backend shards the leading axis.
+    Padding tiles hold the semiring identity and point at the last dst tile
+    (keeping the dst-major sort); padding blocks point at the last window.
+  - **program-independent geometry, per-program realization** — the
+    expensive part (edge -> tile/slot assignment) depends only on the graph
+    and is built once; the dense tile *values* depend on the program's
+    ``SemiringSweep`` (semiring x edge-value map x dtype) and are realized
+    lazily per key and cached. Window layouts never bake values at all
+    (messages are computed in-sweep), so one geometry serves every program.
+  - **ShapePolicy-bucketed capacities** — ``t_max``/``b_max`` come from the
+    same geometric bucketing as ``v_max``/``e_max`` (docs/ARCHITECTURE.md,
+    "shape-bucket lifecycle") and are *grow-only* under delta patching, so a
+    serving session's compiled Pallas runners survive in-bucket streaming
+    growth with zero retraces. ``rebuild_partitions`` refreshes only the
+    partitions a delta touched.
+
+Layout invariants the kernels rely on (see kernels/bsp_spmv.py):
+tile lists are (dst, src)-sorted per partition with every dst tile row
+covered at least once; ``bwin`` is ascending covering every window; padded
+edge slots are ``-1`` (dropped by the scatter); all values at padded
+positions are the semiring/combiner identity.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, NamedTuple, Optional, Tuple
+
+import numpy as np
+
+from repro.kernels.bsp_spmv import TM, TN
+from repro.kernels.segment_combine import W
+from repro.kernels.ref import tile_pad_identity
+
+__all__ = ["EdgeLayouts", "TileBlock", "WindowBlock", "build_edge_layouts",
+           "EDGE_VALUE_KINDS"]
+
+EDGE_VALUE_KINDS = ("weight", "zero", "one")
+DEFAULT_BLOCK_EDGES = 512
+
+
+class TileBlock(NamedTuple):
+    """Device pytree for the ``pallas_tiles`` backend (stacked [P, ...])."""
+    tiles: object      # [P, t_max, TM, TN] program dtype
+    tile_dst: object   # [P, t_max] int32, partition-local dst tile ids
+    tile_src: object   # [P, t_max] int32
+
+
+class WindowBlock(NamedTuple):
+    """Device pytree for the ``pallas_windows`` backend (stacked [P, ...])."""
+    eslot: object      # [P, e_max] int32 buffer slot per edge (-1 = padding)
+    ldst: object       # [P, b_max*Be] int32 dst row within the 128-window
+    bwin: object       # [P, b_max] int32 window id per block (ascending)
+
+
+def _edge_values(kind: str, ew: np.ndarray, dtype) -> np.ndarray:
+    """The declarative edge-value map of a ``SemiringSweep``: what each edge
+    contributes to the semiring product (SSSP relaxes by the weight, CC
+    propagates labels over 0-weight edges, PageRank pushes unweighted)."""
+    if kind == "weight":
+        return ew.astype(dtype)
+    if kind == "zero":
+        return np.zeros(ew.shape[0], dtype)
+    if kind == "one":
+        return np.ones(ew.shape[0], dtype)
+    raise ValueError(f"unknown edge-value kind {kind!r}; "
+                     f"expected one of {EDGE_VALUE_KINDS}")
+
+
+def _tile_geometry(ls, ld, ndt: int, nst: int):
+    """(local src, local dst) -> (tile_dst, tile_src, edge_tile, r, c).
+
+    Tile list sorted (dst, src)-major with identity fillers covering every
+    dst tile row; ``edge_tile[e]`` indexes the *final* sorted list.
+    """
+    key = (ld.astype(np.int64) // TM) * nst + (ls.astype(np.int64) // TN)
+    uniq = np.unique(key)
+    covered = np.zeros(ndt, bool)
+    covered[(uniq // nst).astype(np.int64)] = True
+    missing = np.nonzero(~covered)[0]
+    T = uniq.shape[0] + missing.shape[0]
+
+    tile_dst = np.zeros(T, np.int32)
+    tile_src = np.zeros(T, np.int32)
+    tile_dst[:uniq.shape[0]] = (uniq // nst).astype(np.int32)
+    tile_src[:uniq.shape[0]] = (uniq % nst).astype(np.int32)
+    tile_dst[uniq.shape[0]:] = missing.astype(np.int32)
+
+    final = np.lexsort((tile_src, tile_dst))
+    inv = np.empty(T, np.int64)
+    inv[final] = np.arange(T)
+    edge_tile = inv[np.searchsorted(uniq, key)].astype(np.int32)
+    return (tile_dst[final], tile_src[final], edge_tile,
+            (ld % TM).astype(np.int32), (ls % TN).astype(np.int32))
+
+
+def _window_geometry(ld, nw: int, Be: int):
+    """Ascending-dst local edges -> (eslot, ldst, bwin, n_blocks)."""
+    win = ld.astype(np.int64) // W
+    counts = np.bincount(win, minlength=nw)
+    blocks = np.maximum(-(-counts // Be), 1)          # >= 1 block per window
+    n_blocks = int(blocks.sum())
+    bwin = np.repeat(np.arange(nw, dtype=np.int32), blocks)
+    woff = np.concatenate([[0], np.cumsum(blocks)])[:-1] * Be
+    estart = np.concatenate([[0], np.cumsum(counts)])[:-1]
+    eslot = (woff[win] + (np.arange(ld.shape[0]) - estart[win])).astype(
+        np.int32)
+    ldst = np.zeros(n_blocks * Be, np.int32)
+    ldst[eslot] = (ld % W).astype(np.int32)
+    return eslot, ldst, bwin, n_blocks
+
+
+@dataclasses.dataclass
+class EdgeLayouts:
+    """Host-side stacked layout state attached to a ``PartitionedGraph``
+    (``PartitionedGraph.ensure_edge_layouts``). All arrays are numpy; the
+    ``device_tiles``/``device_windows`` accessors return cached jnp pytrees
+    that a runner takes as explicit inputs (never closed over — the
+    session's zero-retrace contract needs them to be arguments)."""
+
+    n_parts: int
+    v_max: int
+    e_max: int
+    t_max: int                    # padded tiles per partition (bucketed)
+    b_max: int                    # padded edge blocks per partition
+    block_edges: int
+    policy: object                # ShapePolicy governing t_max/b_max growth
+
+    tile_dst: np.ndarray          # [P, t_max] int32
+    tile_src: np.ndarray          # [P, t_max] int32
+    n_tiles: np.ndarray           # [P] int64 real (content) tiles
+    edge_tile: np.ndarray         # [P, e_max] int32 (-1 = padding edge)
+    edge_r: np.ndarray            # [P, e_max] int32 row within tile
+    edge_c: np.ndarray            # [P, e_max] int32 col within tile
+    eslot: np.ndarray             # [P, e_max] int32 (-1 = padding edge)
+    ldst: np.ndarray              # [P, b_max*Be] int32
+    bwin: np.ndarray              # [P, b_max] int32
+    n_blocks: np.ndarray          # [P] int64 real blocks
+
+    _tiles: Dict[Tuple, np.ndarray] = dataclasses.field(default_factory=dict)
+    _filled: Dict[Tuple, np.ndarray] = dataclasses.field(
+        default_factory=dict)             # [P] non-identity entries per part
+    _density: Dict[Tuple, float] = dataclasses.field(default_factory=dict)
+    _device: Dict[Tuple, object] = dataclasses.field(default_factory=dict)
+
+    # ------------------------------------------------------------------ #
+    @property
+    def n_dst_tiles(self) -> int:
+        return max(-(-self.v_max // TM), 1)
+
+    @property
+    def n_src_tiles(self) -> int:
+        return max(-(-self.v_max // TN), 1)
+
+    @property
+    def n_windows(self) -> int:
+        return max(-(-self.v_max // W), 1)
+
+    def shape_key(self, backend: str) -> tuple:
+        """What a compiled Pallas runner is additionally specialized to —
+        joins the session's padded-shape key for cache lookup/eviction."""
+        if backend == "pallas_tiles":
+            return ("tiles", self.t_max, self.n_dst_tiles, self.n_src_tiles)
+        return ("windows", self.b_max, self.block_edges, self.n_windows)
+
+    # ------------------------------------------------------------------ #
+    # realization: dense tile values per (semiring, edge-value map, dtype)
+    # ------------------------------------------------------------------ #
+    def _realize_tiles(self, pg, key, parts: Optional[Iterable[int]] = None):
+        semiring, kind, dtype_str = key
+        dtype = np.dtype(dtype_str)
+        # tile contents are ADDED to values under min_plus: integer dtypes
+        # pad with the wrap-safe halved identity (kernels/ref.py)
+        ident = tile_pad_identity(semiring, dtype)
+        tiles = self._tiles.get(key)
+        if tiles is None or parts is None:
+            tiles = np.full((self.n_parts, self.t_max, TM, TN), ident, dtype)
+            parts = range(self.n_parts)
+            self._tiles[key] = tiles
+            self._filled[key] = np.zeros(self.n_parts, np.int64)
+        filled = self._filled[key]
+        for p in parts:
+            tiles[p] = ident
+            valid = self.edge_tile[p] >= 0
+            vals = _edge_values(kind, pg.ew[p][valid], dtype)
+            idx = (self.edge_tile[p][valid], self.edge_r[p][valid],
+                   self.edge_c[p][valid])
+            if semiring == "plus_times":
+                np.add.at(tiles[p], idx, vals)
+            else:
+                np.minimum.at(tiles[p], idx, vals)
+            # per-partition count, so an incremental rebuild never scans the
+            # untouched partitions' tile bytes just to refresh the density
+            filled[p] = int((tiles[p] != ident).sum())
+        self._density[key] = int(filled.sum()) / max(
+            int(self.n_tiles.sum()) * TM * TN, 1)
+        return tiles
+
+    def tile_values(self, pg, semiring: str, kind: str, dtype) -> np.ndarray:
+        key = (semiring, kind, np.dtype(dtype).str)
+        if key not in self._tiles:
+            self._realize_tiles(pg, key)
+        return self._tiles[key]
+
+    def density(self, pg, semiring: str, kind: str, dtype) -> float:
+        """Fraction of non-identity entries across the real (content) tiles
+        — the utilization the dense-tile MXU path achieves; low density
+        means ``pallas_windows`` (or COO) is the better backend."""
+        key = (semiring, kind, np.dtype(dtype).str)
+        if key not in self._density:
+            self._realize_tiles(pg, key)
+        return self._density[key]
+
+    # ------------------------------------------------------------------ #
+    # device pytrees (cached; invalidated by any rebuild)
+    # ------------------------------------------------------------------ #
+    def device_tiles(self, pg, semiring: str, kind: str, dtype) -> TileBlock:
+        import jax.numpy as jnp
+        key = ("tiles", semiring, kind, np.dtype(dtype).str)
+        blk = self._device.get(key)
+        if blk is None:
+            vals = self.tile_values(pg, semiring, kind, dtype)
+            blk = TileBlock(tiles=jnp.asarray(vals),
+                            tile_dst=jnp.asarray(self.tile_dst),
+                            tile_src=jnp.asarray(self.tile_src))
+            self._device[key] = blk
+        return blk
+
+    def device_windows(self) -> WindowBlock:
+        import jax.numpy as jnp
+        blk = self._device.get(("windows",))
+        if blk is None:
+            blk = WindowBlock(eslot=jnp.asarray(self.eslot),
+                              ldst=jnp.asarray(self.ldst),
+                              bwin=jnp.asarray(self.bwin))
+            self._device[("windows",)] = blk
+        return blk
+
+    # ------------------------------------------------------------------ #
+    # accounting
+    # ------------------------------------------------------------------ #
+    def flops_per_sweep(self, backend: str, K: int) -> np.ndarray:
+        """[P] semiring ops one local sweep costs per partition: the dense
+        work the kernels actually issue (multiply+accumulate per tile entry;
+        compare+combine per block slot), *including* identity padding inside
+        real tiles/blocks — that is the density tax the stats surface."""
+        if backend == "pallas_tiles":
+            return (self.n_tiles * (2 * TM * TN * K)).astype(np.int64)
+        return (self.n_blocks * (2 * W * self.block_edges * K)).astype(
+            np.int64)
+
+    # ------------------------------------------------------------------ #
+    # (re)build
+    # ------------------------------------------------------------------ #
+    def _build_partition(self, pg, p: int):
+        """Recompute partition ``p``'s geometry rows in place (caps must
+        already fit; callers grow them first)."""
+        m = pg.emask[p]
+        ls, ld = pg.esrc[p][m], pg.edst[p][m]
+        ne = ls.shape[0]
+        ndt, nst, nw = self.n_dst_tiles, self.n_src_tiles, self.n_windows
+        td, ts, et, er, ec = _tile_geometry(ls, ld, ndt, nst)
+        T = td.shape[0]
+        self.tile_dst[p] = ndt - 1       # padding tiles: last dst row
+        self.tile_src[p] = nst - 1
+        self.tile_dst[p, :T] = td
+        self.tile_src[p, :T] = ts
+        self.n_tiles[p] = T
+        self.edge_tile[p] = -1
+        self.edge_r[p] = 0
+        self.edge_c[p] = 0
+        self.edge_tile[p, :ne] = et
+        self.edge_r[p, :ne] = er
+        self.edge_c[p, :ne] = ec
+
+        es, ldst, bw, nb = _window_geometry(ld, nw, self.block_edges)
+        self.eslot[p] = -1
+        self.eslot[p, :ne] = es
+        self.ldst[p] = 0
+        self.ldst[p, :ldst.shape[0]] = ldst
+        self.bwin[p] = nw - 1            # padding blocks: last window
+        self.bwin[p, :nb] = bw
+        self.n_blocks[p] = nb
+
+    def _partition_caps(self, pg, p: int) -> Tuple[int, int]:
+        """(tiles, blocks) partition ``p`` needs at the current shapes."""
+        m = pg.emask[p]
+        ls, ld = pg.esrc[p][m], pg.edst[p][m]
+        nst, nw = self.n_src_tiles, self.n_windows
+        key = (ld.astype(np.int64) // TM) * nst + (ls.astype(np.int64) // TN)
+        uniq = np.unique(key)
+        covered = np.zeros(self.n_dst_tiles, bool)
+        covered[(uniq // nst).astype(np.int64)] = True
+        T = uniq.shape[0] + int((~covered).sum())
+        counts = np.bincount(ld.astype(np.int64) // W, minlength=nw)
+        B = int(np.maximum(-(-counts // self.block_edges), 1).sum())
+        return T, B
+
+    def _grow_caps(self, need_t: int, need_b: int) -> bool:
+        """Grow ``t_max``/``b_max`` to the policy bucket (grow-only, like
+        ``e_max`` under a delta). Returns True if anything grew."""
+        grew = False
+        if need_t > self.t_max:
+            new_t = max(self.t_max, self.policy.bucket(need_t))
+            pad = new_t - self.t_max
+            self.tile_dst = np.concatenate(
+                [self.tile_dst, np.full((self.n_parts, pad),
+                                        self.n_dst_tiles - 1, np.int32)], 1)
+            self.tile_src = np.concatenate(
+                [self.tile_src, np.full((self.n_parts, pad),
+                                        self.n_src_tiles - 1, np.int32)], 1)
+            for key, tiles in list(self._tiles.items()):
+                ident = tile_pad_identity(key[0], np.dtype(key[2]))
+                self._tiles[key] = np.concatenate(
+                    [tiles, np.full((self.n_parts, pad, TM, TN), ident,
+                                    tiles.dtype)], 1)
+            self.t_max = new_t
+            grew = True
+        if need_b > self.b_max:
+            new_b = max(self.b_max, self.policy.bucket(need_b))
+            pad = new_b - self.b_max
+            self.bwin = np.concatenate(
+                [self.bwin, np.full((self.n_parts, pad),
+                                    self.n_windows - 1, np.int32)], 1)
+            self.ldst = np.concatenate(
+                [self.ldst, np.zeros((self.n_parts, pad * self.block_edges),
+                                     np.int32)], 1)
+            self.b_max = new_b
+            grew = True
+        return grew
+
+    def rebuild_partitions(self, pg, parts: Iterable[int]) -> None:
+        """Incrementally refresh the layout after a delta patched ``parts``
+        (stream/delta.py): grow the bucketed caps if any patched partition
+        overflows them, rebuild only the touched partitions' geometry, and
+        re-realize only their rows of every cached tile realization. The
+        capacities are grow-only, so untouched partitions' rows are valid
+        as-is."""
+        parts = sorted(set(int(p) for p in parts))
+        need_t = need_b = 0
+        for p in parts:
+            t, b = self._partition_caps(pg, p)
+            need_t, need_b = max(need_t, t), max(need_b, b)
+        self._grow_caps(need_t, need_b)
+        for p in parts:
+            self._build_partition(pg, p)
+        for key in self._tiles:
+            self._realize_tiles(pg, key, parts)
+        self._device.clear()
+
+    def sync_capacity(self, pg) -> bool:
+        """Column-grow the per-edge arrays after ``e_max`` growth (``v_max``
+        growth moves the tile/window grid and needs a full rebuild — then
+        this returns False). Geometry content is untouched: new columns are
+        padding until ``rebuild_partitions`` fills them."""
+        if self.n_parts != pg.n_parts or self.v_max != pg.v_max:
+            return False
+        if pg.e_max > self.e_max:
+            pad = pg.e_max - self.e_max
+
+            def grow(a, fill):
+                return np.concatenate(
+                    [a, np.full((self.n_parts, pad), fill, a.dtype)], 1)
+
+            self.edge_tile = grow(self.edge_tile, -1)
+            self.edge_r = grow(self.edge_r, 0)
+            self.edge_c = grow(self.edge_c, 0)
+            self.eslot = grow(self.eslot, -1)
+            self.e_max = pg.e_max
+            self._device.clear()
+        return self.e_max == pg.e_max
+
+    def matches(self, pg) -> bool:
+        """False when the graph's padded shapes moved under us (bucket
+        growth, compaction): the tile/window grid is derived from ``v_max``,
+        so the whole geometry must be rebuilt."""
+        return (self.n_parts == pg.n_parts and self.v_max == pg.v_max
+                and self.e_max == pg.e_max)
+
+
+def build_edge_layouts(pg, policy,
+                       block_edges: int = DEFAULT_BLOCK_EDGES) -> EdgeLayouts:
+    """Full build for all partitions of ``pg`` (assembly time / first use);
+    capacities land on ``policy`` buckets so in-bucket streaming growth
+    never changes a compiled runner's input shapes."""
+    P, v_max, e_max = pg.n_parts, pg.v_max, pg.e_max
+    lay = EdgeLayouts(
+        n_parts=P, v_max=v_max, e_max=e_max, t_max=0, b_max=0,
+        block_edges=int(block_edges), policy=policy,
+        tile_dst=np.zeros((P, 0), np.int32),
+        tile_src=np.zeros((P, 0), np.int32),
+        n_tiles=np.zeros(P, np.int64),
+        edge_tile=np.full((P, e_max), -1, np.int32),
+        edge_r=np.zeros((P, e_max), np.int32),
+        edge_c=np.zeros((P, e_max), np.int32),
+        eslot=np.full((P, e_max), -1, np.int32),
+        ldst=np.zeros((P, 0), np.int32),
+        bwin=np.zeros((P, 0), np.int32),
+        n_blocks=np.zeros(P, np.int64),
+    )
+    need_t = need_b = 1
+    for p in range(P):
+        t, b = lay._partition_caps(pg, p)
+        need_t, need_b = max(need_t, t), max(need_b, b)
+    lay._grow_caps(need_t, need_b)
+    for p in range(P):
+        lay._build_partition(pg, p)
+    return lay

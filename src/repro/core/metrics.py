@@ -70,6 +70,17 @@ class ExecutionStats:
     evicted_runners: int = 0           # LRU evictions this query's cache
                                        # admission forced (GraphSession only)
     processed_edges: int = 0
+    edge_backend: str = "coo"          # which edge-compute backend ran the
+                                       # local sweeps ('coo' also for
+                                       # programs without a SemiringSweep)
+    backend_flops: int = 0             # semiring ops the backend issued:
+                                       # 2*K per resident edge on COO; the
+                                       # dense tile/block work (identity
+                                       # padding included) on Pallas
+    tile_density: float = 0.0          # non-identity fraction of the real
+                                       # tiles ('pallas_tiles' only): the
+                                       # MXU utilization of the dense path
+                                       # — low density says use windows/COO
 
     @property
     def peps(self) -> float:

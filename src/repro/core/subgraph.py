@@ -196,6 +196,11 @@ class PartitionedGraph:
     frontier_gvid: np.ndarray  # [n_slots] int64
     edge_part: Optional[np.ndarray] = None  # [E] int32 host-side assignment
     vlabel: Optional[np.ndarray] = None     # [P, v_max] int32 (gsim labels)
+    # Stacked tile/window decompositions for the Pallas edge-compute
+    # backends (core/layouts.py EdgeLayouts) — built on demand via
+    # ensure_edge_layouts (or eagerly at assembly), kept incrementally
+    # fresh by stream/delta.py, rebuilt by repack_partitions.
+    edge_layouts: Optional[object] = None
 
     # ------------------------------------------------------------------ #
     @property
@@ -226,6 +231,25 @@ class PartitionedGraph:
         sel = self.vmask & self.is_master
         out[self.gvid[sel]] = values[sel]
         return out
+
+    def ensure_edge_layouts(self, shape_policy: Optional["ShapePolicy"] = None,
+                            block_edges: int = 512):
+        """The ``EdgeLayouts`` for this graph, built on first use (and
+        rebuilt whenever the padded shapes moved since — delta patching
+        keeps an existing one fresh incrementally instead). The policy of
+        the first build sticks; callers with a bucketed serving policy
+        (GraphSession) pass it here before the first Pallas query."""
+        from repro.core.layouts import build_edge_layouts
+        lay = self.edge_layouts
+        if lay is not None and lay.matches(self):
+            return lay
+        policy = resolve_shape_policy(
+            shape_policy if lay is None or shape_policy is not None
+            else lay.policy, 8)
+        if lay is not None and shape_policy is None:
+            block_edges = lay.block_edges
+        self.edge_layouts = build_edge_layouts(self, policy, block_edges)
+        return self.edge_layouts
 
     def set_vertex_labels(self, labels: np.ndarray) -> None:
         """Attach global per-vertex int labels (graph simulation §7.3)."""
@@ -301,7 +325,8 @@ def assemble_partitioned_graph(
         out_degrees: np.ndarray, in_degrees: np.ndarray,
         *, pad_multiple: int = 8,
         shape_policy: Optional[ShapePolicy] = None,
-        edge_part: Optional[np.ndarray] = None) -> PartitionedGraph:
+        edge_part: Optional[np.ndarray] = None,
+        build_edge_layouts: bool = False) -> PartitionedGraph:
     """Fill the dense padded arrays.
 
     ``load_edges(p) -> (src, dst, w)`` supplies partition p's edges in global
@@ -311,6 +336,12 @@ def assemble_partitioned_graph(
 
     ``shape_policy`` picks ``v_max``/``e_max`` from the content maxima;
     omitted, it is ``ShapePolicy.exact(pad_multiple)``.
+
+    ``build_edge_layouts=True`` also assembles the Pallas edge-compute
+    layouts (core/layouts.py) under the same policy — what a serving
+    session that knows it will run ``edge_backend='pallas_*'`` wants;
+    otherwise they are built lazily by ``ensure_edge_layouts`` on first
+    use, and maintained incrementally either way.
     """
     P = n_parts
     policy = resolve_shape_policy(shape_policy, pad_multiple)
@@ -354,7 +385,7 @@ def assemble_partitioned_graph(
         ew[p, :ne] = ww
         emask[p, :ne] = True
 
-    return PartitionedGraph(
+    pg = PartitionedGraph(
         n_parts=P, n_vertices=n_vertices, n_edges=n_edges,
         n_slots=n_slots, v_max=v_max, e_max=e_max,
         gvid=gvid, vmask=vmask, esrc=esrc, edst=edst, ew=ew, emask=emask,
@@ -362,6 +393,9 @@ def assemble_partitioned_graph(
         out_deg=out_deg, in_deg=in_deg, is_master=is_master,
         frontier_gvid=frontier_gvid, edge_part=edge_part,
     )
+    if build_edge_layouts:
+        pg.ensure_edge_layouts(shape_policy=policy)
+    return pg
 
 
 # --------------------------------------------------------------------------- #
@@ -370,7 +404,9 @@ def assemble_partitioned_graph(
 def build_partitioned_graph(g: Graph, edge_part: np.ndarray, n_parts: int,
                             *, pad_multiple: int = 8,
                             shape_policy: Optional[ShapePolicy] = None,
-                            include_isolated: bool = True) -> PartitionedGraph:
+                            include_isolated: bool = True,
+                            build_edge_layouts: bool = False
+                            ) -> PartitionedGraph:
     edge_part = np.asarray(edge_part, dtype=np.int32)
     assert edge_part.shape == g.src.shape
 
@@ -392,7 +428,8 @@ def build_partitioned_graph(g: Graph, edge_part: np.ndarray, n_parts: int,
     return assemble_partitioned_graph(
         n_parts, g.n_vertices, g.n_edges, part_vertices, counts, load_edges,
         g.out_degrees(), g.in_degrees(), pad_multiple=pad_multiple,
-        shape_policy=shape_policy, edge_part=edge_part)
+        shape_policy=shape_policy, edge_part=edge_part,
+        build_edge_layouts=build_edge_layouts)
 
 
 # --------------------------------------------------------------------------- #
@@ -482,6 +519,14 @@ def repack_partitions(pg: PartitionedGraph,
     pg.n_edges = int(emask.sum())
     pg.edge_part = None
     recompute_frontier(pg)
+    if pg.edge_layouts is not None:
+        # a repack moves the tile/window grid (v_max changed, rows moved):
+        # rebuild the layouts under their own policy at assembly time, so
+        # Pallas queries after a compaction see fresh geometry immediately
+        old = pg.edge_layouts
+        pg.edge_layouts = None
+        pg.ensure_edge_layouts(shape_policy=old.policy,
+                               block_edges=old.block_edges)
     return remap
 
 

@@ -13,10 +13,19 @@ grid steps visit tiles of the same dst row (revisit-accumulate pattern,
   - ``plus_times`` rides the MXU: tile @ vals_block  (128x128 @ 128xK)
   - ``min_plus``   rides the VPU: min over src of (tile + vals)
 
-Requirements (enforced by ``ops.build_tiles``):
+Requirements (enforced by ``ops.build_tiles`` and ``core.layouts``):
   - tile list sorted by (tile_dst, tile_src); every dst tile row appears at
     least once (identity filler tiles), so every output block is initialized;
-  - tiles dense with the semiring's absorbing pad (0 / +inf).
+  - tiles dense with the semiring's absorbing pad (0 / +inf / INT_MAX).
+
+Dtype: the kernel computes in the dtype of ``tiles``/``vals`` (they must
+agree). ``min_plus`` supports any ordered dtype — float32 for SSSP
+distances, int32 for CC min-label propagation (whose identity is
+``iinfo(int32).max``, not +inf). ``plus_times`` requires a float dtype (the
+MXU path accumulates through ``preferred_element_type``).
+
+``interpret=None`` (the default) auto-selects: compiled on TPU, interpret
+mode everywhere else (``ops.default_interpret``) — overridable per call.
 """
 from __future__ import annotations
 
@@ -31,6 +40,11 @@ TM = 128   # dst rows per tile (MXU-aligned)
 TN = 128   # src cols per tile
 
 
+def default_interpret() -> bool:
+    """Pallas interpret mode unless we are actually on a TPU backend."""
+    return jax.default_backend() != "tpu"
+
+
 def _kernel(tile_dst_ref, tile_src_ref, tiles_ref, vals_ref, out_ref, *,
             semiring: str):
     i = pl.program_id(0)
@@ -41,7 +55,7 @@ def _kernel(tile_dst_ref, tile_src_ref, tiles_ref, vals_ref, out_ref, *,
     v = vals_ref[0]                                      # [TN, K]
 
     if semiring == "plus_times":
-        part = jnp.dot(t, v, preferred_element_type=jnp.float32)   # MXU
+        part = jnp.dot(t, v, preferred_element_type=v.dtype)       # MXU
 
         @pl.when(first)
         def _init():
@@ -66,12 +80,20 @@ def _kernel(tile_dst_ref, tile_src_ref, tiles_ref, vals_ref, out_ref, *,
 @functools.partial(jax.jit, static_argnames=("n_dst_tiles", "semiring",
                                              "interpret"))
 def bsp_spmv(tiles, tile_dst, tile_src, vals, *, n_dst_tiles: int,
-             semiring: str = "plus_times", interpret: bool = True):
-    """tiles [T,TM,TN] f32, tile_dst/src [T] i32 (dst-major sorted),
-    vals [n_src_tiles, TN, K] f32  ->  [n_dst_tiles, TM, K] f32."""
+             semiring: str = "plus_times", interpret=None):
+    """tiles [T,TM,TN], tile_dst/src [T] i32 (dst-major sorted),
+    vals [n_src_tiles, TN, K]  ->  [n_dst_tiles, TM, K] (dtype of vals)."""
+    if interpret is None:
+        interpret = default_interpret()
     T, tm, tn = tiles.shape
     K = vals.shape[-1]
     assert (tm, tn) == (TM, TN)
+    assert tiles.dtype == vals.dtype, (tiles.dtype, vals.dtype)
+    if semiring == "plus_times" and not jnp.issubdtype(vals.dtype,
+                                                       jnp.floating):
+        raise ValueError(
+            f"plus_times rides the MXU and needs a float dtype, got "
+            f"{vals.dtype}; min_plus is the integer-friendly semiring")
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
@@ -85,6 +107,6 @@ def bsp_spmv(tiles, tile_dst, tile_src, vals, *, n_dst_tiles: int,
     return pl.pallas_call(
         functools.partial(_kernel, semiring=semiring),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((n_dst_tiles, TM, K), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((n_dst_tiles, TM, K), vals.dtype),
         interpret=interpret,
     )(tile_dst, tile_src, tiles, vals)

@@ -8,28 +8,42 @@
                        identity block).
 ``spmv``               end-to-end semiring SpMV on COO via either kernel,
                        validated against ref.ref_* in tests.
+
+These are the single-partition reference builders; the engine-facing stacked
+[P, ...] layouts the edge-compute backends consume live in
+``repro.core.layouts`` (same tile/window geometry, plus ShapePolicy
+bucketing and incremental rebuild).
+
+Layouts honor an explicit ``dtype`` (``min_plus`` works on float32 *and*
+int32 — CC label propagation; ``plus_times``/``sum`` need floats for the
+MXU). ``interpret=None`` everywhere auto-selects compiled on TPU, interpret
+mode elsewhere (``default_interpret``), overridable per call.
 """
 from __future__ import annotations
 
 import numpy as np
 import jax.numpy as jnp
 
-from repro.kernels.bsp_spmv import TM, TN, bsp_spmv
+from repro.kernels.bsp_spmv import TM, TN, bsp_spmv, default_interpret
 from repro.kernels.segment_combine import W, segment_combine_windowed
-from repro.kernels.ref import semiring_identity
+from repro.kernels.ref import combine_identity, tile_pad_identity
 
 __all__ = ["build_tiles", "window_align_edges", "spmv", "TileLayout",
-           "WindowLayout"]
+           "WindowLayout", "default_interpret"]
 
 
 class TileLayout:
     """Dense-tile decomposition of one partition's adjacency (COO -> tiles)."""
 
-    def __init__(self, src, dst, w, n_src_rows, n_dst_rows, semiring):
+    def __init__(self, src, dst, w, n_src_rows, n_dst_rows, semiring,
+                 dtype=np.float32):
         src = np.asarray(src, np.int64)
         dst = np.asarray(dst, np.int64)
-        w = np.asarray(w, np.float32)
-        ident = float(semiring_identity(semiring))
+        self.dtype = np.dtype(dtype)
+        w = np.asarray(w, self.dtype)
+        # the kernel ADDS pads to values under min_plus: integer dtypes use
+        # the wrap-safe halved identity (kernels/ref.py tile_pad_identity)
+        ident = tile_pad_identity(semiring, self.dtype)
         self.semiring = semiring
         self.n_src_tiles = max(-(-int(n_src_rows) // TN), 1)
         self.n_dst_tiles = max(-(-int(n_dst_rows) // TM), 1)
@@ -46,7 +60,7 @@ class TileLayout:
         missing = np.nonzero(~covered)[0]
         T = uniq.shape[0] + missing.shape[0]
 
-        tiles = np.full((T, TM, TN), ident, np.float32)
+        tiles = np.full((T, TM, TN), ident, self.dtype)
         tile_dst = np.zeros(T, np.int32)
         tile_src = np.zeros(T, np.int32)
         tile_dst[:uniq.shape[0]] = (uniq // self.n_src_tiles).astype(np.int32)
@@ -68,13 +82,15 @@ class TileLayout:
         self.tile_src = tile_src[final]
         self.density = (self.tiles != ident).mean()
 
-    def __call__(self, vals, *, interpret=True):
+    def __call__(self, vals, *, interpret=None):
         """vals [n_src_rows(+pad), K] -> [n_dst_tiles*TM, K]."""
         K = vals.shape[-1]
         pad = self.n_src_tiles * TN - vals.shape[0]
-        ident = semiring_identity(self.semiring)
-        v = jnp.pad(vals.astype(jnp.float32), ((0, pad), (0, 0)),
-                    constant_values=ident)
+        ident = tile_pad_identity(self.semiring, self.dtype)
+        vals = vals.astype(self.dtype)
+        if not np.issubdtype(self.dtype, np.floating):
+            vals = jnp.minimum(vals, ident)   # keep ident + val wrap-free
+        v = jnp.pad(vals, ((0, pad), (0, 0)), constant_values=ident)
         v = v.reshape(self.n_src_tiles, TN, K)
         out = bsp_spmv(jnp.asarray(self.tiles), jnp.asarray(self.tile_dst),
                        jnp.asarray(self.tile_src), v,
@@ -83,8 +99,10 @@ class TileLayout:
         return out.reshape(self.n_dst_tiles * TM, K)
 
 
-def build_tiles(src, dst, w, n_src_rows, n_dst_rows, semiring) -> TileLayout:
-    return TileLayout(src, dst, w, n_src_rows, n_dst_rows, semiring)
+def build_tiles(src, dst, w, n_src_rows, n_dst_rows, semiring,
+                dtype=np.float32) -> TileLayout:
+    return TileLayout(src, dst, w, n_src_rows, n_dst_rows, semiring,
+                      dtype=dtype)
 
 
 class WindowLayout:
@@ -112,14 +130,15 @@ class WindowLayout:
         self.pad_mask = np.ones(self.n_blocks * Be, bool)
         self.pad_mask[self.edge_slot] = False
 
-    def __call__(self, msgs, *, combiner="sum", interpret=True):
+    def __call__(self, msgs, *, combiner="sum", interpret=None):
         """msgs [E, K] (in original edge order) -> [n_rows(+pad), K]."""
+        msgs = jnp.asarray(msgs)
         K = msgs.shape[-1]
-        ident = {"sum": 0.0, "min": np.inf, "max": -np.inf}[combiner]
+        ident = combine_identity(combiner, msgs.dtype)
         buf = jnp.full((self.n_blocks * self.block_edges, K), ident,
-                       jnp.float32)
+                       msgs.dtype)
         buf = buf.at[jnp.asarray(self.edge_slot)].set(
-            msgs[jnp.asarray(self.order)].astype(jnp.float32))
+            msgs[jnp.asarray(self.order)])
         out = segment_combine_windowed(
             buf, jnp.asarray(self.local_dst), jnp.asarray(self.block_window),
             n_windows=self.n_windows, combiner=combiner, interpret=interpret)
@@ -131,17 +150,18 @@ def window_align_edges(dst, n_rows, block_edges: int = 512) -> WindowLayout:
 
 
 def spmv(src, dst, w, vals, n_rows, *, semiring="plus_times", kernel="tiles",
-         interpret=True):
+         interpret=None, dtype=np.float32):
     """One-shot semiring SpMV over COO edges (testing/benchmark entry)."""
-    vals = jnp.asarray(vals)
+    vals = jnp.asarray(vals, dtype)
     if vals.ndim == 1:
         vals = vals[:, None]
     if kernel == "tiles":
-        layout = build_tiles(src, dst, w, vals.shape[0], n_rows, semiring)
+        layout = build_tiles(src, dst, w, vals.shape[0], n_rows, semiring,
+                             dtype=dtype)
         return layout(vals, interpret=interpret)[:n_rows]
     # windowed: materialize edge messages then reduce
     sv = vals[jnp.asarray(np.asarray(src, np.int64))]
-    wj = jnp.asarray(np.asarray(w, np.float32))[:, None]
+    wj = jnp.asarray(np.asarray(w, dtype))[:, None]
     msgs = sv * wj if semiring == "plus_times" else sv + wj
     layout = window_align_edges(dst, n_rows)
     comb = "sum" if semiring == "plus_times" else "min"

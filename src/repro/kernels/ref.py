@@ -14,8 +14,38 @@ import jax.numpy as jnp
 import numpy as np
 
 
-def semiring_identity(semiring: str):
-    return jnp.float32(0.0) if semiring == "plus_times" else jnp.float32(jnp.inf)
+def combine_identity(combiner: str, dtype):
+    """Identity element of a reduce combiner in ``dtype`` (the absorbing pad
+    value of the kernels' empty slots): +inf / iinfo.max for ``min``,
+    mirrored for ``max``, 0 for ``sum``."""
+    dt = np.dtype(dtype)
+    if combiner == "sum":
+        return dt.type(0)
+    if np.issubdtype(dt, np.floating):
+        return dt.type(np.inf if combiner == "min" else -np.inf)
+    info = np.iinfo(dt)
+    return dt.type(info.max if combiner == "min" else info.min)
+
+
+def semiring_identity(semiring: str, dtype=jnp.float32):
+    """Additive identity of the semiring — what absent matrix entries hold:
+    0 for ``plus_times``, +inf (or the integer max) for ``min_plus``."""
+    return combine_identity("sum" if semiring == "plus_times" else "min",
+                            dtype)
+
+
+def tile_pad_identity(semiring: str, dtype):
+    """Absorbing pad for *dense tile* contents and the value blocks fed to
+    ``bsp_spmv``. The tile kernel ADDS pads to values under ``min_plus``
+    (+inf + x = +inf keeps floats safe), so integer dtypes use the halved
+    max: ``ident + ident`` must not wrap past the dtype, or a padding lane
+    could win the min. Values entering the tile kernel are clamped to this
+    bound for the same reason — sound as long as real values stay below it
+    (int32: < 2**30, e.g. CC labels on graphs below a billion vertices)."""
+    dt = np.dtype(dtype)
+    if semiring == "plus_times" or np.issubdtype(dt, np.floating):
+        return semiring_identity(semiring, dt)
+    return dt.type(np.iinfo(dt).max >> 1)
 
 
 def ref_tile_spmv(tiles, tile_dst, tile_src, vals, n_dst_tiles, semiring):

@@ -14,6 +14,12 @@ block). No dynamic gather/scatter is needed inside the kernel:
 
 Scalar-prefetched ``block_window[b]`` routes each edge block to its output
 window; consecutive blocks of the same window accumulate in VMEM.
+
+Dtype: the kernel computes in ``msgs.dtype``. ``sum`` requires a float dtype
+(MXU path); ``min``/``max`` work on any ordered dtype, with the identity
+taken from ``ref.combine_identity`` (int32 min-combine pads with
+``iinfo(int32).max``). ``interpret=None`` auto-selects compiled-on-TPU /
+interpret-elsewhere, overridable per call.
 """
 from __future__ import annotations
 
@@ -23,6 +29,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.bsp_spmv import default_interpret
+from repro.kernels.ref import combine_identity
 
 W = 128       # output rows per window
 
@@ -39,7 +48,7 @@ def _kernel(block_window_ref, msgs_ref, ldst_ref, out_ref, *, combiner: str):
 
     if combiner == "sum":
         part = jnp.dot(onehot.astype(msgs.dtype).T, msgs,
-                       preferred_element_type=jnp.float32)           # MXU
+                       preferred_element_type=msgs.dtype)             # MXU
 
         @pl.when(first)
         def _init():
@@ -49,7 +58,7 @@ def _kernel(block_window_ref, msgs_ref, ldst_ref, out_ref, *, combiner: str):
         def _acc():
             out_ref[0] += part
     else:
-        ident = jnp.float32(jnp.inf) if combiner == "min" else jnp.float32(-jnp.inf)
+        ident = combine_identity(combiner, msgs.dtype)
         cand = jnp.where(onehot[:, :, None], msgs[:, None, :], ident)  # [Be,W,K]
         red = jnp.min if combiner == "min" else jnp.max
         part = red(cand, axis=0)                                       # [W, K]
@@ -68,10 +77,16 @@ def _kernel(block_window_ref, msgs_ref, ldst_ref, out_ref, *, combiner: str):
 @functools.partial(jax.jit, static_argnames=("n_windows", "combiner",
                                              "interpret"))
 def segment_combine_windowed(msgs, local_dst, block_window, *, n_windows: int,
-                             combiner: str = "sum", interpret: bool = True):
-    """msgs [B*Be, K] f32 (identity-padded), local_dst [B*Be] i32 in [0, W),
+                             combiner: str = "sum", interpret=None):
+    """msgs [B*Be, K] (identity-padded), local_dst [B*Be] i32 in [0, W),
     block_window [B] i32 sorted ascending covering every window
-    ->  [n_windows, W, K] f32."""
+    ->  [n_windows, W, K] in msgs.dtype."""
+    if interpret is None:
+        interpret = default_interpret()
+    if combiner == "sum" and not jnp.issubdtype(msgs.dtype, jnp.floating):
+        raise ValueError(
+            f"sum-combine rides the MXU and needs a float dtype, got "
+            f"{msgs.dtype}; min/max are the integer-friendly combiners")
     B = block_window.shape[0]
     Be = msgs.shape[0] // B
     K = msgs.shape[-1]
@@ -90,6 +105,6 @@ def segment_combine_windowed(msgs, local_dst, block_window, *, n_windows: int,
     return pl.pallas_call(
         functools.partial(_kernel, combiner=combiner),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((n_windows, W, K), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((n_windows, W, K), msgs.dtype),
         interpret=interpret,
     )(block_window, msgs, local_dst)

@@ -22,8 +22,9 @@ five modules. ``GraphSession`` owns all of that:
   - the streaming lifecycle is folded in as methods: ``update`` routes
     through an internal coalescing ``DeltaBuffer``, ``flush`` applies the
     patch and refreshes the device pytree, ``compact`` shrinks the padded
-    capacities and carries every cached warm result across the re-layout
-    via ``CompactStats.remap_state``;
+    capacities; both log their row remap on a pending chain that each
+    cached warm result replays lazily on its next use (a flush is O(1) in
+    warm occupancy);
   - padded shapes follow a **bucketed ShapePolicy** (geometric rounding of
     ``v_max``/``e_max`` and of the SBS slot count, default growth 2x): a
     flush that stays inside the current bucket keeps the resident pytree
@@ -33,8 +34,14 @@ five modules. ``GraphSession`` owns all of that:
     evicted entries recompile transparently on re-query, and eviction
     counts are surfaced in ``SessionStats`` / per-query
     ``ExecutionStats.evicted_runners`` / ``cache_info()``; warm-result
-    memory is bounded the same way (``max_warm_entries``), which also caps
-    what a flush spends carrying warm device blocks across a patch.
+    memory is bounded the same way (``max_warm_entries``), and both caches
+    take optional *byte* bounds (``max_runner_bytes``/``max_warm_bytes``)
+    that count estimated device/host bytes per entry instead of slots;
+  - ``EngineConfig.edge_backend`` picks the sweep's edge-compute backend
+    (COO reference or the Pallas tile/window kernels); the device layouts
+    ride as explicit runner inputs and their bucketed capacities join the
+    cache key, so in-bucket streaming growth retraces nothing on any
+    backend (docs/ARCHITECTURE.md "Edge-compute backends").
 
 Monotone programs are always compiled with the warm input: a cold start is
 served by a combiner-identity block (``warm_init`` tightening against the
@@ -57,8 +64,10 @@ Invariants the session owns (docs/API.md "Caching rules" restates them):
 
   - **cache key fields** — a compiled runner is keyed by (program dataclass
     fields, param pytree *structure*, ``EngineConfig``, padded shape key
-    ``(P, v_max, e_max, slot_capacity, has_vlabel)``, warm-input flag);
-    parameter *values* are traced inputs and never key anything.
+    ``(P, v_max, e_max, slot_capacity, has_vlabel)`` plus the Pallas
+    layout shape-key when ``edge_backend`` is a kernel backend, warm-input
+    flag); parameter *values* — and layout *contents* — are traced inputs
+    and never key anything.
   - **warm entries are dtype-cast on entry** — a cached global result is
     cast to ``program.dtype`` before it reaches either backend
     (``engine._warm_block``), so a float64 numpy result can never leak its
@@ -84,8 +93,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.engine import (EngineConfig, _device_subgraph,
-                               _exchange_bytes_per_step, _warm_block,
-                               make_bsp_runner, make_sim_runner, run_sim)
+                               _exchange_bytes_per_step, _flops_per_sweep,
+                               _layout_block_from, _warm_block,
+                               make_bsp_runner, make_sim_runner,
+                               resolve_edge_backend, run_sim)
 from repro.core.api import VertexProgram
 from repro.core.graph import Graph
 from repro.core.metrics import ExecutionStats
@@ -149,12 +160,22 @@ class _WarmEntry:
     ``global_values`` ([n_vertices(, K)], combiner-identity filled) survives
     any membership change and is re-scattered through ``_warm_block`` when
     needed; ``device_block`` ([P, v_max, K], the program's own result
-    layout) is the fast path — valid until a flush reshuffles local rows,
-    and carried across ``compact`` by ``remap_state``."""
+    layout) is the fast path — valid at ``device_epoch`` of the session's
+    remap log: insert-only flushes and compactions do NOT eagerly remap it,
+    they append to the log, and the pending chain is applied here on the
+    entry's next use (``GraphSession._sync_warm_entry``)."""
     global_values: np.ndarray
     device_block: Optional[np.ndarray]
     identity: Any
     supersteps: int
+    device_epoch: int = 0
+
+    @property
+    def nbytes(self) -> int:
+        n = self.global_values.nbytes
+        if self.device_block is not None:
+            n += self.device_block.nbytes
+        return n
 
 
 @dataclasses.dataclass
@@ -168,20 +189,50 @@ class SessionStats:
     compactions: int = 0
     uploads: int = 0               # device pytree refreshes
     compile_time_total: float = 0.0
-    cache_evictions_lru: int = 0   # runners dropped by the max_runners bound
+    cache_evictions_lru: int = 0   # runners dropped by the max_runners /
+                                   # max_runner_bytes bounds
     cache_evictions_shape: int = 0  # runners dropped by a bucket change
-    warm_evictions: int = 0        # warm results dropped by max_warm_entries
+    warm_evictions: int = 0        # warm results dropped by
+                                   # max_warm_entries / max_warm_bytes
+    runner_cache_bytes: int = 0    # estimated device bytes the compiled-
+                                   # runner cache currently pins (outputs +
+                                   # temps + code per executable)
+    warm_cache_bytes: int = 0      # host bytes of the warm-result memory
+    warm_remaps_applied: int = 0   # deferred warm-block remaps applied on
+                                   # entry use (the lazy-flush counter: one
+                                   # eager scheme would bill every entry
+                                   # on every insert-only flush instead)
 
 
 @dataclasses.dataclass
 class _RunnerEntry:
     """One bounded-cache slot: the AOT-compiled executable plus the
-    introspection the LRU policy and ``cache_info`` report on."""
+    introspection the LRU policy and ``cache_info`` report on.
+    ``shape_key`` is ``(padded-shape key, layout key)`` — the latter is None
+    for COO runners and the Pallas layout capacities otherwise, so a layout
+    cap growth evicts only the Pallas runners it actually staled."""
     compiled: Any
     shape_key: Any
     program: str                   # program type name (display only)
     compile_time: float = 0.0
     hits: int = 0
+    nbytes: int = 0                # estimated device bytes this executable
+                                   # pins (outputs + temps + generated code)
+
+
+def _runner_nbytes(compiled) -> int:
+    """Estimated device bytes a cached executable keeps alive: outputs +
+    temps + generated code from XLA's ``memory_analysis``. Inputs are the
+    session-owned resident graph, shared across runners, so they are
+    deliberately not billed. Where the analysis is unavailable the entry
+    weighs 0 — an unknown footprint must not be billed, or a single
+    mis-estimated runner could thrash the whole byte-bounded cache."""
+    try:
+        m = compiled.memory_analysis()
+        return int(m.output_size_in_bytes + m.temp_size_in_bytes
+                   + m.generated_code_size_in_bytes)
+    except Exception:
+        return 0
 
 
 class _SessionBuffer(DeltaBuffer):
@@ -226,8 +277,11 @@ class GraphSession:
     an explicit ``shape_policy`` always wins (it carries its own
     ``pad_multiple``). ``max_runners`` bounds the compiled-runner cache and
     ``max_warm_entries`` the per-(program, params) warm-result memory, both
-    with LRU eviction (``None`` = unbounded); the warm bound also caps the
-    per-flush cost of carrying warm device blocks across a patch.
+    with LRU eviction (``None`` = unbounded). ``max_runner_bytes`` /
+    ``max_warm_bytes`` additionally bound the same caches by *estimated
+    bytes per entry* (device footprint per executable via XLA's
+    ``memory_analysis``; host bytes per warm result) — slots bound entry
+    counts, bytes bound what the entries actually pin.
     """
 
     def __init__(self, pg: PartitionedGraph, *, ctx: Optional[StreamContext]
@@ -237,7 +291,9 @@ class GraphSession:
                  pad_multiple: Optional[int] = None,
                  shape_policy: Optional[ShapePolicy] = None,
                  max_runners: Optional[int] = 32,
-                 max_warm_entries: Optional[int] = 64):
+                 max_warm_entries: Optional[int] = 64,
+                 max_runner_bytes: Optional[int] = None,
+                 max_warm_bytes: Optional[int] = None):
         self.pg = pg
         self.ctx = ctx
         self.mesh = mesh
@@ -246,6 +302,8 @@ class GraphSession:
         self.pad_multiple = self.shape_policy.pad_multiple
         self.max_runners = max_runners
         self.max_warm_entries = max_warm_entries
+        self.max_runner_bytes = max_runner_bytes
+        self.max_warm_bytes = max_warm_bytes
         self.stats = SessionStats()
         self.buffer = None if ctx is None else _SessionBuffer(
             self, pg, ctx, max_edges=max_buffer_edges,
@@ -257,6 +315,10 @@ class GraphSession:
         self._warm: OrderedDict = OrderedDict()     # (pkey, params) -> entry
         self._identity_blocks: dict = {}  # cold-start [P,v_max,K] blocks
         self._keepalive: dict = {}     # id-keyed programs pinned alive
+        self._warm_epoch = 0           # advances per layout-moving event
+        self._remap_log: list = []     # [(epoch, stats-with-remap_state)]:
+                                       # pending warm-block remaps, applied
+                                       # lazily on each entry's next use
 
     # ------------------------------------------------------------------ #
     # constructors
@@ -416,12 +478,20 @@ class GraphSession:
             return run_sim(program, self.pg, params, cfg, init_state=init)
 
         self.stats.queries += 1
+        # programs without a SemiringSweep always run COO: normalize the
+        # config so their runners dedupe across edge_backend settings
+        eb = resolve_edge_backend(program, cfg)
+        if eb != cfg.edge_backend:
+            cfg = dataclasses.replace(cfg, edge_backend=eb)
         warm_in = bool(program.monotone)
-        args = (self.device_graph(), params_c)
+        args = (self.device_graph(),)
+        if eb != "coo":
+            args += (self._layout_arg(program, eb),)
+        args += (params_c,)
         if warm_in:
             args += (self._warm_arg(program, entry, use_warm),)
         compiled, compile_time, evicted = self._get_runner(
-            program, pkey, params_c, cfg, warm_in, args)
+            program, pkey, params_c, cfg, warm_in, args, eb)
         t0 = time.perf_counter()
         out = compiled(*args)
         res, steps, tot_msgs, sweeps = jax.block_until_ready(out)
@@ -432,11 +502,58 @@ class GraphSession:
         res = np.asarray(res)
         stats = self._execution_stats(program, cfg, int(steps),
                                       int(tot_msgs), np.asarray(sweeps),
-                                      wall, compile_time)
+                                      wall, compile_time, eb)
         stats.evicted_runners = evicted
         if program.monotone:
             self._remember(program, wkey, res, stats.supersteps)
         return res, stats
+
+    def _layout_arg(self, program, eb):
+        """Device layout pytree for a Pallas-backend query — an explicit
+        runner input (like params), so the executable survives layout
+        content changes and retraces only when the layout *capacities*
+        cross a bucket (a new layout shape-key)."""
+        lay = self.pg.ensure_edge_layouts(shape_policy=self.shape_policy)
+        return _layout_block_from(lay, self.pg, program, eb)
+
+    def _layout_key(self, eb):
+        if eb == "coo":
+            return None
+        lay = self.pg.edge_layouts
+        return None if lay is None else lay.shape_key(eb)
+
+    def _sync_warm_entry(self, entry: _WarmEntry) -> None:
+        """Apply the pending remap chain to this entry's device block (lazy
+        counterpart of the old eager per-flush remap): every insert-only
+        flush / compaction since the entry was last touched is replayed in
+        order. Entries never queried again never pay for any flush."""
+        if entry.device_block is None \
+                or entry.device_epoch == self._warm_epoch:
+            return
+        for ep, st in self._remap_log:
+            if ep > entry.device_epoch:
+                entry.device_block = st.remap_state(entry.device_block,
+                                                    fill=entry.identity)
+                self.stats.warm_remaps_applied += 1
+        entry.device_epoch = self._warm_epoch
+        self._sync_warm_bytes()
+
+    def _prune_remap_log(self) -> None:
+        """Drop log entries every live device block is already past. The
+        log length is bounded by the slowest-moving warm entry; clearing
+        the warm memory (deleting flush, evictions) empties it."""
+        blocks = [e.device_epoch for e in self._warm.values()
+                  if e.device_block is not None]
+        if not blocks:
+            self._remap_log.clear()
+            return
+        floor = min(blocks)
+        self._remap_log = [(ep, st) for ep, st in self._remap_log
+                           if ep > floor]
+
+    def _sync_warm_bytes(self) -> None:
+        self.stats.warm_cache_bytes = sum(e.nbytes
+                                          for e in self._warm.values())
 
     def _warm_arg(self, program, entry, use_warm):
         """[P, v_max, K] warm block: the cached result when warming, the
@@ -455,19 +572,23 @@ class GraphSession:
                                dtype=program.dtype)
                 self._identity_blocks[ikey] = blk
             return blk
+        self._sync_warm_entry(entry)
         blk = entry.device_block
         if blk is not None and blk.shape == (pg.n_parts, pg.v_max, K):
             return jnp.asarray(blk)
         return jnp.asarray(_warm_block(program, pg, entry.global_values))
 
-    def _get_runner(self, program, pkey, params_c, cfg, warm_in, args):
+    def _get_runner(self, program, pkey, params_c, cfg, warm_in, args, eb):
         """AOT-compile (trace + lower + compile, once) or fetch the cached
         executable for this (program, param structure, config, shapes).
         Returns ``(compiled, compile_time, n_lru_evictions)``; a hit
         refreshes the entry's LRU position. Runners are built against the
-        bucketed ``slot_capacity``, not the exact ``pg.n_slots``."""
-        key = (pkey, _params_struct_key(params_c), cfg, self.shape_key,
-               warm_in)
+        bucketed ``slot_capacity``, not the exact ``pg.n_slots``; Pallas
+        runners additionally key on the layout capacities (``shape_key`` of
+        the ``EdgeLayouts``), which are bucketed and grow-only too."""
+        lkey = self._layout_key(eb)
+        full_shape = (self.shape_key, lkey)
+        key = (pkey, _params_struct_key(params_c), cfg, full_shape, warm_in)
         hit = self._runners.get(key)
         if hit is not None:
             self._runners.move_to_end(key)
@@ -486,30 +607,48 @@ class GraphSession:
                                  params=params_c,
                                  has_vlabel=self.pg.vlabel is not None,
                                  warm_start=warm_in, params_as_input=True)
-            # session args are (sgs, params[, warm]); the shard runner takes
-            # (sgs[, warm], params) — reorder inside the jitted wrapper
+            # session args are (sgs[, lay], params[, warm]); the shard
+            # runner wants (sgs[, lay][, warm], params) — reorder inside
+            # the jitted wrapper
+            n_pre = 2 if eb != "coo" else 1
             with self.mesh:
                 compiled = jax.jit(
-                    lambda sgs, params, *w: go(*((sgs,) + w + (params,)))
+                    lambda *a: go(*(a[:n_pre] + a[n_pre + 1:]
+                                    + (a[n_pre],)))
                 ).lower(*args).compile()
         compile_time = time.perf_counter() - t0
         self.stats.compile_time_total += compile_time
         self._runners[key] = _RunnerEntry(
-            compiled=compiled, shape_key=self.shape_key,
-            program=type(program).__name__, compile_time=compile_time)
+            compiled=compiled, shape_key=full_shape,
+            program=type(program).__name__, compile_time=compile_time,
+            nbytes=_runner_nbytes(compiled))
         evicted = self._evict_lru(self._runners, self.max_runners,
-                                  "cache_evictions_lru")
+                                  "cache_evictions_lru",
+                                  max_bytes=self.max_runner_bytes)
+        self._sync_runner_bytes()
         return compiled, compile_time, evicted
 
+    def _sync_runner_bytes(self) -> None:
+        self.stats.runner_cache_bytes = sum(e.nbytes
+                                            for e in self._runners.values())
+
     def _evict_lru(self, cache: OrderedDict, bound: Optional[int],
-                   counter: str) -> int:
-        """Pop least-recently-used entries until ``cache`` fits ``bound``,
+                   counter: str, max_bytes: Optional[int] = None) -> int:
+        """Pop least-recently-used entries until ``cache`` fits ``bound``
+        AND its estimated bytes fit ``max_bytes`` (the most recent entry is
+        never evicted — a single over-budget entry must still serve),
         billing the named ``SessionStats`` counter and releasing any
         program pins the evictions orphaned."""
         evicted = 0
         if bound is not None:
             while len(cache) > bound:
                 cache.popitem(last=False)
+                evicted += 1
+        if max_bytes is not None:
+            total = sum(e.nbytes for e in cache.values())
+            while total > max_bytes and len(cache) > 1:
+                _, e = cache.popitem(last=False)
+                total -= e.nbytes
                 evicted += 1
         if evicted:
             setattr(self.stats, counter,
@@ -540,7 +679,7 @@ class GraphSession:
             "pad edges to a multiple of the edge axes"
 
     def _execution_stats(self, program, cfg, steps, msgs, sweeps, wall,
-                         compile_time) -> ExecutionStats:
+                         compile_time, eb="coo") -> ExecutionStats:
         pg = self.pg
         K = program.payload
         itemsize = np.dtype(program.dtype).itemsize
@@ -555,12 +694,21 @@ class GraphSession:
                 if cfg.edge_axes else 1
             total_bytes = steps * _exchange_bytes_per_step(
                 cfg, n_slots, K, program.dtype, pg.n_parts, n_edge)
-        return ExecutionStats(
+        lay = pg.edge_layouts
+        sweeps64 = sweeps.astype(np.int64)
+        st = ExecutionStats(
             supersteps=steps, total_messages=msgs,
-            processed_edges=int((sweeps.astype(np.int64)
-                                 * pg.edges_per_part.astype(np.int64)).sum()),
+            processed_edges=int(
+                (sweeps64 * pg.edges_per_part.astype(np.int64)).sum()),
             total_bytes=total_bytes, wall_time=wall,
-            compile_time=compile_time)
+            compile_time=compile_time, edge_backend=eb,
+            backend_flops=int((sweeps64 * _flops_per_sweep(
+                program, eb, pg, lay)).sum()))
+        if eb == "pallas_tiles" and lay is not None:
+            spec = program.sweep_spec
+            st.tile_density = lay.density(pg, spec.semiring,
+                                          spec.edge_values, program.dtype)
+        return st
 
     def _remember(self, program, wkey, res, supersteps):
         """Cache this converged result as the warm seed for the next
@@ -576,9 +724,12 @@ class GraphSession:
         self._warm[wkey] = _WarmEntry(
             global_values=pg.collect(res, fill=program.identity),
             device_block=blk, identity=program.identity,
-            supersteps=supersteps)
+            supersteps=supersteps, device_epoch=self._warm_epoch)
         self._warm.move_to_end(wkey)
-        self._evict_lru(self._warm, self.max_warm_entries, "warm_evictions")
+        self._evict_lru(self._warm, self.max_warm_entries, "warm_evictions",
+                        max_bytes=self.max_warm_bytes)
+        self._prune_remap_log()
+        self._sync_warm_bytes()
 
     # ------------------------------------------------------------------ #
     # streaming lifecycle
@@ -629,16 +780,18 @@ class GraphSession:
         if st.warm_start_safe:
             # insert-only growth: previous results stay valid upper bounds.
             # Local rows reshuffle (and v_max may cross a bucket), but the
-            # patch's remap carries every device-layout block to the new
-            # layout — so warm="auto" memory survives bucket growth without
-            # falling back to the global-values rebuild.
-            for e in self._warm.values():
-                if e.device_block is not None:
-                    e.device_block = st.remap_state(e.device_block,
-                                                    fill=e.identity)
+            # remap is only LOGGED here — each warm entry replays the
+            # pending chain on its next use (_sync_warm_entry), so a flush
+            # costs O(1) regardless of warm occupancy and entries that are
+            # never queried again never pay at all.
+            self._warm_epoch += 1
+            self._remap_log.append((self._warm_epoch, st))
+            self._prune_remap_log()
         else:
             # deletions can loosen values: nothing cached is sound anymore
             self._warm.clear()
+            self._remap_log.clear()
+            self._sync_warm_bytes()
         self._evict_stale_runners()
 
     def compact(self) -> CompactStats:
@@ -655,10 +808,11 @@ class GraphSession:
         cs = _compact_pg(self.pg, self.ctx, shape_policy=self.shape_policy)
         self._host_version += 1
         self.stats.compactions += 1
-        for e in self._warm.values():
-            if e.device_block is not None:
-                e.device_block = cs.remap_state(e.device_block,
-                                                fill=e.identity)
+        # compaction changes layout, never values: joins the pending-remap
+        # chain like an insert-only flush (applied on each entry's next use)
+        self._warm_epoch += 1
+        self._remap_log.append((self._warm_epoch, cs))
+        self._prune_remap_log()
         self._evict_stale_runners()
         return cs
 
@@ -666,12 +820,29 @@ class GraphSession:
         """Drop executables specialized to padded shapes the graph no longer
         has (bucket growth via flush, bucket shrink via compact). Any patch
         that stays inside the current buckets evicts nothing — the whole
-        point of the bucketed cache."""
+        point of the bucketed cache. Pallas runners also check their layout
+        capacities: a tile/block cap crossing its bucket stales only the
+        runners of that backend, never the COO ones."""
         cur = self.shape_key
-        stale = [k for k, e in self._runners.items() if e.shape_key != cur]
+        lay = self.pg.edge_layouts
+        cur_lay = {}
+        if lay is not None and lay.matches(self.pg):
+            cur_lay = {"tiles": lay.shape_key("pallas_tiles"),
+                       "windows": lay.shape_key("pallas_windows")}
+
+        def stale_entry(e):
+            base, lkey = e.shape_key
+            if base != cur:
+                return True
+            if lkey is None:
+                return False
+            return cur_lay.get(lkey[0]) != lkey
+
+        stale = [k for k, e in self._runners.items() if stale_entry(e)]
         for k in stale:
             del self._runners[k]
         self.stats.cache_evictions_shape += len(stale)
+        self._sync_runner_bytes()
         # flush/compact may also have dropped warm entries — release any
         # id-keyed program pins nothing references anymore
         self._prune_keepalive()
@@ -685,8 +856,9 @@ class GraphSession:
     def cache_info(self) -> list:
         """Snapshot of the compiled-runner cache in LRU order (oldest —
         next to be evicted — first): one dict per entry with the program
-        type name, the shape key it was specialized to, its hit count and
-        what its compilation cost."""
+        type name, the (padded-shape, layout) key it was specialized to,
+        its hit count, what its compilation cost, and the estimated device
+        bytes it pins (what ``max_runner_bytes`` evicts against)."""
         return [dict(program=e.program, shape_key=e.shape_key, hits=e.hits,
-                     compile_time=e.compile_time)
+                     compile_time=e.compile_time, nbytes=e.nbytes)
                 for e in self._runners.values()]

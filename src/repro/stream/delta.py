@@ -311,6 +311,22 @@ def apply_delta(pg: PartitionedGraph, ctx: StreamContext, delta: EdgeDelta,
     # ---- frontier-slot + master maintenance ------------------------------ #
     recompute_frontier(pg)
     stats.n_slots_after = pg.n_slots
+
+    # ---- Pallas edge-compute layouts: incremental refresh ----------------- #
+    # Only the partitions this delta actually patched get their tile/window
+    # geometry (and the touched rows of every cached tile realization)
+    # rebuilt; capacities are grow-only buckets, so an in-bucket flush keeps
+    # every compiled Pallas runner's input shapes intact. v_max growth moves
+    # the tile/window grid itself — then the whole layout is rebuilt (it
+    # coincides with a shape-key change, which already recompiles runners).
+    if pg.edge_layouts is not None:
+        lay = pg.edge_layouts
+        if lay.sync_capacity(pg):
+            lay.rebuild_partitions(pg, staged.keys())
+        else:
+            pg.edge_layouts = None
+            pg.ensure_edge_layouts(shape_policy=lay.policy,
+                                   block_edges=lay.block_edges)
     return stats
 
 

@@ -118,3 +118,72 @@ def test_bsp_spmv_property(T_extra, n_tiles, seed, semiring):
     np.testing.assert_allclose(np.where(both_inf, 0, got),
                                np.where(both_inf, 0, want), rtol=1e-4,
                                atol=1e-4)
+
+
+# --------------------------------------------------------------------------- #
+# dtype support (satellite: layouts honor program.dtype; int32 min_plus for
+# CC label propagation, with the wrap-safe halved pad identity)
+# --------------------------------------------------------------------------- #
+def test_bsp_spmv_int32_min_plus():
+    from repro.kernels.ref import tile_pad_identity
+    rng = np.random.default_rng(7)
+    ident = int(tile_pad_identity("min_plus", np.int32))
+    tiles = np.full((3, TM, TN), ident, np.int32)
+    mask = rng.random((3, TM, TN)) < 0.2
+    tiles[mask] = rng.integers(0, 50, size=int(mask.sum()))
+    td = np.array([0, 1, 1], np.int32)
+    ts = np.array([0, 0, 1], np.int32)
+    vals = rng.integers(0, 1000, size=(2, TN, 2)).astype(np.int32)
+    got = bsp_spmv(jnp.asarray(tiles), jnp.asarray(td), jnp.asarray(ts),
+                   jnp.asarray(vals), n_dst_tiles=2, semiring="min_plus")
+    assert got.dtype == jnp.int32
+    want = ref.ref_tile_spmv(jnp.asarray(tiles), jnp.asarray(td),
+                             jnp.asarray(ts), jnp.asarray(vals), 2,
+                             "min_plus")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_segment_combine_int32_min():
+    rng = np.random.default_rng(11)
+    E, n_rows = 300, 200
+    dst = np.sort(rng.integers(0, n_rows, size=E).astype(np.int64))
+    msgs = rng.integers(-50, 50, size=(E, 3)).astype(np.int32)
+    layout = ops.window_align_edges(dst, n_rows, block_edges=128)
+    got = np.asarray(layout(jnp.asarray(msgs), combiner="min"))[:n_rows]
+    assert got.dtype == np.int32
+    want = np.asarray(ref.ref_segment_combine(
+        jnp.asarray(msgs), jnp.asarray(dst.astype(np.int32)),
+        layout.n_windows * W, "min"))[:n_rows]
+    imax = np.iinfo(np.int32).max
+    both_pad = (got == imax) & (want == np.inf)  # empty rows: int vs float id
+    np.testing.assert_array_equal(np.where(both_pad, 0, got),
+                                  np.where(both_pad, 0, want.astype(np.int64)
+                                           .clip(max=imax).astype(np.int32)))
+
+
+def test_tile_layout_honors_dtype():
+    g = random_graph(200, 600, seed=9, weighted=False)
+    layout = ops.build_tiles(g.src, g.dst, np.zeros(g.n_edges), 200, 200,
+                             "min_plus", dtype=np.int32)
+    assert layout.tiles.dtype == np.int32
+    vals = np.arange(200, dtype=np.int32)[:, None]
+    out = np.asarray(layout(jnp.asarray(vals)))[:200]
+    assert out.dtype == np.int32
+    # oracle: min label over in-neighbours
+    want = np.full(200, np.iinfo(np.int32).max >> 1, np.int64)
+    np.minimum.at(want, g.dst, vals[g.src, 0])
+    real = want < (np.iinfo(np.int32).max >> 1)
+    np.testing.assert_array_equal(out[real, 0], want[real])
+
+
+def test_plus_times_rejects_int_dtype():
+    with pytest.raises(ValueError, match="float"):
+        bsp_spmv(jnp.zeros((1, TM, TN), jnp.int32),
+                 jnp.zeros(1, jnp.int32), jnp.zeros(1, jnp.int32),
+                 jnp.zeros((1, TN, 1), jnp.int32), n_dst_tiles=1,
+                 semiring="plus_times")
+
+
+def test_default_interpret_matches_platform():
+    import jax
+    assert ops.default_interpret() == (jax.default_backend() != "tpu")

@@ -313,12 +313,18 @@ def test_warm_memory_carries_across_bucket_growth(graph):
 
     entry = sess._warm[wkey]
     assert entry.device_block is not None, \
-        "bucket growth must remap the warm block, not drop it"
-    assert entry.device_block.shape[:2] == (sess.pg.n_parts, sess.pg.v_max)
+        "bucket growth must keep the warm block, not drop it"
+    # the remap is LAZY (pending-remap chain): the flush only logs it, the
+    # block still has the pre-growth layout until the entry's next use
+    assert entry.device_block.shape[:2] == (sess.pg.n_parts, v0)
+    assert len(sess._remap_log) == 1 and sess.stats.warm_remaps_applied == 0
 
     warm, st_w = sess.query(SSSP(), {"source": 0})          # warm="auto"
     assert st_w.compile_time > 0.0                          # new bucket
     assert sess.stats.warm_queries == 1
+    # ...and the use applied the deferred remap to the current layout
+    assert sess.stats.warm_remaps_applied == 1
+    assert entry.device_block.shape[:2] == (sess.pg.n_parts, sess.pg.v_max)
     cold, st_c = sess.query(SSSP(), {"source": 0}, warm=False)
     np.testing.assert_array_equal(np.asarray(warm), np.asarray(cold))
     assert st_w.supersteps < st_c.supersteps
