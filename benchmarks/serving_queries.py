@@ -24,11 +24,23 @@ cycle on ``coo`` / ``pallas_tiles`` / ``pallas_windows``, asserting under
 ``--smoke`` that the Pallas backends (interpret mode on CPU) reach the same
 zero-recompile steady state with bit-identical SSSP answers.
 
+``--multi-tenant`` runs the closed-loop traffic-generator section INSTEAD of
+the single-session sections (docs/SERVING.md): N same-size power-law graphs
+in one ``SessionPool``, mixed SSSP/CC/PageRank streams per tenant pushed
+through the ``MicroBatcher``, interleaved insert flushes plus a deleting
+flush, reporting p50/p95/p99 end-to-end latency. With ``--smoke`` it is the
+serving acceptance gate: sampled batched answers must equal direct
+unbatched launches bit-identically (allclose for PageRank), compilations
+must not scale with tenant count, and the tiered result cache must serve
+repeats with zero device launches yet miss after the deleting flush.
+
     PYTHONPATH=src python -m benchmarks.serving_queries [--scale 14]
     PYTHONPATH=src python -m benchmarks.serving_queries --grow
     PYTHONPATH=src python -m benchmarks.serving_queries --edge-backend all
     PYTHONPATH=src python -m benchmarks.serving_queries \
         --smoke --grow --edge-backend all                             # CI
+    PYTHONPATH=src python -m benchmarks.serving_queries \
+        --smoke --multi-tenant                                        # CI
 """
 from __future__ import annotations
 
@@ -41,14 +53,18 @@ from benchmarks.common import save, table
 from repro.algos import ConnectedComponents, PageRank, SSSP
 from repro.core import EngineConfig, ShapePolicy
 from repro.graphgen import kronecker_graph, powerlaw_graph
+from repro.serving import (BatchPolicy, DictStore, MicroBatcher,
+                           ResultCache, SessionPool)
 from repro.session import GraphSession
 
 EDGE_BACKENDS = ("coo", "pallas_tiles", "pallas_windows")
 
 
 def _quantiles(xs):
+    """(p50, p95, p99) — serving latency is a tail story, not a mean."""
     xs = np.asarray(xs)
-    return (float(np.median(xs)), float(np.percentile(xs, 95)))
+    return (float(np.median(xs)), float(np.percentile(xs, 95)),
+            float(np.percentile(xs, 99)))
 
 
 def bench_query_latency(sess, n_repeat, n_sources):
@@ -67,18 +83,19 @@ def bench_query_latency(sess, n_repeat, n_sources):
             _, st = sess.query(prog, params, warm=False)
             assert st.compile_time == 0.0, "repeat query must hit the cache"
             hot.append(st.wall_time)
-        med, p95 = _quantiles(hot)
+        med, p95, p99 = _quantiles(hot)
         rows.append([name, f"{st_cold.compile_time:.2f}",
                      f"{st_cold.wall_time*1e3:.0f}", f"{med*1e3:.0f}",
-                     f"{p95*1e3:.0f}",
+                     f"{p95*1e3:.0f}", f"{p99*1e3:.0f}",
                      f"{st_cold.total_time / med:.1f}x"])
         recs[f"{name}_compile_s"] = st_cold.compile_time
         recs[f"{name}_cold_ms"] = st_cold.total_time * 1e3
         recs[f"{name}_hot_median_ms"] = med * 1e3
         recs[f"{name}_hot_p95_ms"] = p95 * 1e3
+        recs[f"{name}_hot_p99_ms"] = p99 * 1e3
     table(f"Cold vs cached query latency ({n_repeat} repeats)",
-          ["algo", "compile s", "first wall ms", "hot med ms", "hot p95 ms",
-           "cold/hot"], rows)
+          ["algo", "compile s", "first wall ms", "hot p50 ms", "hot p95 ms",
+           "hot p99 ms", "cold/hot"], rows)
 
     # parameter sweep: every source reuses the one compiled SSSP runner
     rng = np.random.default_rng(0)
@@ -89,12 +106,14 @@ def bench_query_latency(sess, n_repeat, n_sources):
         lat.append(st.wall_time)
     assert sess.stats.cache_misses == misses, \
         "a source sweep must not recompile"
-    med, p95 = _quantiles(lat)
+    med, p95, p99 = _quantiles(lat)
     table(f"SSSP source sweep ({n_sources} sources, one compiled runner)",
-          ["med ms", "p95 ms", "queries/s"],
-          [[f"{med*1e3:.0f}", f"{p95*1e3:.0f}", f"{1.0/med:.1f}"]])
+          ["p50 ms", "p95 ms", "p99 ms", "queries/s"],
+          [[f"{med*1e3:.0f}", f"{p95*1e3:.0f}", f"{p99*1e3:.0f}",
+            f"{1.0/med:.1f}"]])
     recs["sweep_median_ms"] = med * 1e3
     recs["sweep_p95_ms"] = p95 * 1e3
+    recs["sweep_p99_ms"] = p99 * 1e3
     return recs
 
 
@@ -117,13 +136,14 @@ def bench_update_query(sess, n_cycles):
         _, st = sess.query(SSSP(), {"source": 0})     # warm="auto"
         t_cycle.append(time.perf_counter() - t0)
         recompiles += st.compile_time > 0.0
-    med, p95 = _quantiles(t_cycle)
+    med, p95, p99 = _quantiles(t_cycle)
     table(f"update+flush+query cycles ({n_cycles} x 64 edges)",
-          ["med ms", "p95 ms", "recompiles", "warm queries"],
-          [[f"{med*1e3:.0f}", f"{p95*1e3:.0f}", recompiles,
-            sess.stats.warm_queries]])
+          ["p50 ms", "p95 ms", "p99 ms", "recompiles", "warm queries"],
+          [[f"{med*1e3:.0f}", f"{p95*1e3:.0f}", f"{p99*1e3:.0f}",
+            recompiles, sess.stats.warm_queries]])
     return {"update_cycle_median_ms": med * 1e3,
             "update_cycle_p95_ms": p95 * 1e3,
+            "update_cycle_p99_ms": p99 * 1e3,
             "update_cycle_recompiles": int(recompiles)}
 
 
@@ -157,7 +177,7 @@ def bench_grow(n0, n_parts, n_cycles, per_cycle, smoke, eb="coo"):
             lat.append(st.wall_time)
             tail.append(int(st.compile_time > 0.0))
         recompile_cycles = sum(tail)
-        p50, p95 = _quantiles(lat)
+        p50, p95, _ = _quantiles(lat)
         steady = n_cycles - (max(i for i, r in enumerate(tail) if r) + 1) \
             if any(tail) else n_cycles
         rows.append([name, recompile_cycles, steady,
@@ -214,7 +234,7 @@ def bench_edge_backends(n0, n_parts, n_cycles, per_cycle, smoke):
         recompile_cycles = sum(tail)
         steady = n_cycles - (max(i for i, r in enumerate(tail) if r) + 1) \
             if any(tail) else n_cycles
-        p50, p95 = _quantiles(lat)
+        p50, p95, _ = _quantiles(lat)
         rows.append([eb, recompile_cycles, steady, f"{p50*1e3:.0f}",
                      f"{p95*1e3:.0f}", f"{st.backend_flops/1e6:.1f}",
                      f"{st.tile_density:.3f}" if eb == "pallas_tiles"
@@ -243,6 +263,144 @@ def bench_edge_backends(n0, n_parts, n_cycles, per_cycle, smoke):
     return recs
 
 
+def bench_multi_tenant(n_tenants, n0, n_parts, n_rounds, q_per_round, smoke):
+    """Closed-loop multi-tenant traffic (docs/SERVING.md): N same-size
+    power-law graphs in one ``SessionPool`` (one shared runner cache, one
+    tiered result cache), each round submitting a mixed 60/20/20
+    SSSP/CC/PageRank stream per tenant through the ``MicroBatcher`` and
+    draining it, with interleaved insert flushes and one deleting flush at
+    half-time. Under ``--smoke`` this is the serving acceptance gate:
+
+      - every sampled batched answer is checked against a direct
+        ``query(warm=False, use_result_cache=False)`` launch — bit-identical
+        for SSSP/CC, allclose for PageRank;
+      - compilations must NOT scale with tenants: the shared cache compiles
+        one runner per (program, batch bucket), whoever arrives first, and
+        every later tenant hits it;
+      - a repeated query is served from the result cache with zero device
+        launches; the deleting flush makes it miss again."""
+    graphs = [powerlaw_graph(n0, avg_degree=8, seed=20 + t,
+                             weighted=True).as_undirected()
+              for t in range(n_tenants)]
+    rc = ResultCache(store=DictStore())
+    pool = SessionPool(result_cache=rc, max_runners=64)
+    for t, g in enumerate(graphs):
+        pool.open(f"t{t}", g, n_parts=n_parts)
+    bat = MicroBatcher(pool, BatchPolicy(max_batch=4, max_delay=0.005))
+    rng = np.random.default_rng(5)
+    lat, queue = [], []
+    mismatches = 0
+    buckets = set()                 # every (shape, layout) bucket observed
+    for r in range(n_rounds):
+        buckets |= {pool.session(f"t{t}").shape_key
+                    for t in range(n_tenants)}
+        futs = []
+        for t in range(n_tenants):
+            sess = pool.session(f"t{t}")
+            nv = sess.pg.n_vertices
+            for _ in range(q_per_round):
+                u = rng.random()
+                if u < 0.6:
+                    prog, params = SSSP(), {"source": int(rng.integers(nv))}
+                elif u < 0.8:
+                    prog, params = ConnectedComponents(), None
+                else:
+                    prog, params = PageRank(tol=1e-7), {"n_vertices": nv}
+                futs.append((f"t{t}", prog, params,
+                             bat.submit(prog, params, tenant=f"t{t}",
+                                        warm=False)))
+        bat.flush()
+        # drain + verify a sample against direct unbatched launches
+        sample = rng.choice(len(futs), size=min(4, len(futs)),
+                            replace=False)
+        for i, (tname, prog, params, f) in enumerate(futs):
+            res, st = f.result(timeout=120)
+            lat.append(st.queue_time + st.wall_time)
+            queue.append(st.queue_time)
+            if i in sample:
+                ref, _ = pool.session(tname).query(
+                    prog, params, warm=False, use_result_cache=False)
+                if isinstance(prog, PageRank):
+                    ok = np.allclose(res, ref, atol=1e-6)
+                else:
+                    ok = np.array_equal(res, ref, equal_nan=True)
+                mismatches += not ok
+        # interleaved mutations: each round one tenant takes an insert
+        # flush; at half-time tenant 0 takes a DELETING flush (the result-
+        # cache invalidation path)
+        t = r % n_tenants
+        sess = pool.session(f"t{t}")
+        nv = sess.pg.n_vertices
+        s = rng.integers(0, nv, 32)
+        d = rng.integers(0, nv, 32)
+        keep = s != d
+        w = rng.uniform(5, 10, int(keep.sum())).astype(np.float32)
+        sess.update(adds=(s[keep], d[keep], w))
+        sess.flush()
+        if r == n_rounds // 2:
+            s0 = pool.session("t0")
+            s0.update(deletes=(graphs[0].src[:4], graphs[0].dst[:4]))
+            s0.flush()
+
+    # result-cache contract: repeat query = zero launches, delete = miss
+    s0 = pool.session("t0")
+    _, st_a = s0.query(SSSP(), {"source": 0}, warm=False)
+    launches = s0.stats.device_launches
+    _, st_b = s0.query(SSSP(), {"source": 0}, warm=False)
+    rc_zero_launch = (st_b.result_cache_tier == "l1"
+                      and s0.stats.device_launches == launches)
+    s0.update(deletes=(graphs[0].src[4:8], graphs[0].dst[4:8]))
+    s0.flush()
+    _, st_c = s0.query(SSSP(), {"source": 0}, warm=False)
+    rc_invalidated = st_c.result_cache_tier == "miss"
+
+    p50, p95, p99 = _quantiles(lat)
+    q50, q95, _ = _quantiles(queue)
+    shared = sum(len(e.owners) > 1
+                 for e in pool.runner_cache.entries.values())
+    ps = pool.stats()
+    table(f"Multi-tenant closed loop ({n_tenants} tenants x {n_rounds} "
+          f"rounds x {q_per_round} queries, P={n_parts})",
+          ["p50 ms", "p95 ms", "p99 ms", "queue p50 ms", "compiles",
+           "shared runners", "batches", "fast-path hits"],
+          [[f"{p50*1e3:.0f}", f"{p95*1e3:.0f}", f"{p99*1e3:.0f}",
+            f"{q50*1e3:.2f}", pool.runner_cache.misses, shared,
+            bat.stats.launched_batches, bat.stats.fast_path_hits]])
+    recs = {"mt_tenants": n_tenants, "mt_p50_ms": p50 * 1e3,
+            "mt_p95_ms": p95 * 1e3, "mt_p99_ms": p99 * 1e3,
+            "mt_queue_p50_ms": q50 * 1e3, "mt_queue_p95_ms": q95 * 1e3,
+            "mt_compiles": pool.runner_cache.misses,
+            "mt_shared_runners": int(shared),
+            "mt_batches": bat.stats.launched_batches,
+            "mt_batched_requests": bat.stats.batched_requests,
+            "mt_fast_path_hits": bat.stats.fast_path_hits,
+            "mt_result_l1_hits": rc.stats.l1_hits,
+            "mt_result_l2_hits": rc.stats.l2_hits,
+            "mt_mismatches": int(mismatches)}
+    if smoke:
+        assert mismatches == 0, \
+            f"{mismatches} batched answers diverged from direct launches"
+        # 3 programs x batch buckets {1,2,4} per shape bucket bounds the
+        # key space; the tenant count itself must never appear in the
+        # compile count — same-bucket tenants share every runner
+        bound = 9 * len(buckets)
+        assert pool.runner_cache.misses <= bound, \
+            (f"compiles scaled with tenants: {pool.runner_cache.misses} "
+             f"> {bound} ({len(buckets)} shape buckets)")
+        assert shared >= 1, "no executable was shared across tenants"
+        assert rc_zero_launch, \
+            "repeat query was not served from the result cache"
+        assert rc_invalidated, \
+            "deleting flush did not invalidate the result cache"
+        print("multi-tenant smoke: batched == unbatched on every sample; "
+              f"{pool.runner_cache.misses} compiles for "
+              f"{len(lat)} queries across {n_tenants} tenants; "
+              "result cache serves repeats and honors deleting flushes")
+    pool.close_all()
+    recs["mt_sessions_closed"] = ps["sessions_closed"]
+    return recs
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", type=int, default=14,
@@ -262,6 +420,13 @@ def main():
                     choices=EDGE_BACKENDS + ("all",),
                     help="edge-compute backend for every section, or 'all' "
                          "for the dedicated comparison section")
+    ap.add_argument("--multi-tenant", action="store_true",
+                    help="run ONLY the multi-tenant closed-loop section: "
+                         "SessionPool + MicroBatcher + tiered result cache "
+                         "under mixed per-tenant traffic")
+    ap.add_argument("--tenants", type=int, default=4)
+    ap.add_argument("--rounds", type=int, default=8)
+    ap.add_argument("--queries-per-round", type=int, default=8)
     ap.add_argument("--smoke", action="store_true",
                     help="tiny sizes for CI: exercise every path, skip scale")
     args = ap.parse_args()
@@ -269,6 +434,17 @@ def main():
         args.scale, args.parts = 10, 8
         args.repeat, args.sources, args.cycles = 3, 5, 3
         args.grow_n0, args.grow_cycles, args.grow_per_cycle = 3_000, 8, 120
+
+    if args.multi_tenant:
+        n_tenants, n0, parts, rounds, qpr = (
+            (3, 1_200, 4, 4, 5) if args.smoke
+            else (args.tenants, 8_000, args.parts, args.rounds,
+                  args.queries_per_round))
+        rec = {"smoke": args.smoke}
+        rec.update(bench_multi_tenant(n_tenants, n0, parts, rounds, qpr,
+                                      args.smoke))
+        save("serving_queries_multi_tenant", rec)
+        return
 
     session_eb = "coo" if args.edge_backend == "all" else args.edge_backend
     g = kronecker_graph(args.scale, seed=7)

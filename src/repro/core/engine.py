@@ -509,7 +509,7 @@ def _make_sim_superstep(program: VertexProgram, cfg: EngineConfig,
 
 
 def make_sim_runner(program: VertexProgram, cfg: EngineConfig, n_slots: int,
-                    *, warm_start=False):
+                    *, warm_start=False, batch=False):
     """Build the simulator BSP loop as a pure function
 
         runner(sgs[, lay], params[, warm_block]) ->
@@ -519,6 +519,17 @@ def make_sim_runner(program: VertexProgram, cfg: EngineConfig, n_slots: int,
     program's parameter pytree (traced — repeated calls with different
     params reuse one compilation), ``warm_block`` (``warm_start=True``) a
     [P, v_max, K] previous-result block threaded into ``program.warm_init``.
+
+    ``batch=True`` builds the cross-request micro-batching variant
+    (serving/batcher.py): every params leaf — and the warm block — carries
+    a leading batch axis B, the graph (and layout) inputs stay shared, and
+    ONE launch returns per-lane ``(results[B], steps[B], msgs[B],
+    sweeps[B, P])``. The COO path vmaps the whole BSP loop over the lanes
+    (vmap-of-while: a converged lane's carry is select-frozen while the
+    rest run on, so per-lane math is identical to a singleton run); the
+    Pallas backends cannot ride vmap's lifting of ``pallas_call``, so they
+    scan the lanes sequentially inside the same single launch instead —
+    same executable-count and dispatch amortization, no lane parallelism.
 
     When ``resolve_edge_backend(program, cfg)`` picks a Pallas backend the
     runner takes the device layout pytree (``TileBlock``/``WindowBlock``,
@@ -568,12 +579,26 @@ def make_sim_runner(program: VertexProgram, cfg: EngineConfig, n_slots: int,
             lambda sg, st: program.result(sg, params, st))(sgs, state)
         return results, steps, tot_msgs, tot_sweeps
 
+    if not batch:
+        if edge_backend == "coo":
+            def runner(sgs, params, *warm):
+                return _run(sgs, None, params, warm)
+        else:
+            def runner(sgs, lay, params, *warm):
+                return _run(sgs, lay, params, warm)
+        return runner
+
     if edge_backend == "coo":
         def runner(sgs, params, *warm):
-            return _run(sgs, None, params, warm)
+            return jax.vmap(lambda p, w: _run(sgs, None, p, w),
+                            in_axes=(0, 0))(params, warm)
     else:
         def runner(sgs, lay, params, *warm):
-            return _run(sgs, lay, params, warm)
+            def step(c, x):
+                p, w = x
+                return c, _run(sgs, lay, p, w)
+            _, out = jax.lax.scan(step, jnp.int32(0), (params, warm))
+            return out
 
     return runner
 
@@ -687,7 +712,7 @@ def run_sim(program: VertexProgram, pg: PartitionedGraph, params=None,
 def make_bsp_runner(program: VertexProgram, mesh: Mesh,
                     cfg: EngineConfig, n_slots: int, *, params=None,
                     has_vlabel=False, warm_start=False,
-                    params_as_input=False):
+                    params_as_input=False, batch=False):
     """Build the shard_map'd BSP loop (shared by run_shard_map, the
     graph-engine dry-run — which lowers it against ShapeDtypeStructs — and
     ``GraphSession``'s compiled-runner cache).
@@ -710,7 +735,14 @@ def make_bsp_runner(program: VertexProgram, mesh: Mesh,
     after ``sgs`` (positional protocol: ``sgs[, layout][, warm][, params]``),
     sharded over the subgraph axes like the vertex tables; each shard's
     local sweep then runs one whole-partition kernel product, which is why
-    the Pallas backends refuse edge-axis sharding."""
+    the Pallas backends refuse edge-axis sharding.
+
+    ``batch=True`` (requires ``params_as_input=True``) builds the
+    micro-batching variant: the warm block (when present) and every params
+    leaf carry a leading batch axis B, and the returned runner scans the
+    lanes through the shard_map'd superstep loop inside one launch —
+    ``lax.scan`` rather than vmap, because a vmap would have to batch
+    through the shard_map collectives. Outputs gain the same leading B."""
     sub_axes = tuple(cfg.subgraph_axes)
     edge_axes = tuple(cfg.edge_axes)
     K = program.payload
@@ -867,7 +899,25 @@ def make_bsp_runner(program: VertexProgram, mesh: Mesh,
         p = next(it) if params_as_input else params
         return _body(sg_block, lay_block, warm_block, p)
 
-    return go
+    if not batch:
+        return go
+
+    assert params_as_input, "batch=True batches the params input"
+    # positional protocol unchanged (sgs[, layout][, warm][, params]); the
+    # warm block and params are the scanned ("moving") inputs, graph and
+    # layout stay shared across the lanes
+    n_static = 2 if lay_specs is not None else 1
+
+    def go_batched(*args):
+        static, moving = args[:n_static], tuple(args[n_static:])
+
+        def step(c, x):
+            return c, go(*static, *x)
+
+        _, out = jax.lax.scan(step, jnp.int32(0), moving)
+        return out
+
+    return go_batched
 
 
 def run_shard_map(program: VertexProgram, pg: PartitionedGraph, mesh: Mesh,

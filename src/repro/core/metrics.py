@@ -81,6 +81,15 @@ class ExecutionStats:
                                        # tiles ('pallas_tiles' only): the
                                        # MXU utilization of the dense path
                                        # — low density says use windows/COO
+    queue_time: float = 0.0            # admission-queue dwell before launch
+                                       # (serving/batcher.py fills it in)
+    batch_size: int = 1                # lanes in the micro-batched launch
+                                       # that served this query (1 = a
+                                       # singleton launch)
+    result_cache_tier: str = ""        # '' when no result cache consulted;
+                                       # 'l1'/'l2' when the converged result
+                                       # was served without a device launch,
+                                       # 'miss' when it ran and was stored
 
     @property
     def peps(self) -> float:

@@ -1,0 +1,50 @@
+"""Multi-tenant serving subsystem (docs/SERVING.md).
+
+Layers on top of ``GraphSession`` (paper §5's long-lived engine posture,
+scaled out to many graphs and live traffic):
+
+  - ``repro.serving.runner_cache`` — the shared compiled-runner LRU with
+    per-tenant pin accounting and fair eviction; same-bucket graphs of
+    different tenants reuse one AOT executable.
+  - ``repro.serving.result_cache`` — the tiered converged-result cache
+    (in-process L1 + pluggable :class:`ExternalStore` L2) with TTL and
+    graph-version invalidation.
+  - ``repro.serving.pool`` — :class:`SessionPool`: many graphs on one
+    mesh, one runner cache, one result cache.
+  - ``repro.serving.batcher`` — :class:`MicroBatcher`: the async admission
+    queue coalescing compatible requests into micro-batched launches.
+
+``SessionPool``/``MicroBatcher`` import lazily (PEP 562): ``repro.session``
+imports this package for the cache layers, and the pool imports
+``repro.session`` back — eager imports here would cycle.
+"""
+from repro.serving.result_cache import (DictStore, ExternalStore, FileStore,
+                                        RedisStore, ResultCache, result_key)
+from repro.serving.runner_cache import (OwnerStats, RunnerCache, RunnerEntry,
+                                        canonical_params, params_fingerprint,
+                                        params_struct_key, program_key,
+                                        runner_nbytes)
+
+__all__ = [
+    "RunnerCache", "RunnerEntry", "OwnerStats", "program_key",
+    "canonical_params", "params_struct_key", "params_fingerprint",
+    "runner_nbytes",
+    "ResultCache", "ExternalStore", "DictStore", "FileStore", "RedisStore",
+    "result_key",
+    "SessionPool", "MicroBatcher", "BatchPolicy", "BatcherStats",
+]
+
+_LAZY = {
+    "SessionPool": "repro.serving.pool",
+    "MicroBatcher": "repro.serving.batcher",
+    "BatchPolicy": "repro.serving.batcher",
+    "BatcherStats": "repro.serving.batcher",
+}
+
+
+def __getattr__(name):
+    mod = _LAZY.get(name)
+    if mod is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+    return getattr(importlib.import_module(mod), name)

@@ -1,0 +1,261 @@
+"""MicroBatcher — the cross-request admission queue (docs/SERVING.md).
+
+Serving traffic arrives one query at a time, but the engine's batched
+runners (``GraphSession.query_batch``) amortize a whole group of compatible
+queries over ONE device launch — the MSSP observation (multi-source batches
+share the sweep) generalized to any same-structure param batch.
+``MicroBatcher`` sits between the two:
+
+  - ``submit()`` enqueues a request and returns a
+    ``concurrent.futures.Future`` resolving to ``(results, ExecutionStats)``
+    — exactly what ``query`` returns, plus ``queue_time``/``batch_size``
+    filled in;
+  - requests coalesce by **compatibility key**: (session, graph version,
+    program identity, param structure, config, warm mode). Only lanes a
+    single executable can serve land in one group — anything else is its
+    own group and degrades to a singleton launch, and a batch launch that
+    fails for any reason retries each lane as a singleton before failing
+    its future;
+  - the **launch policy**: a group launches the moment it holds
+    ``max_batch`` lanes (inline, on the submitting thread), when its oldest
+    request has waited ``max_delay`` seconds (on the next ``poll()``), or
+    when a lane's absolute ``deadline`` is within ``max_delay`` of now.
+    ``flush()`` launches everything immediately; ``start()``/``stop()`` run
+    ``poll()`` on a background thread for fully async operation, and the
+    context manager form flushes and stops on exit.
+
+A result-cache fast path answers ``submit`` synchronously (zero queueing,
+zero launches) when the session's tiered result cache already holds the
+converged result and no mutations are pending.
+
+The batcher never reorders effects it can see: a group key pins the graph
+version at submit time, so a flush between submit and launch simply starts
+a new group (the launch itself flushes pending buffers first, as ``query``
+always has).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import OrderedDict
+from concurrent.futures import Future
+from typing import Optional
+
+from repro.serving.runner_cache import (canonical_params, params_struct_key,
+                                        program_key)
+
+__all__ = ["MicroBatcher", "BatchPolicy", "BatcherStats"]
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchPolicy:
+    """The coalescing knobs: ``max_batch`` lanes launch a group eagerly,
+    ``max_delay`` (seconds) bounds how long the first request in a group may
+    wait for company. Latency-sensitive callers pass ``deadline=`` per
+    request instead of shrinking the global delay."""
+    max_batch: int = 8
+    max_delay: float = 0.002
+
+
+@dataclasses.dataclass
+class BatcherStats:
+    submitted: int = 0
+    launched_batches: int = 0       # multi-lane launches
+    launched_singletons: int = 0    # one-lane groups (no compatible company)
+    batched_requests: int = 0       # requests served inside batch launches
+    largest_batch: int = 0
+    fast_path_hits: int = 0         # answered from the result cache at
+                                    # submit time, bypassing the queue
+    degraded: int = 0               # lanes replayed as singletons after a
+                                    # batch launch failed
+
+
+@dataclasses.dataclass
+class _Request:
+    program: object
+    params: object
+    warm: object
+    cfg: object
+    future: Future
+    t_enqueue: float
+    deadline: Optional[float]
+
+
+class _Group:
+    __slots__ = ("session", "requests", "t_first")
+
+    def __init__(self, session, t_first):
+        self.session = session
+        self.requests: list = []
+        self.t_first = t_first
+
+
+class MicroBatcher:
+    """Admission queue over one ``GraphSession`` or a whole ``SessionPool``
+    (pass ``tenant=`` on submit in the pool case). ``clock`` is injectable
+    for deterministic tests. Thread-safe: ``submit``/``poll``/``flush`` may
+    race; launches hold the lock only to detach a group, never across
+    device work — but the underlying sessions are still single-launcher
+    objects, so all launches happen on whichever thread triggered them."""
+
+    def __init__(self, target, policy: Optional[BatchPolicy] = None,
+                 clock=time.monotonic):
+        self.target = target
+        self.policy = policy or BatchPolicy()
+        self.clock = clock
+        self.stats = BatcherStats()
+        self._groups: OrderedDict = OrderedDict()    # key -> _Group
+        self._lock = threading.Lock()
+        self._thread: Optional[threading.Thread] = None
+        self._stop_evt = threading.Event()
+
+    # ------------------------------------------------------------------ #
+    def _session(self, tenant):
+        if hasattr(self.target, "session"):          # a SessionPool
+            return self.target.session(tenant)
+        return self.target
+
+    def submit(self, program, params=None, *, tenant=None, warm="auto",
+               cfg=None, deadline: Optional[float] = None,
+               use_result_cache=True) -> Future:
+        """Enqueue one query; returns a Future of ``(results, stats)``.
+        ``deadline`` is an absolute ``clock()`` time by which the request
+        must launch. May resolve synchronously: on a result-cache fast-path
+        hit, or when this request fills its group to ``max_batch``."""
+        sess = self._session(tenant)
+        fut: Future = Future()
+        now = self.clock()
+        self.stats.submitted += 1
+
+        if (use_result_cache and sess.result_cache is not None
+                and (sess.buffer is None or not len(sess.buffer))):
+            rkey = sess.result_key_for(program, params, cfg)
+            if sess.result_cache.peek(rkey) is not None:
+                try:
+                    res, st = sess.query(program, params, warm=warm, cfg=cfg)
+                    st.queue_time = 0.0
+                    fut.set_result((res, st))
+                    self.stats.fast_path_hits += 1
+                except Exception as e:               # pragma: no cover
+                    fut.set_exception(e)
+                return fut
+
+        params_c = canonical_params(params)
+        key = (id(sess), sess._host_version, program_key(program),
+               params_struct_key(params_c), cfg, warm, use_result_cache)
+        req = _Request(program=program, params=params, warm=warm, cfg=cfg,
+                       future=fut, t_enqueue=now, deadline=deadline)
+        launch = None
+        with self._lock:
+            grp = self._groups.get(key)
+            if grp is None:
+                grp = self._groups[key] = _Group(sess, now)
+            grp.requests.append(req)
+            if len(grp.requests) >= self.policy.max_batch:
+                launch = self._groups.pop(key)
+        if launch is not None:
+            self._launch(launch)
+        return fut
+
+    # ------------------------------------------------------------------ #
+    def poll(self) -> int:
+        """Launch every group that is due — oldest lane waited
+        ``max_delay``, or some lane's deadline is within ``max_delay`` of
+        now. Returns the number of groups launched."""
+        now = self.clock()
+        due = []
+        with self._lock:
+            for key in list(self._groups):
+                grp = self._groups[key]
+                deadlines = [r.deadline for r in grp.requests
+                             if r.deadline is not None]
+                if (now - grp.t_first >= self.policy.max_delay
+                        or (deadlines and now >= min(deadlines)
+                            - self.policy.max_delay)):
+                    due.append(self._groups.pop(key))
+        for grp in due:
+            self._launch(grp)
+        return len(due)
+
+    def flush(self) -> int:
+        """Launch every pending group immediately."""
+        with self._lock:
+            due = list(self._groups.values())
+            self._groups.clear()
+        for grp in due:
+            self._launch(grp)
+        return len(due)
+
+    @property
+    def pending(self) -> int:
+        with self._lock:
+            return sum(len(g.requests) for g in self._groups.values())
+
+    # ------------------------------------------------------------------ #
+    def _launch(self, grp: _Group) -> None:
+        sess, reqs = grp.session, grp.requests
+        t_launch = self.clock()
+        r0 = reqs[0]
+        try:
+            if len(reqs) == 1:
+                res, st = sess.query(r0.program, r0.params, warm=r0.warm,
+                                     cfg=r0.cfg)
+                st.queue_time = t_launch - r0.t_enqueue
+                r0.future.set_result((res, st))
+                self.stats.launched_singletons += 1
+                return
+            out = sess.query_batch(r0.program, [r.params for r in reqs],
+                                   warm=r0.warm, cfg=r0.cfg)
+            for r, (res, st) in zip(reqs, out):
+                st.queue_time = t_launch - r.t_enqueue
+                r.future.set_result((res, st))
+            self.stats.launched_batches += 1
+            self.stats.batched_requests += len(reqs)
+            self.stats.largest_batch = max(self.stats.largest_batch,
+                                           len(reqs))
+        except Exception:
+            # the graceful degradation path: replay each lane alone; a lane
+            # that still fails gets the real error on its own future
+            for r in reqs:
+                try:
+                    res, st = sess.query(r.program, r.params, warm=r.warm,
+                                         cfg=r.cfg)
+                    st.queue_time = t_launch - r.t_enqueue
+                    r.future.set_result((res, st))
+                    self.stats.degraded += 1
+                except Exception as e:
+                    r.future.set_exception(e)
+
+    # ------------------------------------------------------------------ #
+    # background pump
+    # ------------------------------------------------------------------ #
+    def start(self, interval: Optional[float] = None) -> None:
+        """Run ``poll()`` on a daemon thread every ``interval`` seconds
+        (default ``max_delay / 2``) until ``stop()``."""
+        if self._thread is not None:
+            return
+        interval = self.policy.max_delay / 2 if interval is None else interval
+        self._stop_evt.clear()
+
+        def pump():
+            while not self._stop_evt.wait(interval):
+                self.poll()
+
+        self._thread = threading.Thread(target=pump, daemon=True,
+                                        name="micro-batcher")
+        self._thread.start()
+
+    def stop(self) -> None:
+        """Stop the background pump and flush whatever is still queued."""
+        if self._thread is not None:
+            self._stop_evt.set()
+            self._thread.join()
+            self._thread = None
+        self.flush()
+
+    def __enter__(self) -> "MicroBatcher":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.stop()

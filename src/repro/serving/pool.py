@@ -1,0 +1,169 @@
+"""SessionPool — many graphs on one mesh, one runner cache
+(docs/SERVING.md).
+
+DRONE's pitch is a long-lived engine; a serving fleet hosts MANY long-lived
+graphs per process. ``SessionPool`` owns the shared pieces a naive
+session-per-graph loop would duplicate:
+
+  - ONE :class:`~repro.serving.runner_cache.RunnerCache` for every hosted
+    session — runner keys carry the bucketed padded shapes and never a
+    tenant id, so two tenants whose graphs land in the same shape bucket
+    resolve the same key and reuse the same AOT executable. K same-bucket
+    tenants compile each (program, backend) runner exactly ONCE
+    (tests/test_serving.py pins this with trace counters);
+  - one shared :class:`~repro.serving.result_cache.ResultCache` (optional):
+    converged-result keys carry the tenant and graph version, so entries
+    never collide across graphs while the capacity is pooled;
+  - one ``ShapePolicy`` — shared bucketing is what MAKES same-sized graphs
+    land on the same padded shapes;
+  - an LRU session bound (``max_sessions``): opening tenant N+1 closes the
+    least-recently-served session (``GraphSession.close`` releases its
+    device pytree and its shared-cache pins — neighbors' entries survive).
+
+All sessions share the pool's mesh (or the simulator when ``mesh=None``),
+matching the one-device-fleet deployment the ROADMAP targets.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Optional
+
+from repro.serving.result_cache import ResultCache
+from repro.serving.runner_cache import RunnerCache
+
+__all__ = ["SessionPool"]
+
+
+class SessionPool:
+    """Host many :class:`~repro.session.GraphSession` tenants on one mesh
+    with shared runner/result caches. ``max_runners``/``max_runner_bytes``
+    bound the SHARED runner cache (the per-session bounds are bypassed);
+    ``result_cache`` attaches a shared tiered result cache; ``max_sessions``
+    LRU-closes the least-recently-served tenant when exceeded
+    (``None`` = unbounded)."""
+
+    def __init__(self, *, mesh=None, cfg=None, shape_policy=None,
+                 max_runners: Optional[int] = 64,
+                 max_runner_bytes: Optional[int] = None,
+                 result_cache: Optional[ResultCache] = None,
+                 max_sessions: Optional[int] = None):
+        from repro.core.subgraph import ShapePolicy
+        self.mesh = mesh
+        self.cfg = cfg
+        # one policy for every tenant: shared geometric buckets are what
+        # make same-sized graphs share padded shapes (and executables)
+        self.shape_policy = shape_policy if shape_policy is not None \
+            else ShapePolicy()
+        self.runner_cache = RunnerCache(max_runners, max_runner_bytes)
+        self.result_cache = result_cache
+        self.max_sessions = max_sessions
+        self._sessions: OrderedDict = OrderedDict()   # tenant -> session
+        self.sessions_closed = 0                      # by the LRU bound
+
+    # ------------------------------------------------------------------ #
+    def open(self, tenant: str, graph=None, *, pg=None, edge_log=None,
+             n_parts: int = 8, partitioner: str = "cdbh", ctx=None,
+             **kwargs):
+        """Open a session for ``tenant`` over ``graph`` (an in-memory
+        ``Graph``), ``pg`` (a prebuilt ``PartitionedGraph``) or ``edge_log``
+        (the on-disk ingest path) — exactly one of the three. Extra kwargs
+        flow to the ``GraphSession`` constructor; the pool always injects
+        its mesh, config, shape policy and shared caches."""
+        from repro.session import GraphSession
+        if tenant in self._sessions:
+            raise ValueError(f"tenant {tenant!r} already has an open "
+                             "session (pool.close(tenant) first)")
+        if sum(x is not None for x in (graph, pg, edge_log)) != 1:
+            raise ValueError("pass exactly one of graph=, pg=, edge_log=")
+        common = dict(mesh=self.mesh, cfg=self.cfg,
+                      shape_policy=self.shape_policy,
+                      runner_cache=self.runner_cache,
+                      result_cache=self.result_cache, tenant=tenant)
+        common.update(kwargs)
+        if pg is not None:
+            sess = GraphSession(pg, ctx=ctx, **common)
+        elif graph is not None:
+            sess = GraphSession.from_graph(graph, n_parts, partitioner,
+                                           **common)
+        else:
+            sess = GraphSession.from_edge_log(edge_log, n_parts, partitioner,
+                                              **common)
+        self._sessions[tenant] = sess
+        self._evict_sessions()
+        return sess
+
+    def session(self, tenant: str):
+        """The tenant's open session (refreshes its LRU recency)."""
+        sess = self._sessions.get(tenant)
+        if sess is None:
+            raise KeyError(f"no open session for tenant {tenant!r}")
+        self._sessions.move_to_end(tenant)
+        return sess
+
+    def __contains__(self, tenant) -> bool:
+        return tenant in self._sessions
+
+    def __len__(self) -> int:
+        return len(self._sessions)
+
+    @property
+    def tenants(self) -> list:
+        """Open tenants in LRU order (least recently served first)."""
+        return list(self._sessions)
+
+    # ------------------------------------------------------------------ #
+    def query(self, tenant: str, program, params=None, **kwargs):
+        """``pool.query(t, ...)`` == ``pool.session(t).query(...)``."""
+        return self.session(tenant).query(program, params, **kwargs)
+
+    def query_batch(self, tenant: str, program, params_list, **kwargs):
+        return self.session(tenant).query_batch(program, params_list,
+                                                **kwargs)
+
+    # ------------------------------------------------------------------ #
+    def close(self, tenant: str) -> None:
+        """Close and drop one tenant's session (its shared-cache pins are
+        released; entries other tenants pin survive for them)."""
+        sess = self._sessions.pop(tenant, None)
+        if sess is not None:
+            sess.close()
+
+    def close_all(self) -> None:
+        for t in list(self._sessions):
+            self.close(t)
+
+    def _evict_sessions(self) -> None:
+        if self.max_sessions is None:
+            return
+        while len(self._sessions) > self.max_sessions:
+            t, sess = self._sessions.popitem(last=False)
+            sess.close()
+            self.sessions_closed += 1
+
+    def __enter__(self) -> "SessionPool":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close_all()
+
+    # ------------------------------------------------------------------ #
+    def stats(self) -> dict:
+        """Pool-wide snapshot: the shared runner cache (global + per-tenant
+        accounting), the shared result cache, and each open session's
+        ``SessionStats``."""
+        out = dict(
+            runner_cache=dict(
+                entries=len(self.runner_cache),
+                bytes=self.runner_cache.total_bytes,
+                hits=self.runner_cache.hits,
+                misses=self.runner_cache.misses,
+                evictions=self.runner_cache.evictions,
+                compile_time_total=self.runner_cache.compile_time_total,
+                by_owner=dict(self.runner_cache.by_owner),
+            ),
+            sessions={t: s.stats for t, s in self._sessions.items()},
+            sessions_closed=self.sessions_closed,
+        )
+        if self.result_cache is not None:
+            out["result_cache"] = self.result_cache.stats
+        return out

@@ -1,0 +1,328 @@
+"""Tiered converged-result cache (docs/SERVING.md).
+
+Identical ``(tenant, graph_version, program, params, config)`` queries
+return the *same converged result* — BSP fixed points are deterministic —
+so serving them again should never touch the device. ``ResultCache`` layers:
+
+  - **L1**: an in-process LRU (entry- and byte-bounded) holding the
+    deserialized result arrays, hit in microseconds;
+  - **L2**: a pluggable :class:`ExternalStore` — the cross-process tier.
+    The reference implementation is the dict-backed :class:`DictStore`
+    (tests, single-process multi-pool sharing); :class:`FileStore` persists
+    to a directory (cross-process on one host); :class:`RedisStore` wraps a
+    ``redis`` client *if the package is importable* — it is import-gated,
+    never a hard dependency. L2 hits are promoted into L1.
+
+Invalidation is **by key, not by sweep**: the cache key embeds the
+session's ``graph_version`` (bumped by every applied flush/compact), so any
+mutation — including the deleting flushes that break warm-start soundness —
+makes old entries unreachable immediately; TTL (``ttl=`` seconds, lazily
+enforced on ``get``) reaps the orphaned bytes. ``clock`` is injectable so
+TTL expiry is testable without sleeping.
+
+Values are numpy pytrees serialized with ``np.savez`` for the external
+tier; the L1 tier keeps them deserialized. Keys are stable sha256 digests
+(``result_key``) built from repr()-stable components plus raw param bytes,
+so two processes over the same graph lineage compute the same key.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import io
+import os
+import time
+from collections import OrderedDict
+from typing import Any, Optional
+
+import numpy as np
+
+__all__ = ["ResultCache", "ExternalStore", "DictStore", "FileStore",
+           "RedisStore", "result_key"]
+
+
+# --------------------------------------------------------------------------- #
+# keys
+# --------------------------------------------------------------------------- #
+def result_key(tenant, graph_version: int, program, params_c, cfg) -> str:
+    """Stable digest of everything that determines a converged result:
+    which graph (tenant + version), which computation (program type +
+    dataclass fields + engine config) and which parameter *values*
+    (structure + raw leaf bytes). ``warm`` is deliberately excluded — warm
+    and cold runs of a monotone program converge to the same fixed point."""
+    import jax
+
+    h = hashlib.sha256()
+    h.update(repr((str(tenant), int(graph_version),
+                   type(program).__name__)).encode())
+    try:
+        fields = tuple((f.name, repr(getattr(program, f.name)))
+                       for f in dataclasses.fields(program))
+    except TypeError:
+        fields = (("id", str(id(program))),)
+    h.update(repr(fields).encode())
+    h.update(repr(cfg).encode())
+    leaves, treedef = jax.tree.flatten(params_c)
+    h.update(str(treedef).encode())
+    for leaf in leaves:
+        arr = np.asarray(leaf)
+        h.update(f"{arr.shape}{arr.dtype}".encode())
+        h.update(arr.tobytes())
+    return h.hexdigest()
+
+
+def _serialize(value: dict) -> bytes:
+    buf = io.BytesIO()
+    arrays = {k: np.asarray(v) for k, v in value.items()}
+    np.savez(buf, **arrays)
+    return buf.getvalue()
+
+
+def _deserialize(data: bytes) -> dict:
+    with np.load(io.BytesIO(data), allow_pickle=False) as z:
+        out = {}
+        for k in z.files:
+            v = z[k]
+            out[k] = v.item() if v.ndim == 0 else v
+        return out
+
+
+# --------------------------------------------------------------------------- #
+# external stores (the L2 tier protocol)
+# --------------------------------------------------------------------------- #
+class ExternalStore:
+    """Protocol for the cross-process tier: opaque bytes keyed by the digest
+    string, with optional per-entry TTL. Implementations only need these
+    three methods; expiry may be enforced lazily on ``get``."""
+
+    def get(self, key: str) -> Optional[bytes]:
+        raise NotImplementedError
+
+    def put(self, key: str, data: bytes, ttl: Optional[float] = None) -> None:
+        raise NotImplementedError
+
+    def delete(self, key: str) -> None:
+        raise NotImplementedError
+
+
+class DictStore(ExternalStore):
+    """Reference in-memory store: a dict of key -> (bytes, expiry). Not a
+    cache speedup in itself — it exists to exercise and share the L2
+    protocol (several pools in one process, tests) and as the template for
+    real adapters."""
+
+    def __init__(self, clock=time.monotonic):
+        self._d: dict = {}
+        self._clock = clock
+
+    def get(self, key):
+        hit = self._d.get(key)
+        if hit is None:
+            return None
+        data, expiry = hit
+        if expiry is not None and self._clock() >= expiry:
+            del self._d[key]
+            return None
+        return data
+
+    def put(self, key, data, ttl=None):
+        expiry = None if ttl is None else self._clock() + ttl
+        self._d[key] = (data, expiry)
+
+    def delete(self, key):
+        self._d.pop(key, None)
+
+    def __len__(self):
+        return len(self._d)
+
+
+class FileStore(ExternalStore):
+    """Directory-backed store: one file per key, expiry stamped in an
+    8-byte little-endian float header (0.0 = no TTL). Survives the process;
+    concurrent readers are safe (writes go through ``os.replace``)."""
+
+    def __init__(self, root: str, clock=time.time):
+        self.root = root
+        self._clock = clock
+        os.makedirs(root, exist_ok=True)
+
+    def _path(self, key: str) -> str:
+        return os.path.join(self.root, f"{key}.npz")
+
+    def get(self, key):
+        p = self._path(key)
+        try:
+            with open(p, "rb") as f:
+                expiry = np.frombuffer(f.read(8), dtype="<f8")[0]
+                if expiry and self._clock() >= expiry:
+                    f.close()
+                    os.unlink(p)
+                    return None
+                return f.read()
+        except (FileNotFoundError, ValueError):
+            return None
+
+    def put(self, key, data, ttl=None):
+        expiry = 0.0 if ttl is None else self._clock() + ttl
+        p = self._path(key)
+        tmp = p + ".tmp"
+        with open(tmp, "wb") as f:
+            f.write(np.array(expiry, dtype="<f8").tobytes())
+            f.write(data)
+        os.replace(tmp, p)
+
+    def delete(self, key):
+        try:
+            os.unlink(self._path(key))
+        except FileNotFoundError:
+            pass
+
+
+class RedisStore(ExternalStore):
+    """Adapter over a ``redis``-like client (anything with get/set/delete
+    and ``ex=`` seconds on set). The package is NOT a dependency: pass a
+    constructed client, or let ``from_url`` raise a clear error where
+    ``redis`` is absent."""
+
+    def __init__(self, client):
+        self.client = client
+
+    @classmethod
+    def from_url(cls, url: str) -> "RedisStore":
+        try:
+            import redis  # type: ignore
+        except ImportError as e:  # pragma: no cover - env without redis
+            raise ImportError(
+                "RedisStore.from_url needs the optional 'redis' package; "
+                "install it or pass a constructed client to RedisStore()"
+            ) from e
+        return cls(redis.Redis.from_url(url))
+
+    def get(self, key):
+        return self.client.get(key)
+
+    def put(self, key, data, ttl=None):
+        if ttl is None:
+            self.client.set(key, data)
+        else:
+            self.client.set(key, data, ex=max(1, int(round(ttl))))
+
+    def delete(self, key):
+        self.client.delete(key)
+
+
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass
+class ResultCacheStats:
+    l1_hits: int = 0
+    l2_hits: int = 0               # found in the external store (promoted)
+    misses: int = 0
+    puts: int = 0
+    expirations: int = 0           # L1 entries reaped by TTL on access
+    l1_evictions: int = 0
+
+
+class ResultCache:
+    """The tiered cache. ``max_entries``/``max_bytes`` bound L1 (LRU;
+    ``None`` = unbounded); ``store`` is the optional L2
+    :class:`ExternalStore`; ``ttl`` (seconds, ``None`` = forever) applies
+    to both tiers. One ``ResultCache`` may front many sessions — keys carry
+    the tenant and graph version, so entries never collide across graphs."""
+
+    def __init__(self, max_entries: Optional[int] = 256,
+                 max_bytes: Optional[int] = None,
+                 ttl: Optional[float] = None,
+                 store: Optional[ExternalStore] = None,
+                 clock=time.monotonic):
+        self.max_entries = max_entries
+        self.max_bytes = max_bytes
+        self.ttl = ttl
+        self.store = store
+        self._clock = clock
+        self._l1: OrderedDict = OrderedDict()    # key -> (value, expiry, nbytes)
+        self.stats = ResultCacheStats()
+
+    # ------------------------------------------------------------------ #
+    def __len__(self):
+        return len(self._l1)
+
+    @property
+    def l1_bytes(self) -> int:
+        return sum(n for _, _, n in self._l1.values())
+
+    @staticmethod
+    def _nbytes(value: dict) -> int:
+        return sum(np.asarray(v).nbytes for v in value.values())
+
+    # ------------------------------------------------------------------ #
+    def get(self, key: str):
+        """Returns ``(value, tier)`` with tier in ``('l1', 'l2')``, or
+        ``(None, 'miss')``. L2 hits are deserialized and promoted to L1."""
+        hit = self._l1.get(key)
+        if hit is not None:
+            value, expiry, _ = hit
+            if expiry is not None and self._clock() >= expiry:
+                del self._l1[key]
+                self.stats.expirations += 1
+            else:
+                self._l1.move_to_end(key)
+                self.stats.l1_hits += 1
+                return value, "l1"
+        if self.store is not None:
+            data = self.store.get(key)
+            if data is not None:
+                value = _deserialize(data)
+                self._admit_l1(key, value)
+                self.stats.l2_hits += 1
+                return value, "l2"
+        self.stats.misses += 1
+        return None, "miss"
+
+    def peek(self, key: str) -> Optional[str]:
+        """Which tier holds ``key`` right now (``'l1'``/``'l2'``) or
+        ``None`` — WITHOUT billing stats, promoting, or refreshing LRU.
+        ``GraphSession.query_batch`` uses it to decide whether a whole
+        batch can short-circuit before any lane is billed a hit."""
+        hit = self._l1.get(key)
+        if hit is not None:
+            _, expiry, _ = hit
+            if expiry is None or self._clock() < expiry:
+                return "l1"
+        if self.store is not None and self.store.get(key) is not None:
+            return "l2"
+        return None
+
+    def put(self, key: str, value: dict) -> None:
+        """Store a converged result (a dict of numpy-able leaves) in both
+        tiers."""
+        self._admit_l1(key, value)
+        if self.store is not None:
+            self.store.put(key, _serialize(value), ttl=self.ttl)
+        self.stats.puts += 1
+
+    def _admit_l1(self, key, value):
+        expiry = None if self.ttl is None else self._clock() + self.ttl
+        self._l1[key] = (value, expiry, self._nbytes(value))
+        self._l1.move_to_end(key)
+        if self.max_entries is not None:
+            while len(self._l1) > self.max_entries:
+                self._l1.popitem(last=False)
+                self.stats.l1_evictions += 1
+        if self.max_bytes is not None:
+            total = self.l1_bytes
+            while total > self.max_bytes and len(self._l1) > 1:
+                _, (_, _, n) = self._l1.popitem(last=False)
+                total -= n
+                self.stats.l1_evictions += 1
+
+    # ------------------------------------------------------------------ #
+    def invalidate(self, key: str) -> None:
+        """Drop one key from both tiers. Rarely needed — graph-version
+        keying makes every mutation an implicit invalidation — but exposed
+        for external stores shared beyond one session lineage."""
+        self._l1.pop(key, None)
+        if self.store is not None:
+            self.store.delete(key)
+
+    def clear_l1(self) -> None:
+        self._l1.clear()

@@ -1,0 +1,323 @@
+"""Shared compiled-runner cache for the serving layer (docs/SERVING.md).
+
+``RunnerCache`` is the bounded LRU of AOT-compiled executables that used to
+live inline in ``GraphSession`` — refactored out so a ``SessionPool`` can
+host **many graphs on one mesh sharing ONE cache**. Runner keys carry the
+bucketed padded shapes (never a tenant id), so two same-bucket graphs of
+different tenants resolve to the *same* key and reuse the same executable:
+the pool compiles each (program, param structure, config, shapes) runner
+exactly once no matter how many tenants serve it.
+
+What the shared cache adds over the old per-session ``OrderedDict``:
+
+  - **per-tenant pin accounting** — every entry records which owners
+    (tenants) created or hit it, and per-owner hit/miss/compile-time
+    tallies are kept for introspection (``stats_by_owner``). Pins are
+    bookkeeping, not hard locks: the LRU/byte bounds still evict.
+  - **fair eviction** — when the cache overflows, the victim is the
+    least-recently-used entry *among the entries of the most-loaded
+    owner* (ties fall back to plain LRU). A tenant that floods the cache
+    with distinct programs evicts its own entries first; a small tenant's
+    runners survive the flood. With a single owner this is exactly the old
+    LRU policy.
+  - **pin release** — ``release(owner)`` (``GraphSession.close``) and
+    ``release_stale(owner, pred)`` (shape-bucket growth) drop an owner's
+    pins; an entry nobody pins anymore is dropped outright, an entry other
+    tenants still pin survives for them. On a private single-owner cache
+    this reduces to the old delete-on-stale behavior.
+
+The key helpers (``program_key``/``canonical_params``/``params_struct_key``/
+``params_fingerprint``) moved here with the cache; ``repro.session`` imports
+them. ``canonical_params`` now also normalizes *scalar* leaf dtype drift:
+a Python ``int``, a ``np.int32``, a ``np.int64`` and a 0-d array all
+canonicalize to the same jax default-dtype leaf, so mixed-type callers of
+the same logical query can never force a spurious retrace (regression-
+pinned in tests/test_serving.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["RunnerCache", "RunnerEntry", "OwnerStats", "program_key",
+           "canonical_params", "params_struct_key", "params_fingerprint",
+           "runner_nbytes"]
+
+
+# --------------------------------------------------------------------------- #
+# cache keys
+# --------------------------------------------------------------------------- #
+def program_key(program):
+    """Hashable identity of a program's *static* structure: its type plus
+    every dataclass field (combiner/payload/dtype/tol/... — anything that
+    changes the traced computation). Programs carrying unhashable fields
+    fall back to per-instance identity (still cached, just not shared
+    across equal instances)."""
+    try:
+        fields = tuple((f.name, getattr(program, f.name))
+                       for f in dataclasses.fields(program))
+        hash(fields)
+        return (type(program), fields)
+    except TypeError:
+        return (type(program), id(program))
+
+
+def _canonical_scalar(x: np.ndarray):
+    """0-d leaf -> jax default scalar dtype. Python ints, numpy scalars of
+    any width and 0-d arrays of one logical value must all produce the SAME
+    aval, or the struct key (and the runner cache) fragments on caller
+    habits. Values that cannot fit the default int keep int64 (x64 mode)."""
+    if x.dtype.kind == "b":
+        return jnp.asarray(bool(x))
+    if x.dtype.kind in "iu":
+        v = int(x)
+        info = jnp.iinfo(jnp.int32)
+        if info.min <= v <= info.max:
+            return jnp.asarray(v, dtype=jnp.int32)
+        return jnp.asarray(v)                      # jax picks the wide dtype
+    if x.dtype.kind == "f":
+        return jnp.asarray(float(x), dtype=jnp.float32)
+    return jnp.asarray(x)
+
+
+def canonical_params(params):
+    """Params pytree with every leaf a jnp array of a fixed dtype, so the
+    runner's input avals (and therefore the cache key) are stable across
+    caller-side representation drift. Scalar-ish leaves (Python numbers,
+    numpy scalars, 0-d arrays) normalize to the jax default dtypes —
+    ``{"source": 0}``, ``{"source": np.int64(0)}`` and
+    ``{"source": np.array(0)}`` are one key; leaves with ``ndim >= 1`` keep
+    their dtype (an explicitly float64 array is the caller's choice)."""
+    if params is None:
+        return {}
+
+    def canon(leaf):
+        x = np.asarray(leaf)
+        if x.ndim == 0:
+            return _canonical_scalar(x)
+        return jnp.asarray(leaf)
+
+    return jax.tree.map(canon, params)
+
+
+def params_struct_key(params):
+    """Structure-only key (treedef + leaf shape/dtype): runners take params
+    as *traced* inputs, so different values share one executable."""
+    leaves, treedef = jax.tree.flatten(params)
+    return (treedef, tuple((tuple(l.shape), str(l.dtype)) for l in leaves))
+
+
+def params_fingerprint(params):
+    """Value-level key — warm results and converged-result cache entries are
+    only reusable for the *same* query (SSSP distances from source 0 say
+    nothing about source 7)."""
+    leaves, treedef = jax.tree.flatten(params)
+    return (treedef, tuple((tuple(l.shape), str(l.dtype),
+                            np.asarray(l).tobytes()) for l in leaves))
+
+
+def runner_nbytes(compiled) -> int:
+    """Estimated device bytes a cached executable keeps alive: outputs +
+    temps + generated code from XLA's ``memory_analysis``. Inputs are the
+    session-owned resident graph, shared across runners, so they are
+    deliberately not billed. Where the analysis is unavailable the entry
+    weighs 0 — an unknown footprint must not be billed, or a single
+    mis-estimated runner could thrash the whole byte-bounded cache."""
+    try:
+        m = compiled.memory_analysis()
+        return int(m.output_size_in_bytes + m.temp_size_in_bytes
+                   + m.generated_code_size_in_bytes)
+    except Exception:
+        return 0
+
+
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass
+class RunnerEntry:
+    """One bounded-cache slot: the AOT-compiled executable plus the
+    introspection the LRU policy and ``cache_info`` report on.
+    ``shape_key`` is ``(padded-shape key, layout key)`` — the latter is None
+    for COO runners and the Pallas layout capacities otherwise, so a layout
+    cap growth evicts only the Pallas runners it actually staled.
+    ``owners`` is the pin set: every tenant that compiled or hit the entry;
+    ``release``/``release_stale`` drop pins, the fairness policy charges
+    load against them."""
+    compiled: Any
+    shape_key: Any
+    program: str                   # program type name (display only)
+    compile_time: float = 0.0
+    hits: int = 0
+    nbytes: int = 0                # estimated device bytes this executable
+                                   # pins (outputs + temps + generated code)
+    owners: set = dataclasses.field(default_factory=set)
+
+
+@dataclasses.dataclass
+class OwnerStats:
+    """Per-tenant accounting on a shared cache (``stats_by_owner``)."""
+    hits: int = 0
+    misses: int = 0                # compilations this owner triggered
+    compile_time: float = 0.0
+    evicted_pins: int = 0          # this owner's pins lost to LRU/byte
+                                   # eviction (fairness: a flooding tenant's
+                                   # counter grows, its neighbors' don't)
+
+
+class RunnerCache:
+    """Byte- and slot-bounded LRU of compiled runners, shareable across
+    sessions. ``max_entries``/``max_bytes`` follow the old session bounds
+    (``None`` = unbounded; the most recent entry is never evicted, so a
+    single over-budget executable still serves)."""
+
+    def __init__(self, max_entries: Optional[int] = 32,
+                 max_bytes: Optional[int] = None):
+        self.max_entries = max_entries
+        self.max_bytes = max_bytes
+        self._entries: OrderedDict = OrderedDict()   # key -> RunnerEntry
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.compile_time_total = 0.0
+        self.by_owner: dict = {}                     # owner -> OwnerStats
+
+    # ------------------------------------------------------------------ #
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key) -> bool:
+        return key in self._entries
+
+    def keys(self):
+        return self._entries.keys()
+
+    @property
+    def entries(self) -> OrderedDict:
+        """The live key -> ``RunnerEntry`` map in LRU order (oldest first).
+        Exposed for introspection/tests; mutate through the cache API."""
+        return self._entries
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(e.nbytes for e in self._entries.values())
+
+    def _owner_stats(self, owner) -> OwnerStats:
+        st = self.by_owner.get(owner)
+        if st is None:
+            st = self.by_owner[owner] = OwnerStats()
+        return st
+
+    # ------------------------------------------------------------------ #
+    def lookup(self, key, owner) -> Optional[RunnerEntry]:
+        """Fetch + LRU-refresh. A hit pins ``owner`` onto the entry (this is
+        how a tenant B query comes to share a runner tenant A compiled)."""
+        e = self._entries.get(key)
+        if e is None:
+            self.misses += 1
+            self._owner_stats(owner).misses += 1
+            return None
+        self._entries.move_to_end(key)
+        e.hits += 1
+        e.owners.add(owner)
+        self.hits += 1
+        self._owner_stats(owner).hits += 1
+        return e
+
+    def insert(self, key, entry: RunnerEntry, owner) -> int:
+        """Admit a freshly compiled runner pinned by ``owner``; returns how
+        many entries the bounds evicted to make room."""
+        entry.owners.add(owner)
+        self._entries[key] = entry
+        self._entries.move_to_end(key)
+        ost = self._owner_stats(owner)
+        ost.compile_time += entry.compile_time
+        self.compile_time_total += entry.compile_time
+        return self._evict()
+
+    # ------------------------------------------------------------------ #
+    def _victim_key(self):
+        """Fair victim choice: the LRU entry among the most-loaded owner's
+        entries. Load = number of live entries an owner pins; entries pinned
+        by several owners charge each of them. With one owner (a private
+        session cache) every entry is the max-loaded owner's, so this is
+        plain LRU."""
+        load: dict = {}
+        for e in self._entries.values():
+            for o in e.owners:
+                load[o] = load.get(o, 0) + 1
+        if not load:
+            return next(iter(self._entries))
+        top = max(load.values())
+        heavy = {o for o, n in load.items() if n == top}
+        for k, e in self._entries.items():           # LRU order: oldest first
+            if not e.owners or e.owners & heavy:
+                return k
+        return next(iter(self._entries))
+
+    def _pop(self, key) -> RunnerEntry:
+        e = self._entries.pop(key)
+        self.evictions += 1
+        for o in e.owners:
+            self._owner_stats(o).evicted_pins += 1
+        return e
+
+    def _evict(self) -> int:
+        evicted = 0
+        if self.max_entries is not None:
+            while len(self._entries) > self.max_entries:
+                self._pop(self._victim_key())
+                evicted += 1
+        if self.max_bytes is not None:
+            total = self.total_bytes
+            while total > self.max_bytes and len(self._entries) > 1:
+                e = self._pop(self._victim_key())
+                total -= e.nbytes
+                evicted += 1
+        return evicted
+
+    # ------------------------------------------------------------------ #
+    def release(self, owner) -> int:
+        """Drop every pin ``owner`` holds (``GraphSession.close``). Entries
+        left with no owner are removed — nothing can account for them
+        anymore; entries other tenants still pin survive for those tenants.
+        Returns the number of entries dropped."""
+        dead = []
+        for k, e in self._entries.items():
+            e.owners.discard(owner)
+            if not e.owners:
+                dead.append(k)
+        for k in dead:
+            del self._entries[k]
+        return len(dead)
+
+    def release_stale(self, owner,
+                      stale: Callable[[RunnerEntry], bool]) -> int:
+        """Unpin ``owner`` from entries whose shapes it outgrew (bucket
+        growth/shrink). The entry itself survives while any other tenant at
+        those shapes still pins it — on a shared cache a tenant crossing a
+        bucket must never invalidate its neighbors' runners. Returns how
+        many entries this owner released (dropped or not): the session
+        bills them as its shape evictions."""
+        released, dead = 0, []
+        for k, e in self._entries.items():
+            if owner in e.owners and stale(e):
+                e.owners.discard(owner)
+                released += 1
+                if not e.owners:
+                    dead.append(k)
+        for k in dead:
+            del self._entries[k]
+        return released
+
+    # ------------------------------------------------------------------ #
+    def info(self) -> list:
+        """LRU-ordered snapshot (oldest — next to be evicted — first), one
+        dict per entry; ``owners`` is the sorted pin set."""
+        return [dict(program=e.program, shape_key=e.shape_key, hits=e.hits,
+                     compile_time=e.compile_time, nbytes=e.nbytes,
+                     owners=sorted(map(str, e.owners)))
+                for e in self._entries.values()]

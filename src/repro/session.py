@@ -103,54 +103,22 @@ from repro.core.metrics import ExecutionStats
 from repro.core.partition import PARTITIONERS, STREAM_ROUTERS
 from repro.core.subgraph import (PartitionedGraph, ShapePolicy,
                                  build_partitioned_graph)
+from repro.serving.result_cache import ResultCache
+from repro.serving.result_cache import result_key as _result_key
+from repro.serving.runner_cache import RunnerCache
+from repro.serving.runner_cache import RunnerEntry as _RunnerEntry
+from repro.serving.runner_cache import canonical_params as _canonical_params
+from repro.serving.runner_cache import params_fingerprint as \
+    _params_fingerprint
+from repro.serving.runner_cache import params_struct_key as _params_struct_key
+from repro.serving.runner_cache import program_key as _program_key
+from repro.serving.runner_cache import runner_nbytes as _runner_nbytes
 from repro.stream.buffer import DeltaBuffer
 from repro.stream.delta import CompactStats, DeltaStats, EdgeDelta
 from repro.stream.delta import compact as _compact_pg
 from repro.stream.ingest import StreamContext, streaming_ingest
 
 __all__ = ["GraphSession", "SessionStats", "ShapePolicy"]
-
-
-# --------------------------------------------------------------------------- #
-# cache keys
-# --------------------------------------------------------------------------- #
-def _program_key(program: VertexProgram):
-    """Hashable identity of a program's *static* structure: its type plus
-    every dataclass field (combiner/payload/dtype/tol/... — anything that
-    changes the traced computation). Programs carrying unhashable fields
-    fall back to per-instance identity (still cached, just not shared
-    across equal instances)."""
-    try:
-        fields = tuple((f.name, getattr(program, f.name))
-                       for f in dataclasses.fields(program))
-        hash(fields)
-        return (type(program), fields)
-    except TypeError:
-        return (type(program), id(program))
-
-
-def _canonical_params(params):
-    """Params pytree with every leaf a jnp array of a fixed dtype, so the
-    runner's input avals (and therefore the cache key) are stable across
-    python ints / np scalars / device arrays."""
-    if params is None:
-        return {}
-    return jax.tree.map(jnp.asarray, params)
-
-
-def _params_struct_key(params):
-    """Structure-only key (treedef + leaf shape/dtype): runners take params
-    as *traced* inputs, so different values share one executable."""
-    leaves, treedef = jax.tree.flatten(params)
-    return (treedef, tuple((tuple(l.shape), str(l.dtype)) for l in leaves))
-
-
-def _params_fingerprint(params):
-    """Value-level key — warm results are only reusable for the *same*
-    query (SSSP distances from source 0 say nothing about source 7)."""
-    leaves, treedef = jax.tree.flatten(params)
-    return (treedef, tuple((tuple(l.shape), str(l.dtype),
-                            np.asarray(l).tobytes()) for l in leaves))
 
 
 @dataclasses.dataclass
@@ -202,37 +170,13 @@ class SessionStats:
                                    # entry use (the lazy-flush counter: one
                                    # eager scheme would bill every entry
                                    # on every insert-only flush instead)
-
-
-@dataclasses.dataclass
-class _RunnerEntry:
-    """One bounded-cache slot: the AOT-compiled executable plus the
-    introspection the LRU policy and ``cache_info`` report on.
-    ``shape_key`` is ``(padded-shape key, layout key)`` — the latter is None
-    for COO runners and the Pallas layout capacities otherwise, so a layout
-    cap growth evicts only the Pallas runners it actually staled."""
-    compiled: Any
-    shape_key: Any
-    program: str                   # program type name (display only)
-    compile_time: float = 0.0
-    hits: int = 0
-    nbytes: int = 0                # estimated device bytes this executable
-                                   # pins (outputs + temps + generated code)
-
-
-def _runner_nbytes(compiled) -> int:
-    """Estimated device bytes a cached executable keeps alive: outputs +
-    temps + generated code from XLA's ``memory_analysis``. Inputs are the
-    session-owned resident graph, shared across runners, so they are
-    deliberately not billed. Where the analysis is unavailable the entry
-    weighs 0 — an unknown footprint must not be billed, or a single
-    mis-estimated runner could thrash the whole byte-bounded cache."""
-    try:
-        m = compiled.memory_analysis()
-        return int(m.output_size_in_bytes + m.temp_size_in_bytes
-                   + m.generated_code_size_in_bytes)
-    except Exception:
-        return 0
+    device_launches: int = 0       # compiled-runner executions — a result-
+                                   # cache hit serves with ZERO launches
+    batches: int = 0               # micro-batched launches (query_batch)
+    batched_queries: int = 0       # queries served inside those launches
+    result_cache_l1_hits: int = 0  # converged results served from the
+    result_cache_l2_hits: int = 0  # in-process / external tier
+    result_cache_misses: int = 0   # result-cache consultations that ran
 
 
 class _SessionBuffer(DeltaBuffer):
@@ -282,6 +226,17 @@ class GraphSession:
     bytes per entry* (device footprint per executable via XLA's
     ``memory_analysis``; host bytes per warm result) — slots bound entry
     counts, bytes bound what the entries actually pin.
+
+    Serving extras (docs/SERVING.md): ``runner_cache=`` injects a shared
+    :class:`repro.serving.runner_cache.RunnerCache` (how a ``SessionPool``
+    makes same-bucket tenants reuse one executable — ``max_runners`` /
+    ``max_runner_bytes`` are ignored in favor of the shared bounds);
+    ``result_cache=`` attaches a tiered
+    :class:`repro.serving.result_cache.ResultCache` consulted by ``query``
+    before launching anything; ``tenant=`` names this session in the shared
+    caches' keys and pin accounting. ``close()`` (or the context-manager
+    protocol) drops the resident device pytree and releases every shared-
+    cache pin; a closed session raises ``RuntimeError`` on use.
     """
 
     def __init__(self, pg: PartitionedGraph, *, ctx: Optional[StreamContext]
@@ -293,17 +248,23 @@ class GraphSession:
                  max_runners: Optional[int] = 32,
                  max_warm_entries: Optional[int] = 64,
                  max_runner_bytes: Optional[int] = None,
-                 max_warm_bytes: Optional[int] = None):
+                 max_warm_bytes: Optional[int] = None,
+                 runner_cache: Optional[RunnerCache] = None,
+                 result_cache: Optional[ResultCache] = None,
+                 tenant: Optional[str] = None):
         self.pg = pg
         self.ctx = ctx
         self.mesh = mesh
         self.cfg = self._normalize_cfg(cfg or EngineConfig())
         self.shape_policy = self._resolve_policy(shape_policy, pad_multiple)
         self.pad_multiple = self.shape_policy.pad_multiple
-        self.max_runners = max_runners
         self.max_warm_entries = max_warm_entries
-        self.max_runner_bytes = max_runner_bytes
         self.max_warm_bytes = max_warm_bytes
+        self.tenant = f"session-{id(self):x}" if tenant is None else tenant
+        self._runner_cache = runner_cache if runner_cache is not None \
+            else RunnerCache(max_runners, max_runner_bytes)
+        self.result_cache = result_cache
+        self._closed = False
         self.stats = SessionStats()
         self.buffer = None if ctx is None else _SessionBuffer(
             self, pg, ctx, max_edges=max_buffer_edges,
@@ -311,7 +272,6 @@ class GraphSession:
         self._device = None            # resident stacked DeviceSubgraph
         self._device_version = -1
         self._host_version = 0         # bumped by every applied flush/compact
-        self._runners: OrderedDict = OrderedDict()  # key -> _RunnerEntry (LRU)
         self._warm: OrderedDict = OrderedDict()     # (pkey, params) -> entry
         self._identity_blocks: dict = {}  # cold-start [P,v_max,K] blocks
         self._keepalive: dict = {}     # id-keyed programs pinned alive
@@ -409,9 +369,77 @@ class GraphSession:
         return (pg.n_parts, pg.v_max, pg.e_max, self.slot_capacity,
                 pg.vlabel is not None)
 
+    @property
+    def _runners(self):
+        """The compiled-runner entries (key -> ``RunnerEntry``, LRU order).
+        On a pool-shared cache this is the WHOLE shared map — other tenants'
+        entries included; on the default private cache it is exactly the old
+        per-session ``OrderedDict``. Kept as a property for introspection
+        back-compat; mutate through ``self._runner_cache``."""
+        return self._runner_cache.entries
+
+    # The runner-cache bounds live on the cache itself (shared in a pool);
+    # these proxies keep the historical mutable-attribute surface — setting
+    # one re-bounds the cache this session uses, applied on the next insert.
+    # On a pool-shared cache that IS the shared bound.
+    @property
+    def max_runners(self) -> Optional[int]:
+        return self._runner_cache.max_entries
+
+    @max_runners.setter
+    def max_runners(self, v: Optional[int]) -> None:
+        self._runner_cache.max_entries = v
+
+    @property
+    def max_runner_bytes(self) -> Optional[int]:
+        return self._runner_cache.max_bytes
+
+    @max_runner_bytes.setter
+    def max_runner_bytes(self, v: Optional[int]) -> None:
+        self._runner_cache.max_bytes = v
+
+    # ------------------------------------------------------------------ #
+    # lifecycle
+    # ------------------------------------------------------------------ #
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
+    def close(self) -> None:
+        """Release everything this session holds: the resident device
+        pytree, its pins in the (possibly shared) runner cache, the warm-
+        result memory, identity blocks and program pins. Idempotent; any
+        subsequent query/mutation raises ``RuntimeError``. Without close,
+        a dropped session keeps device memory alive until GC — the pool
+        eviction path needs the deterministic version."""
+        if self._closed:
+            return
+        self._closed = True
+        self._runner_cache.release(self.tenant)
+        self._warm.clear()
+        self._remap_log.clear()
+        self._identity_blocks.clear()
+        self._keepalive.clear()
+        self._device = None
+        self._device_version = -1
+        self._sync_warm_bytes()
+        self._sync_runner_bytes()
+
+    def __enter__(self) -> "GraphSession":
+        self._check_open()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def _check_open(self) -> None:
+        if self._closed:
+            raise RuntimeError("GraphSession is closed")
+
     def device_graph(self):
         """The resident stacked [P, ...] DeviceSubgraph pytree, re-uploaded
         only when the host graph changed since the last upload."""
+        self._check_open()
         if self._device is None or self._device_version != self._host_version:
             self._device = _device_subgraph(self.pg)
             self._device_version = self._host_version
@@ -422,7 +450,7 @@ class GraphSession:
     # query path
     # ------------------------------------------------------------------ #
     def query(self, program: VertexProgram, params=None, *, warm="auto",
-              cfg: Optional[EngineConfig] = None):
+              cfg: Optional[EngineConfig] = None, use_result_cache=True):
         """Run ``program`` over the resident graph; returns
         ``(results, ExecutionStats)`` exactly like the low-level ``run``
         (results in the [P, v_max(, K)] local layout; ``self.pg.collect``
@@ -441,9 +469,18 @@ class GraphSession:
         delegate to the uncached ``run_sim`` trace loop (per-superstep stats
         and checkpointing are job-level features, not serving features).
 
+        When a ``result_cache`` is attached, the converged result of this
+        exact ``(graph version, program, params, cfg)`` query may be served
+        straight from the cache with **zero device launches**
+        (``ExecutionStats.result_cache_tier`` says which tier answered);
+        pass ``use_result_cache=False`` to force a device run. Keys carry
+        the graph version, so any flush — including deleting ones —
+        implicitly invalidates prior entries.
+
         Buffered updates are flushed first: a query always sees every
         mutation accepted by ``update``.
         """
+        self._check_open()
         if self.buffer is not None and len(self.buffer):
             self.flush()
         cfg = self._normalize_cfg(cfg or self.cfg)
@@ -483,6 +520,28 @@ class GraphSession:
         eb = resolve_edge_backend(program, cfg)
         if eb != cfg.edge_backend:
             cfg = dataclasses.replace(cfg, edge_backend=eb)
+
+        use_rc = use_result_cache and self.result_cache is not None
+        rkey = None
+        if use_rc:
+            rkey = _result_key(self.tenant, self._host_version, program,
+                               params_c, cfg)
+            t0 = time.perf_counter()
+            val, tier = self.result_cache.get(rkey)
+            if val is not None:
+                # converged-result hit: no runner, no launch, no transfer
+                if tier == "l1":
+                    self.stats.result_cache_l1_hits += 1
+                else:
+                    self.stats.result_cache_l2_hits += 1
+                st = ExecutionStats(
+                    supersteps=int(val["supersteps"]),
+                    wall_time=time.perf_counter() - t0,
+                    edge_backend=str(val.get("edge_backend", eb)),
+                    result_cache_tier=tier)
+                return np.asarray(val["results"]), st
+            self.stats.result_cache_misses += 1
+
         warm_in = bool(program.monotone)
         args = (self.device_graph(),)
         if eb != "coo":
@@ -494,6 +553,7 @@ class GraphSession:
             program, pkey, params_c, cfg, warm_in, args, eb)
         t0 = time.perf_counter()
         out = compiled(*args)
+        self.stats.device_launches += 1
         res, steps, tot_msgs, sweeps = jax.block_until_ready(out)
         wall = time.perf_counter() - t0
         if use_warm:
@@ -506,7 +566,175 @@ class GraphSession:
         stats.evicted_runners = evicted
         if program.monotone:
             self._remember(program, wkey, res, stats.supersteps)
+        if use_rc:
+            stats.result_cache_tier = "miss"
+            self.result_cache.put(rkey, dict(
+                results=res, supersteps=stats.supersteps, edge_backend=eb))
         return res, stats
+
+    def query_batch(self, program: VertexProgram, params_list, *,
+                    warm="auto", cfg: Optional[EngineConfig] = None,
+                    use_result_cache=True):
+        """Serve ``len(params_list)`` queries of one program in a SINGLE
+        device launch (the micro-batching engine entry point —
+        ``serving/batcher.py`` coalesces live traffic into these). Returns
+        ``[(results, ExecutionStats), ...]`` in input order, each exactly
+        what ``query`` would have returned: the batched runner maps the
+        same per-lane superstep loop over a stacked params pytree (COO
+        simulator: ``jax.vmap`` — converged lanes are select-frozen, so
+        per-lane results are bit-identical to singleton launches; Pallas /
+        shard_map backends: ``lax.scan`` over lanes inside one executable).
+
+        Every lane must share the program and the param *structure*
+        (``ValueError`` otherwise — the batcher degrades mismatches to
+        singleton ``query`` calls). Batch sizes are padded up to the next
+        power of two (replicating lane 0) so the runner cache holds
+        O(log max_batch) batched executables per program, not one per
+        batch size; the pad lanes' outputs are discarded.
+
+        Warm starts (``warm="auto"``) and the result cache work per lane:
+        each lane looks up / stores its own warm entry and result-cache
+        key. The result cache short-circuits only when EVERY lane hits —
+        a partial hit still launches the full batch (the lanes that hit
+        are simply recomputed; their entries refresh)."""
+        self._check_open()
+        if self.buffer is not None and len(self.buffer):
+            self.flush()
+        B = len(params_list)
+        if B == 0:
+            return []
+        cfg = self._normalize_cfg(cfg or self.cfg)
+        if cfg.trace:
+            raise ValueError("query_batch does not support cfg.trace — "
+                             "trace one query at a time")
+        params_cs = [_canonical_params(p) for p in params_list]
+        skey = _params_struct_key(params_cs[0])
+        for pc in params_cs[1:]:
+            if _params_struct_key(pc) != skey:
+                raise ValueError(
+                    "query_batch needs an identical param structure on "
+                    "every lane (same treedef, leaf shapes and dtypes); "
+                    "mismatched requests must go through query()")
+        if B == 1:
+            res, st = self.query(program, params_list[0], warm=warm,
+                                 cfg=cfg, use_result_cache=use_result_cache)
+            return [(res, st)]
+        if not jax.tree.leaves(params_cs[0]) and not program.monotone:
+            # leafless lanes (no params, no warm input): nothing carries a
+            # batch axis and every lane is the same computation — serve one
+            # singleton and fan the result out
+            res, st = self.query(program, params_list[0], warm=warm,
+                                 cfg=cfg, use_result_cache=use_result_cache)
+            return [(res, dataclasses.replace(st, batch_size=B))
+                    for _ in range(B)]
+
+        pkey = _program_key(program)
+        if isinstance(pkey[1], int):
+            self._keepalive[pkey[1]] = program
+        eb = resolve_edge_backend(program, cfg)
+        if eb != cfg.edge_backend:
+            cfg = dataclasses.replace(cfg, edge_backend=eb)
+
+        use_rc = use_result_cache and self.result_cache is not None
+        rkeys = None
+        if use_rc:
+            rkeys = [_result_key(self.tenant, self._host_version, program,
+                                 pc, cfg) for pc in params_cs]
+            if all(self.result_cache.peek(k) is not None for k in rkeys):
+                out = []
+                for k in rkeys:
+                    t0 = time.perf_counter()
+                    val, tier = self.result_cache.get(k)
+                    if tier == "l1":
+                        self.stats.result_cache_l1_hits += 1
+                    else:
+                        self.stats.result_cache_l2_hits += 1
+                    out.append((np.asarray(val["results"]), ExecutionStats(
+                        supersteps=int(val["supersteps"]),
+                        wall_time=time.perf_counter() - t0,
+                        edge_backend=str(val.get("edge_backend", eb)),
+                        result_cache_tier=tier, batch_size=B)))
+                self.stats.queries += B
+                return out
+            self.stats.result_cache_misses += B
+
+        # per-lane warm bookkeeping, same rules as query()
+        entries, use_warms, wkeys = [], [], []
+        for pc in params_cs:
+            entry = wkey = None
+            if program.monotone:
+                wkey = (pkey, _params_fingerprint(pc))
+                entry = self._warm.get(wkey)
+                if entry is not None:
+                    self._warm.move_to_end(wkey)
+            if warm is True:
+                if not program.monotone:
+                    raise ValueError(
+                        f"warm=True: {type(program).__name__} is not "
+                        "monotone")
+                if entry is None:
+                    raise ValueError(
+                        "warm=True but a lane has no cached converged "
+                        "result; use warm='auto'")
+            wkeys.append(wkey)
+            entries.append(entry)
+            use_warms.append(entry is not None and warm in ("auto", True))
+
+        self.stats.queries += B
+        self.stats.batches += 1
+        self.stats.batched_queries += B
+        warm_in = bool(program.monotone)
+        Bp = 1 << (B - 1).bit_length()           # power-of-2 batch bucket
+        pad = Bp - B
+        params_pad = params_cs + [params_cs[0]] * pad
+        batched_params = jax.tree.map(lambda *ls: jnp.stack(ls), *params_pad)
+        args = (self.device_graph(),)
+        if eb != "coo":
+            args += (self._layout_arg(program, eb),)
+        args += (batched_params,)
+        if warm_in:
+            blocks = [self._warm_arg(program, entries[i], use_warms[i])
+                      for i in range(B)]
+            blocks += [blocks[0]] * pad
+            args += (jnp.stack(blocks),)
+        compiled, compile_time, evicted = self._get_runner(
+            program, pkey, batched_params, cfg, warm_in, args, eb, batch=Bp)
+        t0 = time.perf_counter()
+        out = compiled(*args)
+        self.stats.device_launches += 1
+        res_b, steps_b, msgs_b, sweeps_b = jax.block_until_ready(out)
+        wall = time.perf_counter() - t0
+
+        results = []
+        for i in range(B):
+            res = np.asarray(res_b[i])
+            st = self._execution_stats(
+                program, cfg, int(steps_b[i]), int(msgs_b[i]),
+                np.asarray(sweeps_b[i]), wall, compile_time, eb)
+            st.evicted_runners = evicted
+            st.batch_size = B
+            if use_warms[i]:
+                self.stats.warm_queries += 1
+            if program.monotone:
+                self._remember(program, wkeys[i], res, st.supersteps)
+            if use_rc:
+                st.result_cache_tier = "miss"
+                self.result_cache.put(rkeys[i], dict(
+                    results=res, supersteps=st.supersteps, edge_backend=eb))
+            results.append((res, st))
+        return results
+
+    def result_key_for(self, program: VertexProgram, params=None,
+                       cfg: Optional[EngineConfig] = None) -> str:
+        """The tiered result-cache key ``query`` would consult for this
+        request right now (tenant + current graph version + normalized
+        config) — the batcher's fast path peeks it before queueing."""
+        cfg = self._normalize_cfg(cfg or self.cfg)
+        eb = resolve_edge_backend(program, cfg)
+        if eb != cfg.edge_backend:
+            cfg = dataclasses.replace(cfg, edge_backend=eb)
+        return _result_key(self.tenant, self._host_version, program,
+                           _canonical_params(params), cfg)
 
     def _layout_arg(self, program, eb):
         """Device layout pytree for a Pallas-backend query — an explicit
@@ -578,35 +806,46 @@ class GraphSession:
             return jnp.asarray(blk)
         return jnp.asarray(_warm_block(program, pg, entry.global_values))
 
-    def _get_runner(self, program, pkey, params_c, cfg, warm_in, args, eb):
+    def _get_runner(self, program, pkey, params_c, cfg, warm_in, args, eb,
+                    batch=0):
         """AOT-compile (trace + lower + compile, once) or fetch the cached
         executable for this (program, param structure, config, shapes).
         Returns ``(compiled, compile_time, n_lru_evictions)``; a hit
         refreshes the entry's LRU position. Runners are built against the
         bucketed ``slot_capacity``, not the exact ``pg.n_slots``; Pallas
         runners additionally key on the layout capacities (``shape_key`` of
-        the ``EdgeLayouts``), which are bucketed and grow-only too."""
+        the ``EdgeLayouts``), which are bucketed and grow-only too.
+
+        The cache may be shared across sessions (``SessionPool``): keys
+        carry shapes and never the tenant, so a same-bucket lookup by a
+        different tenant hits the same entry — that is the cross-tenant
+        executable sharing. ``batch`` (a padded lane count from
+        ``query_batch``) joins the key explicitly so a batched runner can
+        never collide with a singleton runner whose params genuinely carry
+        a leading axis of the same length."""
         lkey = self._layout_key(eb)
         full_shape = (self.shape_key, lkey)
         key = (pkey, _params_struct_key(params_c), cfg, full_shape, warm_in)
-        hit = self._runners.get(key)
+        if batch:
+            key = key + (("batch", batch),)
+        hit = self._runner_cache.lookup(key, self.tenant)
         if hit is not None:
-            self._runners.move_to_end(key)
-            hit.hits += 1
             self.stats.cache_hits += 1
             return hit.compiled, 0.0, 0
         self.stats.cache_misses += 1
         n_slots = self.slot_capacity
         t0 = time.perf_counter()
         if cfg.backend == "sim":
-            fn = make_sim_runner(program, cfg, n_slots, warm_start=warm_in)
+            fn = make_sim_runner(program, cfg, n_slots, warm_start=warm_in,
+                                 batch=bool(batch))
             compiled = jax.jit(fn).lower(*args).compile()
         else:
             self._check_mesh(cfg)
             go = make_bsp_runner(program, self.mesh, cfg, n_slots,
                                  params=params_c,
                                  has_vlabel=self.pg.vlabel is not None,
-                                 warm_start=warm_in, params_as_input=True)
+                                 warm_start=warm_in, params_as_input=True,
+                                 batch=bool(batch))
             # session args are (sgs[, lay], params[, warm]); the shard
             # runner wants (sgs[, lay][, warm], params) — reorder inside
             # the jitted wrapper
@@ -618,19 +857,19 @@ class GraphSession:
                 ).lower(*args).compile()
         compile_time = time.perf_counter() - t0
         self.stats.compile_time_total += compile_time
-        self._runners[key] = _RunnerEntry(
+        entry = _RunnerEntry(
             compiled=compiled, shape_key=full_shape,
             program=type(program).__name__, compile_time=compile_time,
             nbytes=_runner_nbytes(compiled))
-        evicted = self._evict_lru(self._runners, self.max_runners,
-                                  "cache_evictions_lru",
-                                  max_bytes=self.max_runner_bytes)
+        evicted = self._runner_cache.insert(key, entry, self.tenant)
+        if evicted:
+            self.stats.cache_evictions_lru += evicted
+            self._prune_keepalive()
         self._sync_runner_bytes()
         return compiled, compile_time, evicted
 
     def _sync_runner_bytes(self) -> None:
-        self.stats.runner_cache_bytes = sum(e.nbytes
-                                            for e in self._runners.values())
+        self.stats.runner_cache_bytes = self._runner_cache.total_bytes
 
     def _evict_lru(self, cache: OrderedDict, bound: Optional[int],
                    counter: str, max_bytes: Optional[int] = None) -> int:
@@ -735,6 +974,7 @@ class GraphSession:
     # streaming lifecycle
     # ------------------------------------------------------------------ #
     def _require_buffer(self, what: str) -> DeltaBuffer:
+        self._check_open()
         if self.buffer is None:
             raise ValueError(
                 f"{what} needs a StreamContext (this session was opened "
@@ -801,6 +1041,7 @@ class GraphSession:
         device blocks move through ``remap_state``). When the compacted
         content still fits the current buckets the padded shapes — and every
         compiled runner — survive untouched."""
+        self._check_open()
         if self.ctx is None:
             self._require_buffer("compact()")
         if self.buffer is not None and len(self.buffer):
@@ -822,7 +1063,13 @@ class GraphSession:
         that stays inside the current buckets evicts nothing — the whole
         point of the bucketed cache. Pallas runners also check their layout
         capacities: a tile/block cap crossing its bucket stales only the
-        runners of that backend, never the COO ones."""
+        runners of that backend, never the COO ones.
+
+        On a shared cache this RELEASES the session's pins rather than
+        deleting entries outright: a tenant crossing a bucket must never
+        invalidate the runners its same-shaped neighbors still serve from.
+        Entries nobody pins anymore are dropped; on a private cache that is
+        every stale entry — exactly the old behavior."""
         cur = self.shape_key
         lay = self.pg.edge_layouts
         cur_lay = {}
@@ -838,10 +1085,8 @@ class GraphSession:
                 return False
             return cur_lay.get(lkey[0]) != lkey
 
-        stale = [k for k, e in self._runners.items() if stale_entry(e)]
-        for k in stale:
-            del self._runners[k]
-        self.stats.cache_evictions_shape += len(stale)
+        released = self._runner_cache.release_stale(self.tenant, stale_entry)
+        self.stats.cache_evictions_shape += released
         self._sync_runner_bytes()
         # flush/compact may also have dropped warm entries — release any
         # id-keyed program pins nothing references anymore
@@ -857,8 +1102,8 @@ class GraphSession:
         """Snapshot of the compiled-runner cache in LRU order (oldest —
         next to be evicted — first): one dict per entry with the program
         type name, the (padded-shape, layout) key it was specialized to,
-        its hit count, what its compilation cost, and the estimated device
-        bytes it pins (what ``max_runner_bytes`` evicts against)."""
-        return [dict(program=e.program, shape_key=e.shape_key, hits=e.hits,
-                     compile_time=e.compile_time, nbytes=e.nbytes)
-                for e in self._runners.values()]
+        its hit count, what its compilation cost, the estimated device
+        bytes it pins (what ``max_runner_bytes`` evicts against), and the
+        tenants pinning it (``owners`` — more than one on a pool-shared
+        cache)."""
+        return self._runner_cache.info()

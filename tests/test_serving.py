@@ -1,0 +1,430 @@
+"""Serving-subsystem tests (docs/SERVING.md): shared runner cache +
+cross-tenant executable sharing, micro-batched launches vs singleton
+parity, the tiered result cache, session close(), and the batcher's
+coalescing policy. The shard_map backend repeats the sharing and batching
+assertions in a subprocess with fake devices (jax must see them before
+init)."""
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import jax._src.test_util as jtu
+
+from repro.algos import SSSP, ConnectedComponents, PageRank
+from repro.core import EngineConfig
+from repro.graphgen import powerlaw_graph
+from repro.serving import (BatchPolicy, DictStore, FileStore, MicroBatcher,
+                           ResultCache, RunnerCache, RunnerEntry,
+                           SessionPool, canonical_params, params_struct_key)
+from repro.session import GraphSession
+
+
+@pytest.fixture(scope="module")
+def g():
+    return powerlaw_graph(400, seed=7, weighted=True).as_undirected()
+
+
+@pytest.fixture(scope="module")
+def g2():
+    # different content, same size: lands in the same shape bucket as g
+    return powerlaw_graph(400, seed=8, weighted=True).as_undirected()
+
+
+# --------------------------------------------------------------------------- #
+# satellite: param leaf dtype drift must never retrace
+# --------------------------------------------------------------------------- #
+def test_param_dtype_drift_zero_retraces(g):
+    sess = GraphSession.from_graph(g, 4, "cdbh")
+    sess.query(SSSP(), {"source": 0}, warm=False)        # compiles once
+    with jtu.count_jit_tracing_cache_miss() as tr:
+        for p in (1, np.int32(2), np.int64(3), np.array(4),
+                  np.array(5, dtype=np.int32)):
+            sess.query(SSSP(), {"source": p}, warm=False)
+    assert tr[0] == 0, f"dtype drift retraced {tr[0]} times"
+    assert sess.stats.cache_misses == 1
+    assert len(sess._runners) == 1
+
+
+def test_canonical_params_scalar_normalization():
+    variants = [{"source": 3}, {"source": np.int32(3)},
+                {"source": np.int64(3)}, {"source": np.array(3)}]
+    keys = {params_struct_key(canonical_params(v)) for v in variants}
+    assert len(keys) == 1
+    fkeys = {params_struct_key(canonical_params({"x": v}))
+             for v in (0.5, np.float32(0.5), np.float64(0.5),
+                       np.array(0.5))}
+    assert len(fkeys) == 1
+    # ndim >= 1 leaves keep their dtype (caller's choice): an int vector
+    # param (e.g. MSSP sources) never collapses into a float one
+    ai = canonical_params({"v": np.zeros(4, np.int32)})
+    af = canonical_params({"v": np.zeros(4, np.float32)})
+    assert params_struct_key(ai) != params_struct_key(af)
+
+
+# --------------------------------------------------------------------------- #
+# tentpole (a): cross-tenant executable sharing
+# --------------------------------------------------------------------------- #
+def test_cross_tenant_single_compile_sim(g, g2):
+    pool = SessionPool(max_runners=8)
+    a = pool.open("a", g, n_parts=4)
+    b = pool.open("b", g2, n_parts=4)
+    assert a.shape_key == b.shape_key, "fixtures must share a bucket"
+    a.query(SSSP(), {"source": 0}, warm=False)
+    with jtu.count_jit_tracing_cache_miss() as tr:
+        rb, st = b.query(SSSP(), {"source": 5}, warm=False)
+    assert tr[0] == 0, f"tenant b retraced {tr[0]} times"
+    assert st.compile_time == 0.0
+    assert pool.runner_cache.misses == 1
+    assert pool.runner_cache.hits == 1
+    # tenant b's answer must be for tenant b's graph, not a's
+    ref, _ = GraphSession.from_graph(g2, 4, "cdbh").query(
+        SSSP(), {"source": 5}, warm=False)
+    assert np.array_equal(rb, ref, equal_nan=True)
+    [entry] = pool.runner_cache.entries.values()
+    assert entry.owners == {"a", "b"}
+    pool.close_all()
+
+
+def test_eviction_fairness_unit():
+    # flooding owner loses its own LRU entry; the small owner's survives
+    cache = RunnerCache(max_entries=3)
+
+    def entry():
+        return RunnerEntry(compiled=object(), shape_key=(), program="P")
+
+    cache.insert("b1", entry(), "b")
+    cache.insert("a1", entry(), "a")
+    cache.insert("a2", entry(), "a")
+    cache.insert("a3", entry(), "a")          # overflow: a holds the most
+    assert "b1" in cache
+    assert "a1" not in cache                  # a's own LRU entry evicted
+    assert cache.by_owner["a"].evicted_pins == 1
+    assert cache.by_owner["b"].evicted_pins == 0
+
+
+def test_eviction_fairness_sessions(g, g2):
+    pool = SessionPool(max_runners=2)
+    a = pool.open("a", g, n_parts=4)
+    b = pool.open("b", g2, n_parts=4)
+    b.query(SSSP(), {"source": 0}, warm=False)
+    # tenant a floods the 2-slot cache with distinct programs
+    for tol in (1e-5, 1e-6, 1e-7):
+        a.query(PageRank(tol=tol), {"n_vertices": g.n_vertices}, warm=False)
+    # b's runner survived the flood: re-query compiles nothing
+    misses = pool.runner_cache.misses
+    b.query(SSSP(), {"source": 1}, warm=False)
+    assert pool.runner_cache.misses == misses
+    assert pool.stats()["runner_cache"]["by_owner"]["b"].evicted_pins == 0
+    pool.close_all()
+
+
+def test_pool_lifecycle(g, g2):
+    pool = SessionPool(max_runners=8)
+    a = pool.open("a", g, n_parts=4)
+    b = pool.open("b", g2, n_parts=4)
+    a.query(SSSP(), {"source": 0}, warm=False)
+    b.query(SSSP(), {"source": 0}, warm=False)
+    # closing one tenant keeps the shared entry alive for the other
+    pool.close("a")
+    assert a.closed and "a" not in pool
+    [entry] = pool.runner_cache.entries.values()
+    assert entry.owners == {"b"}
+    misses = pool.runner_cache.misses
+    b.query(SSSP(), {"source": 2}, warm=False)
+    assert pool.runner_cache.misses == misses
+    pool.close("b")
+    assert len(pool.runner_cache) == 0
+    with pytest.raises(ValueError):
+        pool.open("b", g, pg=a.pg)            # exactly one source
+    pool.close_all()
+
+
+def test_pool_max_sessions_lru(g):
+    with SessionPool(max_sessions=2) as pool:
+        a = pool.open("a", g, n_parts=4)
+        pool.open("b", g, n_parts=4)
+        pool.open("c", g, n_parts=4)          # evicts a (LRU)
+        assert a.closed
+        assert pool.tenants == ["b", "c"]
+        assert pool.sessions_closed == 1
+
+
+# --------------------------------------------------------------------------- #
+# satellite: close() + context manager
+# --------------------------------------------------------------------------- #
+def test_session_close(g):
+    sess = GraphSession.from_graph(g, 4, "cdbh")
+    sess.query(SSSP(), {"source": 0})
+    sess.close()
+    assert sess.closed
+    assert sess._device is None
+    assert len(sess._runners) == 0 and not sess._warm
+    for fn in (lambda: sess.query(SSSP(), {"source": 0}),
+               lambda: sess.query_batch(SSSP(), [{"source": 0}]),
+               lambda: sess.update(adds=([0], [1], [1.0])),
+               lambda: sess.flush(),
+               lambda: sess.compact(),
+               lambda: sess.device_graph()):
+        with pytest.raises(RuntimeError, match="closed"):
+            fn()
+    sess.close()                              # idempotent
+    with GraphSession.from_graph(g, 4, "cdbh") as s2:
+        s2.query(SSSP(), {"source": 0})
+    assert s2.closed
+
+
+# --------------------------------------------------------------------------- #
+# tentpole (b): micro-batched launches == singleton launches
+# --------------------------------------------------------------------------- #
+def test_query_batch_bit_identical(g):
+    sess = GraphSession.from_graph(g, 4, "cdbh")
+    singles = [sess.query(SSSP(), {"source": i}, warm=False)[0]
+               for i in range(3)]
+    out = sess.query_batch(SSSP(), [{"source": i} for i in range(3)],
+                           warm=False)
+    assert len(out) == 3
+    for i, (res, st) in enumerate(out):
+        assert np.array_equal(res, singles[i], equal_nan=True)
+        assert st.batch_size == 3
+    # one launch for the whole batch
+    assert sess.stats.batches == 1 and sess.stats.batched_queries == 3
+    # B=3 pads to the B=4 bucket: a 4-lane batch re-hits the same runner
+    misses = sess.stats.cache_misses
+    out4 = sess.query_batch(SSSP(), [{"source": i} for i in range(4)],
+                            warm=False)
+    assert sess.stats.cache_misses == misses
+    for i, (res, st) in enumerate(out4[:3]):
+        assert np.array_equal(res, singles[i], equal_nan=True)
+
+    cc1, _ = sess.query(ConnectedComponents(), warm=False)
+    for res, _ in sess.query_batch(ConnectedComponents(), [None, None],
+                                   warm=False):
+        assert np.array_equal(res, cc1)
+
+    pr1, _ = sess.query(PageRank(), {"n_vertices": g.n_vertices},
+                        warm=False)
+    for res, _ in sess.query_batch(
+            PageRank(), [{"n_vertices": g.n_vertices}] * 2, warm=False):
+        assert np.allclose(res, pr1)
+
+    with pytest.raises(ValueError, match="structure"):
+        sess.query_batch(SSSP(), [{"source": 0}, {"bad": 1}])
+    assert sess.query_batch(SSSP(), []) == []
+
+
+def test_query_batch_pallas_backend(g):
+    cfg = EngineConfig(edge_backend="pallas_tiles")
+    sess = GraphSession.from_graph(g, 4, "cdbh", cfg=cfg)
+    singles = [sess.query(SSSP(), {"source": i}, warm=False)[0]
+               for i in range(2)]
+    out = sess.query_batch(SSSP(), [{"source": i} for i in range(2)],
+                           warm=False)
+    for i, (res, _) in enumerate(out):
+        assert np.array_equal(res, singles[i], equal_nan=True)
+
+
+# --------------------------------------------------------------------------- #
+# tentpole (c): tiered result cache
+# --------------------------------------------------------------------------- #
+def test_result_cache_zero_launches_and_invalidation(g):
+    rc = ResultCache(store=DictStore())
+    sess = GraphSession.from_graph(g, 4, "cdbh", result_cache=rc,
+                                   tenant="t")
+    r1, st1 = sess.query(SSSP(), {"source": 0})
+    assert st1.result_cache_tier == "miss"
+    launches = sess.stats.device_launches
+    r2, st2 = sess.query(SSSP(), {"source": 0})
+    assert st2.result_cache_tier == "l1"
+    assert sess.stats.device_launches == launches, "hit touched the device"
+    assert st2.compile_time == 0.0 and st2.supersteps == st1.supersteps
+    assert np.array_equal(r1, r2, equal_nan=True)
+    # L2 promotion after the in-process tier is dropped
+    rc.clear_l1()
+    r3, st3 = sess.query(SSSP(), {"source": 0})
+    assert st3.result_cache_tier == "l2"
+    assert sess.stats.device_launches == launches
+    assert np.array_equal(r1, r3, equal_nan=True)
+    # a deleting flush moves the graph version: old entries unreachable
+    s, d = g.src[:4], g.dst[:4]
+    sess.update(deletes=(s, d))
+    sess.flush()
+    r4, st4 = sess.query(SSSP(), {"source": 0})
+    assert st4.result_cache_tier == "miss"
+    assert sess.stats.device_launches == launches + 1
+    # ... and the post-delete result is served on re-query
+    _, st5 = sess.query(SSSP(), {"source": 0})
+    assert st5.result_cache_tier == "l1"
+    assert sess.stats.result_cache_l1_hits == 1 + 1  # pre- and post-delete
+    sess.close()
+
+
+def test_result_cache_batch_all_hit(g):
+    rc = ResultCache()
+    sess = GraphSession.from_graph(g, 4, "cdbh", result_cache=rc,
+                                   tenant="t")
+    plist = [{"source": i} for i in range(3)]
+    out1 = sess.query_batch(SSSP(), plist, warm=False)
+    launches = sess.stats.device_launches
+    out2 = sess.query_batch(SSSP(), plist, warm=False)
+    assert sess.stats.device_launches == launches
+    for (r1, _), (r2, st2) in zip(out1, out2):
+        assert st2.result_cache_tier == "l1"
+        assert np.array_equal(r1, r2, equal_nan=True)
+    # a partial hit must NOT serve stale lanes from the cache path
+    out3 = sess.query_batch(SSSP(), [{"source": 0}, {"source": 9}],
+                            warm=False)
+    assert sess.stats.device_launches == launches + 1
+    assert all(st.result_cache_tier == "miss" for _, st in out3)
+    sess.close()
+
+
+def test_result_cache_ttl_and_stores(tmp_path):
+    now = [0.0]
+    rc = ResultCache(ttl=10.0, store=DictStore(clock=lambda: now[0]),
+                     clock=lambda: now[0])
+    rc.put("k", dict(results=np.arange(4.0), supersteps=3))
+    val, tier = rc.get("k")
+    assert tier == "l1" and val["supersteps"] == 3
+    now[0] = 11.0                              # past the TTL in BOTH tiers
+    val, tier = rc.get("k")
+    assert tier == "miss" and val is None
+    assert rc.stats.expirations == 1
+
+    fs = FileStore(str(tmp_path), clock=lambda: now[0])
+    rc2 = ResultCache(store=fs)
+    blob = dict(results=np.arange(6, dtype=np.float32).reshape(2, 3),
+                supersteps=5, edge_backend="coo")
+    rc2.put("x", blob)
+    rc2.clear_l1()
+    val, tier = rc2.get("x")
+    assert tier == "l2"
+    assert np.array_equal(val["results"], blob["results"])
+    assert val["results"].dtype == np.float32
+    assert val["supersteps"] == 5 and val["edge_backend"] == "coo"
+    # peek reports tiers without billing hits
+    stats_before = dataclass_tuple = (rc2.stats.l1_hits, rc2.stats.l2_hits)
+    assert rc2.peek("x") == "l1"
+    assert (rc2.stats.l1_hits, rc2.stats.l2_hits) == stats_before
+    assert rc2.peek("missing") is None
+
+    rc3 = ResultCache(max_entries=2)
+    for i in range(3):
+        rc3.put(f"k{i}", dict(results=np.zeros(1)))
+    assert len(rc3) == 2 and rc3.stats.l1_evictions == 1
+
+
+# --------------------------------------------------------------------------- #
+# the admission queue
+# --------------------------------------------------------------------------- #
+def test_batcher_coalescing(g):
+    sess = GraphSession.from_graph(g, 4, "cdbh")
+    bat = MicroBatcher(sess, BatchPolicy(max_batch=3, max_delay=0.005))
+    futs = [bat.submit(SSSP(), {"source": i}, warm=False) for i in range(3)]
+    # the third submit filled the group: launched inline, one batch
+    assert all(f.done() for f in futs)
+    assert bat.stats.launched_batches == 1 and bat.stats.batched_requests == 3
+    for i, f in enumerate(futs):
+        res, st = f.result(timeout=1)
+        ref, _ = sess.query(SSSP(), {"source": i}, warm=False)
+        assert np.array_equal(res, ref, equal_nan=True)
+        assert st.batch_size == 3 and st.queue_time >= 0.0
+
+
+def test_batcher_max_delay_and_deadline(g):
+    now = [0.0]
+    sess = GraphSession.from_graph(g, 4, "cdbh")
+    bat = MicroBatcher(sess, BatchPolicy(max_batch=8, max_delay=1.0),
+                       clock=lambda: now[0])
+    f1 = bat.submit(SSSP(), {"source": 0}, warm=False)
+    assert bat.poll() == 0 and not f1.done()   # not due yet
+    now[0] = 1.5
+    assert bat.poll() == 1                     # oldest waited past max_delay
+    res, st = f1.result(timeout=1)
+    assert st.batch_size == 1 and st.queue_time == 1.5
+    assert bat.stats.launched_singletons == 1
+    # a deadline forces the launch early
+    f2 = bat.submit(SSSP(), {"source": 1}, warm=False, deadline=now[0] + 0.5)
+    assert bat.poll() == 1 and f2.done()       # 0.5 <= max_delay horizon
+    # incompatible structures coalesce into separate groups
+    f3 = bat.submit(SSSP(), {"source": 2}, warm=False)
+    f4 = bat.submit(SSSP(), {"source": np.array([3], np.int32)},
+                    warm=False)
+    assert bat.pending == 2
+    assert bat.flush() == 2
+    assert f3.done() and f4.done()
+    f4.result(timeout=1)
+
+
+def test_batcher_fast_path_and_pool(g, g2):
+    rc = ResultCache()
+    pool = SessionPool(result_cache=rc)
+    pool.open("a", g, n_parts=4)
+    pool.open("b", g2, n_parts=4)
+    with MicroBatcher(pool, BatchPolicy(max_batch=2)) as bat:
+        fa = bat.submit(SSSP(), {"source": 0}, tenant="a")
+        fb = bat.submit(SSSP(), {"source": 0}, tenant="b")
+        # different sessions -> different groups; stop() flushes both
+    ra, _ = fa.result(timeout=1)
+    rb, _ = fb.result(timeout=1)
+    assert not np.array_equal(ra, rb, equal_nan=True)  # per-tenant graphs
+    # second round: answered straight from the result cache, no queueing
+    f2 = bat.submit(SSSP(), {"source": 0}, tenant="a")
+    assert f2.done() and bat.stats.fast_path_hits == 1
+    res, st = f2.result(timeout=1)
+    assert st.result_cache_tier == "l1" and st.queue_time == 0.0
+    assert np.array_equal(ra, res, equal_nan=True)
+    pool.close_all()
+
+
+# --------------------------------------------------------------------------- #
+# shard_map backend (subprocess: fake devices before jax init)
+# --------------------------------------------------------------------------- #
+SERVING_SHARD_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np
+import jax._src.test_util as jtu
+from repro.compat import make_mesh
+from repro.core import EngineConfig
+from repro.graphgen import powerlaw_graph
+from repro.algos import SSSP
+from repro.serving import SessionPool
+from repro.session import GraphSession
+
+g = powerlaw_graph(400, seed=7, weighted=True).as_undirected()
+g2 = powerlaw_graph(400, seed=8, weighted=True).as_undirected()
+mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
+cfg = EngineConfig(subgraph_axes=("pod", "data"), edge_axes=("model",))
+
+# cross-tenant sharing: tenant b compiles nothing
+pool = SessionPool(mesh=mesh, cfg=cfg)
+a = pool.open("a", g, n_parts=4)
+b = pool.open("b", g2, n_parts=4)
+a.query(SSSP(), {"source": 0}, warm=False)
+with jtu.count_jit_tracing_cache_miss() as tr:
+    rb, st = b.query(SSSP(), {"source": 5}, warm=False)
+assert tr[0] == 0, f"tenant b retraced {tr[0]} times"
+assert pool.runner_cache.misses == 1 and pool.runner_cache.hits == 1
+ref, _ = GraphSession.from_graph(g2, 4, "cdbh").query(
+    SSSP(), {"source": 5}, warm=False)
+assert np.array_equal(np.asarray(rb), np.asarray(ref), equal_nan=True)
+
+# micro-batch == singleton, bit-identical, on the shard backend too
+singles = [a.query(SSSP(), {"source": i}, warm=False)[0] for i in range(3)]
+out = a.query_batch(SSSP(), [{"source": i} for i in range(3)], warm=False)
+for i, (res, st) in enumerate(out):
+    assert np.array_equal(np.asarray(res), np.asarray(singles[i]),
+                          equal_nan=True), i
+    assert st.batch_size == 3
+pool.close_all()
+print("SERVING_SHARD_OK")
+"""
+
+
+def test_serving_shard_map_backend():
+    res = subprocess.run([sys.executable, "-c", SERVING_SHARD_SCRIPT],
+                         capture_output=True, text=True, timeout=900)
+    assert res.returncode == 0, res.stderr[-4000:]
+    assert "SERVING_SHARD_OK" in res.stdout
