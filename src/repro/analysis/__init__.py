@@ -1,0 +1,44 @@
+"""drone-lint: static trace-safety, cache-key, and kernel-contract checks.
+
+The analyzer half (``repro.analysis.core`` + ``repro.analysis.rules``) is a
+stdlib-``ast`` pass over the repo's own source that machine-checks the
+engine's performance contracts — the invariants DRONE's one-launch-per-
+superstep story rests on — before CI ever runs a kernel:
+
+  DL001  arrays captured by closure inside jit/shard_map/pallas_call bodies
+  DL002  unhashable/mutable fields on cache-key dataclasses
+  DL003  shard_map in_specs/out_specs arity vs the wrapped signature
+  DL004  Python ``if``/``while`` on traced values inside traced functions
+  DL005  Pallas kernel entry points without dtype guards / identity padding
+  DL006  ``except Exception`` that swallows errors silently
+
+The runtime half (``repro.analysis.sanitizer``) is ``retrace_guard()`` — a
+context manager that turns jax's tracing counter into an assertion that a
+region performed no unexpected compiles. ``GraphSession(debug_sanitize=True)``
+uses it to fail loudly when a cache-hit query still retraced.
+
+Command line: ``python tools/drone_lint.py src/repro``.
+"""
+from repro.analysis.core import (          # noqa: F401
+    Finding,
+    Rule,
+    RULES,
+    analyze_file,
+    analyze_paths,
+    analyze_source,
+    baseline_delta,
+    load_baseline,
+    write_baseline,
+)
+from repro.analysis import rules as _rules  # noqa: F401  (registers rules)
+from repro.analysis.sanitizer import (      # noqa: F401
+    RetraceError,
+    retrace_guard,
+)
+
+__all__ = [
+    "Finding", "Rule", "RULES",
+    "analyze_file", "analyze_paths", "analyze_source",
+    "baseline_delta", "load_baseline", "write_baseline",
+    "RetraceError", "retrace_guard",
+]

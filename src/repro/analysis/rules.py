@@ -1,0 +1,683 @@
+"""The drone-lint rules (DL001-DL006).
+
+Each rule is grounded in a failure mode this repo has actually hit (see
+docs/ANALYSIS.md for the before/after history):
+
+  DL001  device arrays captured by closure inside a function handed to
+         ``jit``/``shard_map``/``pallas_call``. PR 5 refactored the layout
+         blocks to "explicit runner inputs, never closures" after exactly
+         this pattern tied compiled-runner identity to array object identity
+         (cache misses + retraces on every rebuild).
+  DL002  cache-key dataclasses (``EngineConfig``, ``ShapePolicy``,
+         ``SemiringSweep``, ``VertexProgram`` subclasses — anything flowing
+         into ``program_key``/``params_struct_key``) holding unhashable or
+         mutable fields: list/dict/set annotations or defaults silently
+         break ``RunnerCache`` keying.
+  DL003  ``shard_map`` call sites whose literal ``in_specs`` arity does not
+         match the wrapped function's positional signature (jax reports
+         this only at trace time, deep inside the engine).
+  DL004  Python ``if``/``while`` on traced values inside traced functions —
+         a concretization error at best, a silent specialization retrace at
+         worst. Use ``lax.cond``/``lax.while_loop``/``jnp.where``.
+  DL005  Pallas kernel entry points (functions invoking ``pallas_call``)
+         without an explicit dtype guard/cast, or padding with numeric
+         literals instead of ``tile_pad_identity``/``combine_identity`` /
+         ``semiring_identity`` (a 0-fill is wrong for min_plus).
+  DL006  ``except Exception``/bare ``except`` that swallows the error:
+         no re-raise, no logging, no use of the bound exception. Narrow the
+         type and log at debug level, or annotate deliberate suppressions.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.core import Finding, rule
+
+# --------------------------------------------------------------------- #
+# shared AST helpers
+
+#: callables that move a python function into jax's tracing machinery
+_TRACE_ENTRIES = ("jit", "shard_map", "pallas_call")
+
+#: attribute names that read static metadata off a tracer (not its value)
+_STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "sharding", "aval",
+                 "weak_type"}
+
+#: builtins whose result is static even on traced arguments
+_STATIC_CALLS = {"len", "isinstance", "issubclass", "hasattr", "getattr",
+                 "type", "callable", "id", "repr", "str"}
+
+#: jnp/jax helpers that return static (python) values
+_STATIC_JAX_CALLS = {"issubdtype", "result_type", "ndim", "shape", "dtype",
+                     "iinfo", "finfo", "canonicalize_dtype"}
+
+#: identity helpers DL005 requires for kernel padding
+_IDENTITY_HELPERS = {"tile_pad_identity", "combine_identity",
+                     "semiring_identity"}
+
+
+def _qualname(node: ast.AST) -> Optional[str]:
+    """Dotted name of a Name/Attribute chain, e.g. ``jnp.zeros``."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _is_trace_entry(func: ast.AST) -> Optional[str]:
+    """If ``func`` resolves to jit/shard_map/pallas_call, return which."""
+    q = _qualname(func)
+    if q is None:
+        return None
+    tail = q.split(".")[-1]
+    return tail if tail in _TRACE_ENTRIES else None
+
+
+def _partial_entry(call: ast.Call) -> Optional[Tuple[str, ast.Call]]:
+    """``partial(jit, ...)`` / ``functools.partial(shard_map, ...)`` →
+    (entry name, the partial call)."""
+    q = _qualname(call.func)
+    if q and q.split(".")[-1] == "partial" and call.args:
+        entry = _is_trace_entry(call.args[0])
+        if entry:
+            return entry, call
+    return None
+
+
+def _traced_defs(tree: ast.AST) -> List[Tuple[ast.AST, str, List[ast.AST]]]:
+    """Every function that ends up inside jax tracing, with how it got
+    there and the stack of enclosing function defs.
+
+    Detected forms:
+      - ``@jit`` / ``@jax.jit`` / ``@partial(shard_map, ...)`` decorators;
+      - ``jit(f)`` / ``shard_map(f, ...)`` / ``pl.pallas_call(kernel, ...)``
+        where ``f`` names a def in an enclosing (or module) scope;
+      - a ``lambda`` passed directly to an entry.
+    """
+    # name -> def nodes, per scope path (module + enclosing functions)
+    out: List[Tuple[ast.AST, str, List[ast.AST]]] = []
+    seen: Set[int] = set()
+
+    def add(node: ast.AST, entry: str, stack: List[ast.AST]) -> None:
+        if id(node) not in seen:
+            seen.add(id(node))
+            out.append((node, entry, list(stack)))
+
+    def walk(node: ast.AST, stack: List[ast.AST],
+             defs: Dict[str, ast.AST]) -> None:
+        local_defs = dict(defs)
+        body = getattr(node, "body", [])
+        if isinstance(body, list):
+            for stmt in body:
+                if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    local_defs[stmt.name] = stmt
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for dec in child.decorator_list:
+                    entry = None
+                    if isinstance(dec, ast.Call):
+                        entry = _is_trace_entry(dec.func)
+                        if entry is None:
+                            pe = _partial_entry(dec)
+                            entry = pe[0] if pe else None
+                    else:
+                        entry = _is_trace_entry(dec)
+                    if entry:
+                        add(child, entry, stack)
+                walk(child, stack + [child], local_defs)
+            elif isinstance(child, ast.Call):
+                entry = _is_trace_entry(child.func)
+                if entry:
+                    for arg in child.args:
+                        if isinstance(arg, ast.Lambda):
+                            add(arg, entry, stack)
+                        elif isinstance(arg, ast.Name) and \
+                                arg.id in local_defs:
+                            add(local_defs[arg.id], entry, stack)
+                walk(child, stack, local_defs)
+            else:
+                walk(child, stack, local_defs)
+
+    walk(tree, [], {})
+    return out
+
+
+def _bound_names(fn: ast.AST) -> Set[str]:
+    """Names bound anywhere inside ``fn``: params, assignments, nested
+    defs, imports, comprehension/loop targets, with/except aliases."""
+    bound: Set[str] = set()
+    args = fn.args
+    for a in (args.posonlyargs + args.args + args.kwonlyargs
+              + ([args.vararg] if args.vararg else [])
+              + ([args.kwarg] if args.kwarg else [])):
+        bound.add(a.arg)
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Store):
+            bound.add(node.id)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                               ast.ClassDef)):
+            if node is not fn:
+                bound.add(node.name)
+        elif isinstance(node, (ast.Import, ast.ImportFrom)):
+            for alias in node.names:
+                bound.add((alias.asname or alias.name).split(".")[0])
+        elif isinstance(node, ast.ExceptHandler) and node.name:
+            bound.add(node.name)
+        elif isinstance(node, (ast.Lambda,)) and node is not fn:
+            pass  # lambda params bind only inside the lambda
+        elif isinstance(node, ast.arg) and node is not None:
+            bound.add(node.arg)
+    return bound
+
+
+def _loaded_names(fn: ast.AST) -> Set[str]:
+    return {n.id for n in ast.walk(fn)
+            if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Load)}
+
+
+def _params(fn: ast.AST) -> List[str]:
+    args = fn.args
+    return [a.arg for a in args.posonlyargs + args.args]
+
+
+def _has_varargs(fn: ast.AST) -> bool:
+    return fn.args.vararg is not None
+
+
+# --------------------------------------------------------------------- #
+@rule("DL001", "error",
+      "device array captured by closure in a traced function")
+def check_closure_capture(tree, src, path) -> Iterator[Finding]:
+    """Inside a function passed to jit/shard_map/pallas_call, a free
+    variable bound in an *enclosing function* to a ``jnp.*`` constructor or
+    ``jax.device_put`` result is a device array smuggled in by closure: it
+    bakes array identity into the compiled callable, so rebuilding the
+    closure (or mutating the binding) silently recompiles. Pass it as an
+    explicit runner input. Host ``np.*`` constants are static and exempt."""
+    device_ctors = ("jnp.", "jax.numpy.")
+    for fn, entry, stack in _traced_defs(tree):
+        if not stack or not isinstance(fn, (ast.FunctionDef,
+                                            ast.AsyncFunctionDef,
+                                            ast.Lambda)):
+            continue
+        enclosing = [f for f in stack if f is not fn]
+        if not enclosing:
+            continue
+        free = _loaded_names(fn) - _bound_names(fn)
+        if not free:
+            continue
+        for outer in reversed(enclosing):          # innermost scope first
+            for node in ast.walk(outer):
+                targets: List[ast.Name] = []
+                value = None
+                if isinstance(node, ast.Assign):
+                    value = node.value
+                    for t in node.targets:
+                        if isinstance(t, ast.Name):
+                            targets.append(t)
+                elif isinstance(node, ast.AnnAssign) and node.value and \
+                        isinstance(node.target, ast.Name):
+                    value, targets = node.value, [node.target]
+                if value is None or not isinstance(value, ast.Call):
+                    continue
+                q = _qualname(value.func) or ""
+                is_device = (q == "jax.device_put"
+                             or any(q.startswith(p) for p in device_ctors))
+                if not is_device:
+                    continue
+                for t in targets:
+                    if t.id in free:
+                        name = getattr(fn, "name", "<lambda>")
+                        yield Finding(
+                            rule="", path=path, line=fn.lineno,
+                            col=fn.col_offset,
+                            message=(f"`{name}` (passed to {entry}) captures"
+                                     f" device array `{t.id}` by closure "
+                                     f"(bound at line {node.lineno}); make "
+                                     f"it an explicit argument"))
+                        free.discard(t.id)
+
+
+# --------------------------------------------------------------------- #
+#: dataclasses whose instances flow into RunnerCache keys
+_KEY_DATACLASS_NAMES = {"EngineConfig", "ShapePolicy", "SemiringSweep",
+                        "VertexProgram"}
+_MUTABLE_ANNOS = {"list", "List", "dict", "Dict", "set", "Set",
+                  "bytearray", "ndarray", "Array"}
+_MUTABLE_CTORS = {"list", "dict", "set", "bytearray"}
+
+
+def _dataclass_deco(cls: ast.ClassDef) -> Optional[ast.AST]:
+    for dec in cls.decorator_list:
+        target = dec.func if isinstance(dec, ast.Call) else dec
+        q = _qualname(target) or ""
+        if q.split(".")[-1] == "dataclass":
+            return dec
+    return None
+
+
+def _is_frozen(dec: ast.AST) -> bool:
+    if isinstance(dec, ast.Call):
+        for kw in dec.keywords:
+            if kw.arg == "frozen" and isinstance(kw.value, ast.Constant):
+                return bool(kw.value.value)
+    return False
+
+
+def _anno_head(anno: ast.AST) -> Optional[str]:
+    if isinstance(anno, ast.Subscript):
+        anno = anno.value
+    q = _qualname(anno)
+    return q.split(".")[-1] if q else None
+
+
+@rule("DL002", "error",
+      "mutable/unhashable field on a cache-key dataclass")
+def check_cache_key_fields(tree, src, path) -> Iterator[Finding]:
+    """Frozen dataclasses, the named key dataclasses (``EngineConfig``,
+    ``ShapePolicy``, ``SemiringSweep``, ``VertexProgram``), and
+    ``VertexProgram`` subclasses all flow into ``program_key`` /
+    ``RunnerCache`` keys and must stay hashable: no list/dict/set/ndarray
+    annotations, no mutable defaults or default_factories. ``ClassVar``
+    and ``Sequence``/``tuple`` annotations are fine."""
+    for cls in ast.walk(tree):
+        if not isinstance(cls, ast.ClassDef):
+            continue
+        dec = _dataclass_deco(cls)
+        if dec is None:
+            continue
+        base_names = {_qualname(b) or "" for b in cls.bases}
+        base_tails = {b.split(".")[-1] for b in base_names}
+        is_key = (_is_frozen(dec)
+                  or cls.name in _KEY_DATACLASS_NAMES
+                  or bool(base_tails & _KEY_DATACLASS_NAMES))
+        if not is_key:
+            continue
+        for stmt in cls.body:
+            if not isinstance(stmt, ast.AnnAssign) or \
+                    not isinstance(stmt.target, ast.Name):
+                continue
+            head = _anno_head(stmt.annotation)
+            if head == "ClassVar":
+                continue
+            fname = stmt.target.id
+            if head in _MUTABLE_ANNOS:
+                yield Finding(
+                    rule="", path=path, line=stmt.lineno,
+                    col=stmt.col_offset,
+                    message=(f"cache-key dataclass `{cls.name}` field "
+                             f"`{fname}` has unhashable annotation "
+                             f"`{head}`; use a tuple/frozen type"))
+                continue
+            default = stmt.value
+            if default is None:
+                continue
+            bad = None
+            if isinstance(default, (ast.List, ast.Dict, ast.Set)):
+                bad = type(default).__name__.lower() + " literal"
+            elif isinstance(default, ast.Call):
+                q = _qualname(default.func) or ""
+                tail = q.split(".")[-1]
+                if tail in _MUTABLE_CTORS:
+                    bad = f"{tail}() call"
+                elif tail == "field":
+                    for kw in default.keywords:
+                        if kw.arg != "default_factory":
+                            continue
+                        fq = (_qualname(kw.value) or "").split(".")[-1]
+                        if fq in _MUTABLE_CTORS or \
+                                isinstance(kw.value, ast.Lambda):
+                            bad = f"default_factory={fq or 'lambda'}"
+            if bad:
+                yield Finding(
+                    rule="", path=path, line=stmt.lineno,
+                    col=stmt.col_offset,
+                    message=(f"cache-key dataclass `{cls.name}` field "
+                             f"`{fname}` has mutable default ({bad}); "
+                             f"cache keys must be hashable and immutable"))
+
+
+# --------------------------------------------------------------------- #
+def _literal_tuple_len(node: ast.AST) -> Optional[int]:
+    if isinstance(node, (ast.Tuple, ast.List)):
+        if any(isinstance(e, ast.Starred) for e in node.elts):
+            return None
+        return len(node.elts)
+    return None
+
+
+def _module_defs(tree: ast.AST) -> Dict[str, ast.AST]:
+    """name -> def node for every function def anywhere in the module."""
+    return {n.name: n for n in ast.walk(tree)
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+
+
+@rule("DL003", "error",
+      "shard_map specs arity does not match the wrapped signature")
+def check_shard_map_arity(tree, src, path) -> Iterator[Finding]:
+    """When ``in_specs`` is a literal tuple and the wrapped function's
+    signature is statically known (no ``*args``), the lengths must match;
+    same for a literal-tuple ``out_specs`` against a function whose every
+    ``return`` is a literal tuple. jax only reports the mismatch at trace
+    time, deep inside the engine."""
+    defs = _module_defs(tree)
+
+    def specs_of(call: ast.Call) -> Dict[str, ast.AST]:
+        return {kw.arg: kw.value for kw in call.keywords
+                if kw.arg in ("in_specs", "out_specs")}
+
+    def check(call: ast.Call, fn: ast.AST) -> Iterator[Finding]:
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef,
+                               ast.Lambda)):
+            return
+        specs = specs_of(call)
+        in_specs = specs.get("in_specs")
+        if in_specs is not None and not _has_varargs(fn):
+            n_spec = _literal_tuple_len(in_specs)
+            n_par = len(_params(fn))
+            if n_spec is not None and n_spec != n_par:
+                name = getattr(fn, "name", "<lambda>")
+                yield Finding(
+                    rule="", path=path, line=call.lineno,
+                    col=call.col_offset,
+                    message=(f"shard_map in_specs has {n_spec} entries but "
+                             f"`{name}` takes {n_par} positional "
+                             f"arguments"))
+        out_specs = specs.get("out_specs")
+        n_out = _literal_tuple_len(out_specs) if out_specs is not None \
+            else None
+        if n_out is not None and not isinstance(fn, ast.Lambda):
+            ret_lens = set()
+            for node in ast.walk(fn):
+                if isinstance(node, ast.Return) and node.value is not None:
+                    n = _literal_tuple_len(node.value)
+                    if n is not None:
+                        ret_lens.add(n)
+            if len(ret_lens) == 1:
+                (n_ret,) = ret_lens
+                if n_ret != n_out:
+                    yield Finding(
+                        rule="", path=path, line=call.lineno,
+                        col=call.col_offset,
+                        message=(f"shard_map out_specs has {n_out} entries "
+                                 f"but `{fn.name}` returns {n_ret}-tuples"))
+
+    for node in ast.walk(tree):
+        # decorator form: @partial(shard_map, in_specs=..., out_specs=...)
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                if not isinstance(dec, ast.Call):
+                    continue
+                entry = _is_trace_entry(dec.func)
+                pe = _partial_entry(dec)
+                if entry == "shard_map" or (pe and pe[0] == "shard_map"):
+                    yield from check(dec, node)
+        # call form: shard_map(f, mesh=..., in_specs=..., out_specs=...)
+        elif isinstance(node, ast.Call) and \
+                _is_trace_entry(node.func) == "shard_map" and node.args:
+            target = node.args[0]
+            fn = target if isinstance(target, ast.Lambda) else \
+                defs.get(target.id) if isinstance(target, ast.Name) else None
+            if fn is not None:
+                yield from check(node, fn)
+
+
+# --------------------------------------------------------------------- #
+def _jnp_value_call(node: ast.Call) -> bool:
+    """A call that yields a traced value inside traced code."""
+    q = _qualname(node.func) or ""
+    parts = q.split(".")
+    if not parts:
+        return False
+    root, tail = parts[0], parts[-1]
+    if tail in _STATIC_JAX_CALLS:
+        return False
+    return root in ("jnp", "lax") or q.startswith("jax.")
+
+
+def _dynamic_refs(expr: ast.AST, traced: Set[str]) -> List[ast.AST]:
+    """Sub-expressions of a branch test that read a traced *value* (as
+    opposed to static metadata like ``.shape``/``len()``/``is None``)."""
+    if isinstance(expr, ast.Name):
+        return [expr] if expr.id in traced else []
+    if isinstance(expr, ast.Attribute):
+        if expr.attr in _STATIC_ATTRS:
+            return []
+        return _dynamic_refs(expr.value, traced)
+    if isinstance(expr, ast.Call):
+        q = _qualname(expr.func) or ""
+        tail = q.split(".")[-1]
+        if tail in _STATIC_CALLS or tail in _STATIC_JAX_CALLS:
+            return []
+        refs: List[ast.AST] = []
+        if _jnp_value_call(expr):
+            refs.append(expr)
+        for a in list(expr.args) + [kw.value for kw in expr.keywords]:
+            refs += _dynamic_refs(a, traced)
+        return refs
+    if isinstance(expr, ast.Compare):
+        if all(isinstance(op, (ast.Is, ast.IsNot)) for op in expr.ops):
+            return []
+        refs = _dynamic_refs(expr.left, traced)
+        for c in expr.comparators:
+            refs += _dynamic_refs(c, traced)
+        return refs
+    if isinstance(expr, ast.BoolOp):
+        return [r for v in expr.values for r in _dynamic_refs(v, traced)]
+    if isinstance(expr, ast.UnaryOp):
+        return _dynamic_refs(expr.operand, traced)
+    if isinstance(expr, ast.BinOp):
+        return (_dynamic_refs(expr.left, traced)
+                + _dynamic_refs(expr.right, traced))
+    if isinstance(expr, ast.Subscript):
+        return _dynamic_refs(expr.value, traced)
+    if isinstance(expr, ast.IfExp):
+        return (_dynamic_refs(expr.test, traced)
+                + _dynamic_refs(expr.body, traced)
+                + _dynamic_refs(expr.orelse, traced))
+    return []
+
+
+def _static_argnames(fn: ast.AST, tree: ast.AST) -> Set[str]:
+    """Parameter names a jit decorator marks static (literal lists only)."""
+    out: Set[str] = set()
+    for dec in getattr(fn, "decorator_list", []):
+        if not isinstance(dec, ast.Call):
+            continue
+        for kw in dec.keywords:
+            if kw.arg == "static_argnames":
+                vals = kw.value.elts if isinstance(
+                    kw.value, (ast.Tuple, ast.List)) else [kw.value]
+                for v in vals:
+                    if isinstance(v, ast.Constant) and \
+                            isinstance(v.value, str):
+                        out.add(v.value)
+            elif kw.arg == "static_argnums":
+                vals = kw.value.elts if isinstance(
+                    kw.value, (ast.Tuple, ast.List)) else [kw.value]
+                params = _params(fn)
+                for v in vals:
+                    if isinstance(v, ast.Constant) and \
+                            isinstance(v.value, int) and \
+                            v.value < len(params):
+                        out.add(params[v.value])
+    return out
+
+
+@rule("DL004", "error",
+      "Python branch on a traced value inside a traced function")
+def check_traced_branch(tree, src, path) -> Iterator[Finding]:
+    """Inside a function that jax traces, ``if``/``while`` on a traced
+    value either raises a concretization error or — with
+    shape-specializing escape hatches — silently retraces per value. Use
+    ``lax.cond``/``lax.while_loop``/``jnp.where``. Static reads
+    (``x.shape``, ``len(x)``, ``x is None``, ``isinstance``) are exempt,
+    as are parameters a ``jit`` marks static."""
+    for fn, entry, _stack in _traced_defs(tree):
+        if isinstance(fn, ast.Lambda):
+            continue                       # lambdas cannot contain if/while
+        traced: Set[str] = set(_params(fn)) - _static_argnames(fn, tree)
+        if entry == "jit":
+            traced.discard("self")
+        # one derivation pass: names assigned from jnp/lax calls
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign) and \
+                    isinstance(node.value, ast.Call) and \
+                    _jnp_value_call(node.value):
+                for t in node.targets:
+                    if isinstance(t, ast.Name):
+                        traced.add(t.id)
+        for node in ast.walk(fn):
+            if not isinstance(node, (ast.If, ast.While)):
+                continue
+            refs = _dynamic_refs(node.test, traced)
+            if not refs:
+                continue
+            what = _qualname(refs[0]) or \
+                _qualname(getattr(refs[0], "func", refs[0])) or "a value"
+            kind = "if" if isinstance(node, ast.If) else "while"
+            name = getattr(fn, "name", "<lambda>")
+            yield Finding(
+                rule="", path=path, line=node.lineno, col=node.col_offset,
+                message=(f"`{kind}` on traced value `{what}` inside "
+                         f"`{name}` (traced via {entry}); use lax.cond/"
+                         f"lax.while_loop/jnp.where"))
+
+
+# --------------------------------------------------------------------- #
+@rule("DL005", "error",
+      "Pallas kernel entry without dtype guard or identity padding")
+def check_kernel_contract(tree, src, path) -> Iterator[Finding]:
+    """A function invoking ``pallas_call`` is a kernel entry point. It must
+    (a) contain an explicit dtype guard — an ``assert``/``raise`` that
+    inspects ``.dtype``, or an ``.astype`` cast — because refs with mixed
+    dtypes make the kernel read garbage rather than fail; and (b) never pad
+    its operands with numeric literals: fills must come from
+    ``tile_pad_identity``/``combine_identity``/``semiring_identity`` so
+    min/max semirings keep their identity (a 0-fill corrupts min_plus)."""
+    entries: List[ast.AST] = []
+    for node in ast.walk(tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        calls_pallas = any(
+            isinstance(c, ast.Call)
+            and ((_qualname(c.func) or "").split(".")[-1] == "pallas_call")
+            for c in ast.walk(node))
+        if calls_pallas:
+            entries.append(node)
+
+    for fn in entries:
+        has_guard = False
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.Assert, ast.Raise, ast.If)):
+                if any(isinstance(sub, ast.Attribute) and
+                       sub.attr == "dtype" for sub in ast.walk(node)):
+                    has_guard = True
+                    break
+            if isinstance(node, ast.Call) and \
+                    isinstance(node.func, ast.Attribute) and \
+                    node.func.attr == "astype":
+                has_guard = True
+                break
+        if not has_guard:
+            yield Finding(
+                rule="", path=path, line=fn.lineno, col=fn.col_offset,
+                message=(f"kernel entry `{fn.name}` calls pallas_call "
+                         f"without an explicit dtype guard (assert/raise "
+                         f"on `.dtype`) or `.astype` cast"))
+
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            tail = (_qualname(node.func) or "").split(".")[-1]
+            fill = None
+            if tail == "pad":
+                for kw in node.keywords:
+                    if kw.arg == "constant_values":
+                        fill = kw.value
+            elif tail in ("full", "full_like") and len(node.args) >= 2:
+                fill = node.args[1]
+            if fill is None:
+                continue
+            lit = fill
+            if isinstance(lit, ast.UnaryOp):
+                lit = lit.operand
+            if isinstance(lit, ast.Constant) and \
+                    isinstance(lit.value, (int, float)):
+                yield Finding(
+                    rule="", path=path, line=node.lineno,
+                    col=node.col_offset,
+                    message=(f"kernel entry `{fn.name}` pads with numeric "
+                             f"literal {ast.unparse(fill)}; use "
+                             f"tile_pad_identity/combine_identity/"
+                             f"semiring_identity"))
+
+
+# --------------------------------------------------------------------- #
+_LOG_CALL_ATTRS = {"debug", "info", "warning", "warn", "error", "exception",
+                   "critical", "log", "set_exception"}
+
+
+def _handler_is_silent(handler: ast.ExceptHandler) -> bool:
+    """True when the handler neither re-raises, logs, nor uses the caught
+    exception — i.e. the error vanishes."""
+    bound = handler.name
+    for node in ast.walk(handler):
+        if isinstance(node, ast.Raise):
+            return False
+        if isinstance(node, ast.Call):
+            q = _qualname(node.func) or ""
+            parts = q.split(".")
+            if parts[-1] in _LOG_CALL_ATTRS:
+                return False
+            if parts[0] in ("warnings", "logging", "traceback"):
+                return False
+        if bound and isinstance(node, ast.Name) and node.id == bound and \
+                isinstance(node.ctx, ast.Load):
+            return False
+    return True
+
+
+@rule("DL006", "warning",
+      "broad except swallows the error silently")
+def check_silent_handler(tree, src, path) -> Iterator[Finding]:
+    """``except Exception``/bare ``except`` whose body neither re-raises,
+    logs, nor touches the bound exception hides real failures (the
+    ``runner_nbytes``/``get_abstract_mesh`` pattern this rule was written
+    for). Catch the narrow expected type and log at debug level;
+    ``# pragma: no cover`` paths are exempt."""
+    lines = src.splitlines()
+
+    def broad(tnode: Optional[ast.AST]) -> bool:
+        if tnode is None:
+            return True
+        names = [tnode] if not isinstance(tnode, ast.Tuple) else tnode.elts
+        for n in names:
+            q = (_qualname(n) or "").split(".")[-1]
+            if q in ("Exception", "BaseException"):
+                return True
+        return False
+
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Try):
+            continue
+        for handler in node.handlers:
+            if not broad(handler.type):
+                continue
+            hl = handler.lineno
+            nearby = lines[max(0, hl - 2):hl + 1]
+            if any("pragma: no cover" in ln for ln in nearby):
+                continue
+            if _handler_is_silent(handler):
+                what = "bare except" if handler.type is None else \
+                    "except Exception"
+                yield Finding(
+                    rule="", path=path, line=hl, col=handler.col_offset,
+                    message=(f"{what} swallows the error (no raise/log/use "
+                             f"of the exception); narrow the type and log "
+                             f"at debug level"))

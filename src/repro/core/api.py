@@ -24,7 +24,7 @@ no partition emits changes (voteToHalt + no pending messages).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, ClassVar, NamedTuple, Optional
+from typing import Any, ClassVar, NamedTuple, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -86,7 +86,7 @@ COMBINER_IDENTITY = {
 }
 
 
-def combiner_identity(combiner: str, dtype) -> np.generic:
+def combiner_identity(combiner: str, dtype: Any) -> np.generic:
     try:
         return COMBINER_IDENTITY[(combiner, jnp.dtype(dtype))]
     except KeyError:
@@ -128,10 +128,10 @@ class SemiringSweep:
     semiring: str                    # 'min_plus' | 'plus_times'
     edge_values: str = "weight"      # 'weight' | 'zero' | 'one'
 
-    _SEMIRINGS = ("min_plus", "plus_times")
-    _EDGE_VALUES = ("weight", "zero", "one")
+    _SEMIRINGS: ClassVar[Tuple[str, ...]] = ("min_plus", "plus_times")
+    _EDGE_VALUES: ClassVar[Tuple[str, ...]] = ("weight", "zero", "one")
 
-    def __post_init__(self):
+    def __post_init__(self) -> None:
         if self.semiring not in self._SEMIRINGS:
             raise ValueError(f"SemiringSweep.semiring={self.semiring!r}: "
                              f"allowed values are {self._SEMIRINGS}")
@@ -145,12 +145,13 @@ class SemiringSweep:
         """The reduce-by-destination combiner of the semiring's 'addition'."""
         return "min" if self.semiring == "min_plus" else "sum"
 
-    def identity(self, dtype) -> np.generic:
+    def identity(self, dtype: Any) -> np.generic:
         """Absorbing element absent edges contribute (inf / int-max / 0)."""
         return combiner_identity(self.combiner, dtype)
 
 
-def coo_semiring_product(sg: "DeviceSubgraph", spec: SemiringSweep, vals):
+def coo_semiring_product(sg: "DeviceSubgraph", spec: SemiringSweep,
+                         vals: jnp.ndarray) -> jnp.ndarray:
     """The reference edge-compute backend: one semiring product over the
     partition's COO edge list (dense gather + segment scatter). This is
     bit-for-bit the historical hand-rolled sweep body of SSSP/CC/PageRank;
@@ -214,12 +215,13 @@ class VertexProgram:
     value_key: Optional[str] = None
 
     # -------------------------------------------------------------- #
-    def init(self, sg: DeviceSubgraph, params, ec) -> Any:
+    def init(self, sg: DeviceSubgraph, params: Any, ec: Any) -> Any:
         """Build per-partition state. ``ec`` is the EdgeCombine context for
         merging any edge-derived reductions (see engine.EdgeCombine)."""
         raise NotImplementedError
 
-    def apply_frontier(self, sg: DeviceSubgraph, params, state, merged):
+    def apply_frontier(self, sg: DeviceSubgraph, params: Any, state: Any,
+                       merged: jnp.ndarray) -> Tuple[Any, jnp.ndarray]:
         """Consume merged [v_max, K] (identity at non-frontier rows).
         Returns (state, n_changed:int32)."""
         raise NotImplementedError
@@ -230,17 +232,20 @@ class VertexProgram:
     # change the traced computation belong in dataclass fields instead.
     sweep_spec: ClassVar[Optional[SemiringSweep]] = None
 
-    def sweep_values(self, sg: DeviceSubgraph, params, state):
+    def sweep_values(self, sg: DeviceSubgraph, params: Any,
+                     state: Any) -> jnp.ndarray:
         """Per-vertex values entering the semiring product ([v_max] or
         [v_max, K]); only consulted when ``sweep_spec`` is set."""
         raise NotImplementedError
 
-    def sweep_fold(self, sg: DeviceSubgraph, params, state, agg):
+    def sweep_fold(self, sg: DeviceSubgraph, params: Any, state: Any,
+                   agg: jnp.ndarray) -> Tuple[Any, jnp.ndarray]:
         """Fold the product's aggregate (same shape as ``sweep_values``)
         back into state. Returns (state, n_changed:int32)."""
         raise NotImplementedError
 
-    def sweep(self, sg: DeviceSubgraph, params, state, ec):
+    def sweep(self, sg: DeviceSubgraph, params: Any, state: Any,
+              ec: Any) -> Tuple[Any, jnp.ndarray]:
         """One local relaxation pass. Returns (state, n_changed:int32).
 
         Programs with a ``sweep_spec`` inherit this implementation — the
@@ -257,15 +262,18 @@ class VertexProgram:
         agg = ec.min(agg) if spec.semiring == "min_plus" else ec.sum(agg)
         return self.sweep_fold(sg, params, state, agg)
 
-    def frontier_out(self, sg: DeviceSubgraph, params, state) -> jnp.ndarray:
+    def frontier_out(self, sg: DeviceSubgraph, params: Any,
+                     state: Any) -> jnp.ndarray:
         """Per-vertex SBS contribution [v_max, K]."""
         raise NotImplementedError
 
-    def result(self, sg: DeviceSubgraph, params, state) -> jnp.ndarray:
+    def result(self, sg: DeviceSubgraph, params: Any,
+               state: Any) -> jnp.ndarray:
         """Per-vertex output [v_max, ...] for collection from masters."""
         raise NotImplementedError
 
-    def warm_init(self, sg: DeviceSubgraph, params, state, warm: jnp.ndarray):
+    def warm_init(self, sg: DeviceSubgraph, params: Any, state: Any,
+                  warm: jnp.ndarray) -> Any:
         """Fold a previous converged result into a fresh ``init`` state
         (incremental recompute, stream/delta.py). ``warm`` is [v_max, K] in
         this partition's local layout, combiner-identity at padded rows, cast
@@ -288,7 +296,7 @@ class VertexProgram:
 
     # -------------------------------------------------------------- #
     @property
-    def identity(self):
+    def identity(self) -> np.generic:
         return combiner_identity(self.combiner, self.dtype)
 
     def changed_mask(self, out: jnp.ndarray, last_out: jnp.ndarray) -> jnp.ndarray:

@@ -36,6 +36,7 @@ always has).
 from __future__ import annotations
 
 import dataclasses
+import logging
 import threading
 import time
 from collections import OrderedDict
@@ -46,6 +47,8 @@ from repro.serving.runner_cache import (canonical_params, params_struct_key,
                                         program_key)
 
 __all__ = ["MicroBatcher", "BatchPolicy", "BatcherStats"]
+
+log = logging.getLogger(__name__)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -214,9 +217,13 @@ class MicroBatcher:
             self.stats.batched_requests += len(reqs)
             self.stats.largest_batch = max(self.stats.largest_batch,
                                            len(reqs))
-        except Exception:
-            # the graceful degradation path: replay each lane alone; a lane
-            # that still fails gets the real error on its own future
+        except Exception as batch_err:
+            # the graceful degradation path (deliberately broad: any batch
+            # failure must not take down unrelated lanes): replay each lane
+            # alone; a lane that still fails gets the real error on its own
+            # future, so nothing is swallowed — only deferred per-lane
+            log.debug("batch launch failed (%r); replaying %d lane(s) "
+                      "individually", batch_err, len(reqs))
             for r in reqs:
                 try:
                     res, st = sess.query(r.program, r.params, warm=r.warm,

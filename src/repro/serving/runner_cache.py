@@ -37,8 +37,9 @@ pinned in tests/test_serving.py).
 from __future__ import annotations
 
 import dataclasses
+import logging
 from collections import OrderedDict
-from typing import Any, Callable, Optional
+from typing import Any, Callable, Dict, Hashable, List, Optional, Set, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -47,6 +48,8 @@ import numpy as np
 __all__ = ["RunnerCache", "RunnerEntry", "OwnerStats", "program_key",
            "canonical_params", "params_struct_key", "params_fingerprint",
            "runner_nbytes"]
+
+log = logging.getLogger(__name__)
 
 
 # --------------------------------------------------------------------------- #
@@ -67,7 +70,7 @@ def program_key(program):
         return (type(program), id(program))
 
 
-def _canonical_scalar(x: np.ndarray):
+def _canonical_scalar(x: np.ndarray) -> jnp.ndarray:
     """0-d leaf -> jax default scalar dtype. Python ints, numpy scalars of
     any width and 0-d arrays of one logical value must all produce the SAME
     aval, or the struct key (and the runner cache) fragments on caller
@@ -85,7 +88,7 @@ def _canonical_scalar(x: np.ndarray):
     return jnp.asarray(x)
 
 
-def canonical_params(params):
+def canonical_params(params: Any) -> Any:
     """Params pytree with every leaf a jnp array of a fixed dtype, so the
     runner's input avals (and therefore the cache key) are stable across
     caller-side representation drift. Scalar-ish leaves (Python numbers,
@@ -105,14 +108,14 @@ def canonical_params(params):
     return jax.tree.map(canon, params)
 
 
-def params_struct_key(params):
+def params_struct_key(params: Any) -> Tuple[Any, ...]:
     """Structure-only key (treedef + leaf shape/dtype): runners take params
     as *traced* inputs, so different values share one executable."""
     leaves, treedef = jax.tree.flatten(params)
     return (treedef, tuple((tuple(l.shape), str(l.dtype)) for l in leaves))
 
 
-def params_fingerprint(params):
+def params_fingerprint(params: Any) -> Tuple[Any, ...]:
     """Value-level key — warm results and converged-result cache entries are
     only reusable for the *same* query (SSSP distances from source 0 say
     nothing about source 7)."""
@@ -121,7 +124,7 @@ def params_fingerprint(params):
                             np.asarray(l).tobytes()) for l in leaves))
 
 
-def runner_nbytes(compiled) -> int:
+def runner_nbytes(compiled: Any) -> int:
     """Estimated device bytes a cached executable keeps alive: outputs +
     temps + generated code from XLA's ``memory_analysis``. Inputs are the
     session-owned resident graph, shared across runners, so they are
@@ -132,7 +135,10 @@ def runner_nbytes(compiled) -> int:
         m = compiled.memory_analysis()
         return int(m.output_size_in_bytes + m.temp_size_in_bytes
                    + m.generated_code_size_in_bytes)
-    except Exception:
+    except (AttributeError, NotImplementedError, RuntimeError) as e:
+        # memory_analysis is backend-dependent (XlaRuntimeError is a
+        # RuntimeError); absence must weigh 0, but should still be visible
+        log.debug("memory_analysis unavailable for %r: %r", compiled, e)
         return 0
 
 
@@ -154,7 +160,7 @@ class RunnerEntry:
     hits: int = 0
     nbytes: int = 0                # estimated device bytes this executable
                                    # pins (outputs + temps + generated code)
-    owners: set = dataclasses.field(default_factory=set)
+    owners: Set[Hashable] = dataclasses.field(default_factory=set)
 
 
 @dataclasses.dataclass
@@ -178,18 +184,18 @@ class RunnerCache:
                  max_bytes: Optional[int] = None):
         self.max_entries = max_entries
         self.max_bytes = max_bytes
-        self._entries: OrderedDict = OrderedDict()   # key -> RunnerEntry
-        self.hits = 0
-        self.misses = 0
-        self.evictions = 0
-        self.compile_time_total = 0.0
-        self.by_owner: dict = {}                     # owner -> OwnerStats
+        self._entries: "OrderedDict[Hashable, RunnerEntry]" = OrderedDict()
+        self.hits: int = 0
+        self.misses: int = 0
+        self.evictions: int = 0
+        self.compile_time_total: float = 0.0
+        self.by_owner: Dict[Hashable, OwnerStats] = {}
 
     # ------------------------------------------------------------------ #
     def __len__(self) -> int:
         return len(self._entries)
 
-    def __contains__(self, key) -> bool:
+    def __contains__(self, key: Hashable) -> bool:
         return key in self._entries
 
     def keys(self):
@@ -205,14 +211,15 @@ class RunnerCache:
     def total_bytes(self) -> int:
         return sum(e.nbytes for e in self._entries.values())
 
-    def _owner_stats(self, owner) -> OwnerStats:
+    def _owner_stats(self, owner: Hashable) -> OwnerStats:
         st = self.by_owner.get(owner)
         if st is None:
             st = self.by_owner[owner] = OwnerStats()
         return st
 
     # ------------------------------------------------------------------ #
-    def lookup(self, key, owner) -> Optional[RunnerEntry]:
+    def lookup(self, key: Hashable,
+               owner: Hashable) -> Optional[RunnerEntry]:
         """Fetch + LRU-refresh. A hit pins ``owner`` onto the entry (this is
         how a tenant B query comes to share a runner tenant A compiled)."""
         e = self._entries.get(key)
@@ -227,7 +234,8 @@ class RunnerCache:
         self._owner_stats(owner).hits += 1
         return e
 
-    def insert(self, key, entry: RunnerEntry, owner) -> int:
+    def insert(self, key: Hashable, entry: RunnerEntry,
+               owner: Hashable) -> int:
         """Admit a freshly compiled runner pinned by ``owner``; returns how
         many entries the bounds evicted to make room."""
         entry.owners.add(owner)
@@ -239,13 +247,13 @@ class RunnerCache:
         return self._evict()
 
     # ------------------------------------------------------------------ #
-    def _victim_key(self):
+    def _victim_key(self) -> Hashable:
         """Fair victim choice: the LRU entry among the most-loaded owner's
         entries. Load = number of live entries an owner pins; entries pinned
         by several owners charge each of them. With one owner (a private
         session cache) every entry is the max-loaded owner's, so this is
         plain LRU."""
-        load: dict = {}
+        load: Dict[Hashable, int] = {}
         for e in self._entries.values():
             for o in e.owners:
                 load[o] = load.get(o, 0) + 1
@@ -258,7 +266,7 @@ class RunnerCache:
                 return k
         return next(iter(self._entries))
 
-    def _pop(self, key) -> RunnerEntry:
+    def _pop(self, key: Hashable) -> RunnerEntry:
         e = self._entries.pop(key)
         self.evictions += 1
         for o in e.owners:
@@ -280,12 +288,12 @@ class RunnerCache:
         return evicted
 
     # ------------------------------------------------------------------ #
-    def release(self, owner) -> int:
+    def release(self, owner: Hashable) -> int:
         """Drop every pin ``owner`` holds (``GraphSession.close``). Entries
         left with no owner are removed — nothing can account for them
         anymore; entries other tenants still pin survive for those tenants.
         Returns the number of entries dropped."""
-        dead = []
+        dead: List[Hashable] = []
         for k, e in self._entries.items():
             e.owners.discard(owner)
             if not e.owners:
@@ -294,7 +302,7 @@ class RunnerCache:
             del self._entries[k]
         return len(dead)
 
-    def release_stale(self, owner,
+    def release_stale(self, owner: Hashable,
                       stale: Callable[[RunnerEntry], bool]) -> int:
         """Unpin ``owner`` from entries whose shapes it outgrew (bucket
         growth/shrink). The entry itself survives while any other tenant at
@@ -302,7 +310,7 @@ class RunnerCache:
         bucket must never invalidate its neighbors' runners. Returns how
         many entries this owner released (dropped or not): the session
         bills them as its shape evictions."""
-        released, dead = 0, []
+        released, dead = 0, []  # type: int, List[Hashable]
         for k, e in self._entries.items():
             if owner in e.owners and stale(e):
                 e.owners.discard(owner)
@@ -314,7 +322,7 @@ class RunnerCache:
         return released
 
     # ------------------------------------------------------------------ #
-    def info(self) -> list:
+    def info(self) -> List[dict]:
         """LRU-ordered snapshot (oldest — next to be evicted — first), one
         dict per entry; ``owners`` is the sorted pin set."""
         return [dict(program=e.program, shape_key=e.shape_key, hits=e.hits,

@@ -237,6 +237,13 @@ class GraphSession:
     caches' keys and pin accounting. ``close()`` (or the context-manager
     protocol) drops the resident device pytree and releases every shared-
     cache pin; a closed session raises ``RuntimeError`` on use.
+
+    ``debug_sanitize=True`` arms the runtime retrace sanitizer
+    (``repro.analysis.sanitizer``): every cache-hit launch runs under a
+    ``retrace_guard``, so an AOT-compiled runner that silently re-enters
+    the jax tracer raises ``RetraceError`` at the query that did it instead
+    of degrading latency forever. ``debug_sanitize="warn"`` downgrades the
+    failure to a ``RetraceWarning`` for production canaries.
     """
 
     def __init__(self, pg: PartitionedGraph, *, ctx: Optional[StreamContext]
@@ -251,7 +258,8 @@ class GraphSession:
                  max_warm_bytes: Optional[int] = None,
                  runner_cache: Optional[RunnerCache] = None,
                  result_cache: Optional[ResultCache] = None,
-                 tenant: Optional[str] = None):
+                 tenant: Optional[str] = None,
+                 debug_sanitize=False):
         self.pg = pg
         self.ctx = ctx
         self.mesh = mesh
@@ -264,6 +272,7 @@ class GraphSession:
         self._runner_cache = runner_cache if runner_cache is not None \
             else RunnerCache(max_runners, max_runner_bytes)
         self.result_cache = result_cache
+        self.debug_sanitize = debug_sanitize
         self._closed = False
         self.stats = SessionStats()
         self.buffer = None if ctx is None else _SessionBuffer(
@@ -552,7 +561,7 @@ class GraphSession:
         compiled, compile_time, evicted = self._get_runner(
             program, pkey, params_c, cfg, warm_in, args, eb)
         t0 = time.perf_counter()
-        out = compiled(*args)
+        out = self._launch(compiled, args, compile_time)
         self.stats.device_launches += 1
         res, steps, tot_msgs, sweeps = jax.block_until_ready(out)
         wall = time.perf_counter() - t0
@@ -700,7 +709,7 @@ class GraphSession:
         compiled, compile_time, evicted = self._get_runner(
             program, pkey, batched_params, cfg, warm_in, args, eb, batch=Bp)
         t0 = time.perf_counter()
-        out = compiled(*args)
+        out = self._launch(compiled, args, compile_time)
         self.stats.device_launches += 1
         res_b, steps_b, msgs_b, sweeps_b = jax.block_until_ready(out)
         wall = time.perf_counter() - t0
@@ -805,6 +814,22 @@ class GraphSession:
         if blk is not None and blk.shape == (pg.n_parts, pg.v_max, K):
             return jnp.asarray(blk)
         return jnp.asarray(_warm_block(program, pg, entry.global_values))
+
+    def _launch(self, compiled, args, compile_time):
+        """Execute an AOT runner. With ``debug_sanitize`` armed, a *cache
+        hit* (``compile_time == 0``) runs under ``retrace_guard``: the
+        executable was traced long ago, so any tracer activity during the
+        launch is a retrace bug and raises ``RetraceError`` (or warns for
+        ``debug_sanitize="warn"``). Fresh compiles are exempt — their trace
+        already happened, legitimately, inside ``_get_runner``."""
+        if not self.debug_sanitize or compile_time > 0.0:
+            return compiled(*args)
+        from repro.analysis.sanitizer import retrace_guard
+        action = "warn" if self.debug_sanitize == "warn" else "raise"
+        with retrace_guard(action=action,
+                           label=f"GraphSession[{self.tenant}] cache-hit "
+                                 f"launch"):
+            return compiled(*args)
 
     def _get_runner(self, program, pkey, params_c, cfg, warm_in, args, eb,
                     batch=0):

@@ -15,8 +15,12 @@ partial-KV attention; XLA inserts the softmax partial reductions).
 """
 from __future__ import annotations
 
+import logging
+
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+log = logging.getLogger(__name__)
 
 
 def get_abstract_mesh():
@@ -33,7 +37,10 @@ def get_abstract_mesh():
     try:
         from jax._src import mesh as _mesh_lib
         return _mesh_lib.thread_resources.env.physical_mesh
-    except Exception:
+    except (ImportError, AttributeError) as e:
+        # private-module layout moved on this jax version: behave as if no
+        # ambient mesh is active, but leave a trace for debugging
+        log.debug("ambient mesh lookup unavailable: %r", e)
         return None
 
 LOGICAL_RULES = {

@@ -1,0 +1,444 @@
+"""drone-lint (repro.analysis) tests: per-rule fixtures (true positive,
+suppressed, clean), the suppression/baseline workflow, the src/repro
+self-check (zero unbaselined findings), and the runtime retrace sanitizer —
+including the deliberate mutated-closure retrace the static rules exist to
+prevent, on both engine backends."""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.algos import SSSP
+from repro.analysis import (analyze_paths, analyze_source, baseline_delta,
+                            load_baseline, write_baseline, RULES)
+from repro.analysis.sanitizer import (RetraceError, RetraceWarning,
+                                      retrace_guard)
+from repro.graphgen import powerlaw_graph
+from repro.session import GraphSession
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# --------------------------------------------------------------------------- #
+# rule fixtures: (true positive, suppressed variant, clean variant)
+# --------------------------------------------------------------------------- #
+FIXTURES = {
+    "DL001": dict(
+        tp="""
+import jax, jax.numpy as jnp
+def build():
+    blk = jnp.zeros((4, 4))
+    def go(x):
+        return x + blk
+    return jax.jit(go)
+""",
+        suppressed="""
+import jax, jax.numpy as jnp
+def build():
+    blk = jnp.zeros((4, 4))
+    def go(x):  # drone-lint: disable=DL001
+        return x + blk
+    return jax.jit(go)
+""",
+        clean="""
+import jax, jax.numpy as jnp
+def build():
+    blk = jnp.zeros((4, 4))
+    def go(x, blk):
+        return x + blk
+    return jax.jit(go), blk
+""",
+    ),
+    "DL002": dict(
+        tp="""
+import dataclasses
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    tags: list = dataclasses.field(default_factory=list)
+""",
+        suppressed="""
+import dataclasses
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    tags: list = dataclasses.field(default_factory=list)  # drone-lint: disable=DL002
+""",
+        clean="""
+import dataclasses
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    tags: tuple = ()
+""",
+    ),
+    "DL003": dict(
+        tp="""
+from jax.experimental.shard_map import shard_map
+def f(x, y):
+    return x + y
+g = shard_map(f, mesh=None, in_specs=(None, None, None), out_specs=None)
+""",
+        suppressed="""
+from jax.experimental.shard_map import shard_map
+def f(x, y):
+    return x + y
+g = shard_map(f, mesh=None, in_specs=(None, None, None), out_specs=None)  # drone-lint: disable=DL003
+""",
+        clean="""
+from jax.experimental.shard_map import shard_map
+def f(x, y):
+    return x + y
+g = shard_map(f, mesh=None, in_specs=(None, None), out_specs=None)
+""",
+    ),
+    "DL004": dict(
+        tp="""
+import jax, jax.numpy as jnp
+@jax.jit
+def step(x):
+    if x > 0:
+        return x
+    return -x
+""",
+        suppressed="""
+import jax, jax.numpy as jnp
+@jax.jit
+def step(x):
+    if x > 0:  # drone-lint: disable=DL004
+        return x
+    return -x
+""",
+        clean="""
+from functools import partial
+import jax, jax.numpy as jnp
+@partial(jax.jit, static_argnames=("mode",))
+def step(x, mode="sc"):
+    if mode == "sc":                      # static python knob: fine
+        return jnp.where(x > 0, x, -x)    # traced select: fine
+    if x.ndim == 1:                       # static metadata: fine
+        return -x
+    return x
+""",
+    ),
+    "DL005": dict(
+        tp="""
+from jax.experimental import pallas as pl
+import jax.numpy as jnp
+def kernel_entry(vals):
+    v = jnp.pad(vals, ((0, 8), (0, 0)), constant_values=0.0)
+    return pl.pallas_call(lambda r, o: None)(v)
+""",
+        suppressed="""
+from jax.experimental import pallas as pl
+import jax.numpy as jnp
+# drone-lint: disable=DL005
+def kernel_entry(vals):
+    # drone-lint: disable=DL005
+    v = jnp.pad(vals, ((0, 8), (0, 0)), constant_values=0.0)
+    return pl.pallas_call(lambda r, o: None)(v)
+""",
+        clean="""
+from jax.experimental import pallas as pl
+import jax.numpy as jnp
+from repro.kernels.ref import tile_pad_identity
+def kernel_entry(vals, semiring):
+    assert vals.dtype == jnp.float32
+    ident = tile_pad_identity(semiring, vals.dtype)
+    v = jnp.pad(vals, ((0, 8), (0, 0)), constant_values=ident)
+    return pl.pallas_call(lambda r, o: None)(v)
+""",
+    ),
+    "DL006": dict(
+        tp="""
+def f():
+    try:
+        risky()
+    except Exception:
+        pass
+""",
+        suppressed="""
+def f():
+    try:
+        risky()
+    except Exception:  # drone-lint: disable=DL006
+        pass
+""",
+        clean="""
+import logging
+log = logging.getLogger(__name__)
+def f():
+    try:
+        risky()
+    except (ValueError, KeyError) as e:
+        log.debug("risky failed: %r", e)
+""",
+    ),
+}
+
+
+@pytest.mark.parametrize("code", sorted(FIXTURES))
+def test_rule_true_positive(code):
+    findings = analyze_source(FIXTURES[code]["tp"], "fixture.py")
+    assert code in {f.rule for f in findings}, \
+        f"{code} must fire on its true-positive fixture"
+
+
+@pytest.mark.parametrize("code", sorted(FIXTURES))
+def test_rule_suppressed(code):
+    findings = analyze_source(FIXTURES[code]["suppressed"], "fixture.py")
+    assert code not in {f.rule for f in findings}, \
+        f"inline disable comment must silence {code}"
+
+
+@pytest.mark.parametrize("code", sorted(FIXTURES))
+def test_rule_clean(code):
+    findings = analyze_source(FIXTURES[code]["clean"], "fixture.py")
+    got = [f for f in findings if f.rule == code]
+    assert not got, f"{code} false-positived on the clean fixture: {got}"
+
+
+def test_rule_registry_complete():
+    assert set(FIXTURES) <= set(RULES)
+    assert all(RULES[c].severity in ("error", "warning") for c in RULES)
+
+
+def test_finding_render_and_severity():
+    [f] = [x for x in analyze_source(FIXTURES["DL006"]["tp"], "mod.py")
+           if x.rule == "DL006"]
+    assert f.severity == "warning"
+    assert "mod.py:" in f.render() and "DL006" in f.render()
+
+
+# --------------------------------------------------------------------------- #
+# baseline workflow
+# --------------------------------------------------------------------------- #
+def test_baseline_roundtrip_and_delta(tmp_path):
+    findings = analyze_source(FIXTURES["DL006"]["tp"], "mod.py")
+    bl = tmp_path / "baseline.json"
+    write_baseline(str(bl), findings)
+    baseline = load_baseline(str(bl))
+    assert baseline_delta(findings, baseline) == []
+    # the same finding at a shifted line number is still baselined ...
+    shifted = analyze_source("\n\n\n" + FIXTURES["DL006"]["tp"], "mod.py")
+    assert baseline_delta(shifted, baseline) == []
+    # ... but a second occurrence exceeds the multiset budget
+    doubled = findings + findings
+    assert len(baseline_delta(doubled, baseline)) == len(findings)
+
+
+def test_baseline_missing_file_is_empty():
+    assert load_baseline("/nonexistent/baseline.json") == {}
+
+
+def test_checked_in_baseline_is_valid_json():
+    with open(os.path.join(ROOT, "tools", "drone_lint_baseline.json")) as fh:
+        data = json.load(fh)
+    assert data["version"] == 1
+    assert isinstance(data["findings"], list)
+
+
+# --------------------------------------------------------------------------- #
+# self-check: the repo's own source has zero unbaselined findings
+# --------------------------------------------------------------------------- #
+def test_src_repro_has_zero_unbaselined_findings():
+    findings = analyze_paths([os.path.join(ROOT, "src", "repro")],
+                             relative_to=ROOT)
+    baseline = load_baseline(
+        os.path.join(ROOT, "tools", "drone_lint_baseline.json"))
+    new = baseline_delta(findings, baseline)
+    assert not new, "unbaselined drone-lint findings:\n" + "\n".join(
+        f.render() for f in new)
+
+
+def test_kernels_are_strict_clean():
+    """The kernel tree must hold the DL005 contract with no baseline help
+    (the CI kernels-parity job runs this same check via the CLI)."""
+    findings = analyze_paths([os.path.join(ROOT, "src", "repro", "kernels")],
+                             select=["DL005"], relative_to=ROOT)
+    assert not findings, "\n".join(f.render() for f in findings)
+
+
+def test_cli_gate_and_list_rules():
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    out = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "tools", "drone_lint.py"),
+         "src/repro"], capture_output=True, text=True, env=env, cwd=ROOT)
+    assert out.returncode == 0, out.stdout + out.stderr
+    out = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "tools", "drone_lint.py"),
+         "--list-rules"], capture_output=True, text=True, env=env, cwd=ROOT)
+    assert out.returncode == 0 and "DL001" in out.stdout
+
+
+# --------------------------------------------------------------------------- #
+# runtime sanitizer: retrace_guard
+# --------------------------------------------------------------------------- #
+def test_retrace_guard_clean_region_passes():
+    f = jax.jit(lambda x: x + 1)
+    x = jnp.zeros((8,))
+    f(x)                                   # compile outside the guard
+    with retrace_guard() as g:
+        f(x)
+    assert g.traces == 0 and not g.triggered
+
+
+def test_retrace_guard_catches_mutated_closure():
+    """The DL001 failure mode at runtime: state captured by closure is
+    mutated, the closure is rebuilt, and the 'cached' computation silently
+    recompiles. The guard turns that silence into an error."""
+    captured = {"blk": jnp.zeros((8,))}
+
+    def build():
+        blk = captured["blk"]              # closure capture (DL001!)
+        return jax.jit(lambda x: x + blk)
+
+    x = jnp.ones((8,))
+    f = build()
+    f(x)                                   # legitimate cold compile
+    with retrace_guard():
+        f(x)                               # cached: fine
+    captured["blk"] = jnp.full((8,), 7.0)  # mutate the captured state ...
+    f2 = build()                           # ... which forces a rebuild
+    with pytest.raises(RetraceError, match="unexpected jax trace"):
+        with retrace_guard():
+            f2(x)                          # silent recompile -> caught
+
+
+def test_retrace_guard_warn_action():
+    captured = jnp.zeros((4,))
+    f = jax.jit(lambda x: x + captured)
+    with pytest.warns(RetraceWarning):
+        with retrace_guard(action="warn") as g:
+            f(jnp.ones((4,)))              # cold compile inside the guard
+    assert g.triggered and g.traces > 0
+
+
+def test_retrace_guard_invalid_action():
+    with pytest.raises(ValueError, match="action"):
+        with retrace_guard(action="explode"):
+            pass
+
+
+def test_retrace_guard_session_compiles_are_expected():
+    """Passing the session excuses its recorded cold compiles; without it
+    the same region trips the guard (sim engine backend)."""
+    g = powerlaw_graph(300, seed=3, weighted=True).as_undirected()
+    sess = GraphSession.from_graph(g, 4, "cdbh")
+    with retrace_guard(sess) as gd:
+        sess.query(SSSP(), {"source": 0})  # cold: compiles, excused
+    assert gd.expected_compiles == 1 and not gd.triggered
+    with retrace_guard(sess) as gd2:
+        sess.query(SSSP(), {"source": 1})  # hit: no traces at all
+    assert gd2.expected_compiles == 0 and gd2.traces == 0
+    sess2 = GraphSession.from_graph(g, 4, "cdbh")
+    with pytest.raises(RetraceError):
+        with retrace_guard():              # session NOT passed
+            sess2.query(SSSP(), {"source": 0})
+
+
+def test_debug_sanitize_clean_session():
+    g = powerlaw_graph(300, seed=4, weighted=True).as_undirected()
+    sess = GraphSession.from_graph(g, 4, "cdbh", debug_sanitize=True)
+    r0, _ = sess.query(SSSP(), {"source": 0})
+    r1, st = sess.query(SSSP(), {"source": 0})   # guarded hit-path launch
+    assert st.compile_time == 0.0
+    np.testing.assert_array_equal(np.asarray(r0), np.asarray(r1))
+
+
+def test_debug_sanitize_catches_poisoned_runner():
+    """A cached executable that re-enters the tracer on launch (here: a
+    wrapper that builds a fresh jit per call) must raise at the query."""
+    g = powerlaw_graph(300, seed=5, weighted=True).as_undirected()
+    sess = GraphSession.from_graph(g, 4, "cdbh", debug_sanitize=True)
+    sess.query(SSSP(), {"source": 0})
+    [entry] = sess._runner_cache.entries.values()
+    real = entry.compiled
+
+    def retracing_runner(*args):
+        jax.jit(lambda v: v * 2)(1.0)      # fresh trace on every call
+        return real(*args)
+
+    entry.compiled = retracing_runner
+    with pytest.raises(RetraceError, match="cache-hit launch"):
+        sess.query(SSSP(), {"source": 0})
+
+
+def test_debug_sanitize_warn_mode():
+    g = powerlaw_graph(300, seed=6, weighted=True).as_undirected()
+    sess = GraphSession.from_graph(g, 4, "cdbh", debug_sanitize="warn")
+    sess.query(SSSP(), {"source": 0})
+    [entry] = sess._runner_cache.entries.values()
+    real = entry.compiled
+    entry.compiled = lambda *a: (jax.jit(lambda v: v + 1)(0.0), real(*a))[1]
+    with pytest.warns(RetraceWarning):
+        res, _ = sess.query(SSSP(), {"source": 0})
+    assert np.isfinite(np.asarray(res)).any()
+
+
+# --------------------------------------------------------------------------- #
+# shard_map engine backend (subprocess: fake devices before jax init)
+# --------------------------------------------------------------------------- #
+SHARD_SANITIZER_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.analysis.sanitizer import RetraceError, retrace_guard
+from repro.compat import make_mesh, shard_map
+from repro.core import EngineConfig
+from repro.graphgen import powerlaw_graph
+from repro.algos import SSSP
+from repro.session import GraphSession
+
+mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
+
+# 1. mutated-closure retrace on a shard_map computation
+captured = {"blk": jnp.zeros((8,))}
+def build():
+    blk = captured["blk"]                     # DL001 failure mode
+    def body(x):
+        return x + blk
+    return jax.jit(shard_map(body, mesh=mesh, in_specs=P(),
+                             out_specs=P()))
+x = jnp.ones((8,))
+f = build()
+f(x)                                          # cold compile
+with retrace_guard():
+    f(x)                                      # cached: clean
+captured["blk"] = jnp.full((8,), 3.0)
+f2 = build()                                  # rebuilt closure
+try:
+    with retrace_guard():
+        f2(x)
+    raise SystemExit("guard missed the shard_map closure retrace")
+except RetraceError:
+    pass
+
+# 2. the session integration on the shard engine backend
+g = powerlaw_graph(300, seed=7, weighted=True).as_undirected()
+cfg = EngineConfig(subgraph_axes=("pod", "data"), edge_axes=("model",))
+sess = GraphSession.from_graph(g, 4, "cdbh", mesh=mesh, cfg=cfg,
+                               debug_sanitize=True)
+with retrace_guard(sess) as gd:
+    sess.query(SSSP(), {"source": 0})         # cold compile: excused
+assert gd.expected_compiles == 1 and not gd.triggered
+with retrace_guard(sess) as gd2:
+    sess.query(SSSP(), {"source": 1})         # guarded hit-path launch
+assert gd2.traces == 0, f"shard hit-path traced {gd2.traces} times"
+print("shard sanitizer OK")
+"""
+
+
+def test_retrace_guard_shard_backend():
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    out = subprocess.run([sys.executable, "-c", SHARD_SANITIZER_SCRIPT],
+                         capture_output=True, text=True, env=env, cwd=ROOT,
+                         timeout=600)
+    assert out.returncode == 0, out.stdout + "\n" + out.stderr
+    assert "shard sanitizer OK" in out.stdout

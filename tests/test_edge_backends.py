@@ -11,10 +11,10 @@ import sys
 import numpy as np
 import pytest
 
-import jax._src.test_util as jtu
 
 from repro.algos import ConnectedComponents, PageRank, SSSP
 from repro.algos.mssp import make_mssp
+from repro.analysis.sanitizer import retrace_guard
 from repro.core import (EngineConfig, partition_and_build,
                         resolve_edge_backend, run_sim)
 from repro.core.layouts import build_edge_layouts
@@ -204,9 +204,8 @@ def test_inbucket_flush_zero_retraces(graph, eb):
     sess.update(adds=([gs], [gd], [40.0]))
     sess.flush()
     assert (lay.t_max, lay.b_max) == caps_before, "in-bucket by design"
-    with jtu.count_jit_tracing_cache_miss() as tr:
+    with retrace_guard(label=f"{eb}: in-bucket flush requery"):
         _, st = sess.query(SSSP(), {"source": 0})
-    assert tr[0] == 0, f"{eb}: in-bucket flush retraced {tr[0]} times"
     assert st.compile_time == 0.0
     assert sess.stats.cache_misses == 1
 

@@ -5,9 +5,9 @@ multi-algorithm traffic, and warm-memory carry across a bucket growth
 import numpy as np
 import pytest
 
-import jax._src.test_util as jtu
 
 from repro.algos import ConnectedComponents, PageRank, SSSP
+from repro.analysis.sanitizer import retrace_guard
 from repro.core import ShapePolicy, partition_and_build, run_sim
 from repro.core.engine import EngineConfig
 from repro.graphgen import powerlaw_graph
@@ -128,9 +128,9 @@ def test_flush_exactly_at_bucket_boundary_keeps_runner(graph):
     assert sess.shape_key == key0
 
     misses = sess.stats.cache_misses
-    with jtu.count_jit_tracing_cache_miss() as tr:
+    with retrace_guard(label="bucket-boundary query"):
         r_at, s_at = sess.query(SSSP(), {"source": 0})
-    assert tr[0] == 0 and s_at.compile_time == 0.0
+    assert s_at.compile_time == 0.0
     assert sess.stats.cache_misses == misses
 
     # one edge past the boundary: the bucket grows, one rebuild
@@ -163,9 +163,9 @@ def test_slot_bucket_absorbs_frontier_churn(graph):
     sess.flush()
     assert sess.pg.n_slots != slots0, "expected the frontier to re-elect"
     assert sess.shape_key == key0, "slot bucket must absorb the churn"
-    with jtu.count_jit_tracing_cache_miss() as tr:
+    with retrace_guard(label="post-churn CC query"):
         _, st = sess.query(ConnectedComponents())
-    assert tr[0] == 0 and st.compile_time == 0.0
+    assert st.compile_time == 0.0
 
 
 def test_compact_to_bucket_floor_then_regrow_rehits_runner(graph):
@@ -194,9 +194,9 @@ def test_compact_to_bucket_floor_then_regrow_rehits_runner(graph):
     sess.flush()
     assert sess.shape_key == key0
 
-    with jtu.count_jit_tracing_cache_miss() as tr:
+    with retrace_guard(label="compact-then-regrow query"):
         res, st = sess.query(SSSP(), {"source": 0})
-    assert tr[0] == 0 and st.compile_time == 0.0
+    assert st.compile_time == 0.0
     assert sess.stats.cache_misses == 1, \
         "the whole delete/compact/regrow cycle must reuse one compilation"
     ref, _ = run_sim(SSSP(), sess.pg, {"source": 0}, EngineConfig())
