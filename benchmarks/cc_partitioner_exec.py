@@ -1,6 +1,11 @@
 """Paper Fig. 4 — execution metrics of the partitioner choice: CC runtime,
-supersteps and (key,value) messages per superstep under RH vs CDBH vertex-cut
-(WebBase proxied by a Kronecker power-law graph)."""
+supersteps and (key,value) messages per superstep under RH vs CDBH vs EBV
+vertex-cut (WebBase proxied by a Kronecker power-law graph).
+
+``--smoke`` runs the CI-sized variant: a smaller Kronecker graph, same
+assertions — replication-aware partitioners (cdbh, ebv) must not move more
+messages than the random hash.
+"""
 from __future__ import annotations
 
 from repro.algos import ConnectedComponents
@@ -11,10 +16,11 @@ from benchmarks.common import save, table
 
 
 def run(scale: str = "small"):
-    g = kronecker_graph(14 if scale == "small" else 18, seed=2)
-    p = 16
+    k = {"smoke": 12, "small": 14, "large": 18}[scale]
+    g = kronecker_graph(k, seed=2)
+    p = 8 if scale == "smoke" else 16
     rows, recs = [], {}
-    for pname in ("rh-vc", "cdbh"):
+    for pname in ("rh-vc", "cdbh", "ebv"):
         pg = partition_and_build(g, p, pname)
         cfg = EngineConfig(mode="sc", trace=True)
         res, st = run_sim(ConnectedComponents(), pg, None, cfg)
@@ -27,11 +33,21 @@ def run(scale: str = "small"):
     table("Fig 4 — CC execution vs partitioner (kronecker power-law)",
           ["partitioner", "supersteps", "messages", "time",
            "msgs/step (first 8)"], rows)
-    # paper: CDBH fewer messages + <= supersteps than RH on power-law
+    # paper: replication-aware partitioners move fewer (key,value) messages
+    # than RH on power-law — fewer replicas means fewer mirror updates
     assert recs["cdbh"]["total_messages"] <= recs["rh-vc"]["total_messages"]
-    return save("cc_partitioner_exec",
-                {"graph_edges": g.n_edges, "n_parts": p, **recs})
+    assert recs["ebv"]["total_messages"] <= recs["rh-vc"]["total_messages"]
+    name = "cc_partitioner_exec" + ("_smoke" if scale == "smoke" else "")
+    return save(name, {"graph_edges": g.n_edges, "n_parts": p,
+                       "scale": scale, **recs})
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", default="small",
+                    choices=("small", "large", "smoke"))
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (kron-12, P=8), same assertions")
+    a = ap.parse_args()
+    run("smoke" if a.smoke else a.scale)

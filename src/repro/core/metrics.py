@@ -90,6 +90,18 @@ class ExecutionStats:
                                        # 'l1'/'l2' when the converged result
                                        # was served without a device launch,
                                        # 'miss' when it ran and was stored
+    # Per-partition (per-shard) load gauges — the LoadMonitor's measured-
+    # work inputs, and independently useful in benchmark tables. Empty
+    # lists when the run path did not fill them (result-cache hits, trace
+    # mode).
+    partition_edge_counts: list = dataclasses.field(default_factory=list)
+    partition_flops: list = dataclasses.field(default_factory=list)
+                                       # backend_flops split per shard:
+                                       # sweeps[p] * flops-per-sweep[p]
+    partition_sweep_time: list = dataclasses.field(default_factory=list)
+                                       # wall_time apportioned by each
+                                       # shard's flops share — the realized
+                                       # per-shard sweep-time estimate
 
     @property
     def peps(self) -> float:

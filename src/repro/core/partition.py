@@ -24,10 +24,16 @@ functions* (``route_edges_*``) that take raw endpoint arrays — no ``Graph``
 object. The streaming subsystem (repro.stream) routes edge chunks and delta
 batches through exactly these functions, which is what makes out-of-core
 ingestion and incremental re-routing bit-identical to the one-shot path.
-``STREAM_ROUTERS`` lists the partitioners that are pure per-edge (chunkable);
-``greedy_edge_cut`` is stateful-streaming (order-dependent) and is not.
+``STREAM_ROUTERS`` lists the streamable partitioners: most are pure per-edge
+(chunkable) functions; the ``"ebv"`` entry is a ``StatefulRouterSpec`` — a
+load-aware stateful-streaming router (repro.partition.ebv) whose placement
+depends on every previously routed edge and whose state travels with the
+``StreamContext``. ``greedy_edge_cut`` is stateful-streaming without a
+context protocol and stays one-shot-only.
 """
 from __future__ import annotations
+
+import dataclasses
 
 import numpy as np
 
@@ -38,7 +44,7 @@ __all__ = [
     "random_hash_edge_cut", "greedy_edge_cut", "PARTITIONERS",
     "route_edges_rh_vc", "route_edges_cdbh", "route_edges_grid",
     "route_edges_range", "route_edges_rh_ec", "route_vertices_rh",
-    "STREAM_ROUTERS",
+    "STREAM_ROUTERS", "StatefulRouterSpec", "is_stateful_router",
 ]
 
 
@@ -89,16 +95,26 @@ def route_edges_range(src: np.ndarray, dst: np.ndarray, n_vertices: int,
 
 def route_edges_grid(src: np.ndarray, dst: np.ndarray, n_parts: int,
                      *, seed: int = 0) -> np.ndarray:
-    """2D grid-constrained placement in a sqrt(P) x sqrt(P) layout."""
-    q = int(np.floor(np.sqrt(n_parts)))
-    q = max(q, 1)
+    """2D grid-constrained placement in an r x c layout with r*c == P.
+
+    ``r`` is the largest divisor of P at most sqrt(P) (so a square P keeps
+    the historical sqrt(P) x sqrt(P) grid, cell ids unchanged). The old
+    non-square fold — floor(sqrt(P))^2 cells pushed through ``% P`` — was
+    the identity on cell ids: partitions [q*q, P) never received an edge
+    and the low ids absorbed everything. An exact rectangular factorization
+    instead covers all P partitions with uniform cell weights, and keeps
+    the grid property (a vertex's edges stay inside one row + one column:
+    replication <= r + c - 1 partitions)."""
+    r = 1
+    for d in range(int(np.sqrt(n_parts)), 1, -1):
+        if n_parts % d == 0:
+            r = d
+            break
+    c = n_parts // r
     lo, hi = _canonical(src, dst)
-    hu = splitmix64(lo.astype(np.uint64) + np.uint64(seed)) % np.uint64(q)
-    hv = splitmix64(hi.astype(np.uint64) + np.uint64(seed ^ 0xABCDEF)) % np.uint64(q)
-    part = (hu * np.uint64(q) + hv).astype(np.int64)
-    # Spill any remainder partitions (if n_parts isn't a perfect square) by
-    # folding the grid id into [0, n_parts).
-    return (part % n_parts).astype(np.int32)
+    hu = splitmix64(lo.astype(np.uint64) + np.uint64(seed)) % np.uint64(r)
+    hv = splitmix64(hi.astype(np.uint64) + np.uint64(seed ^ 0xABCDEF)) % np.uint64(c)
+    return (hu * np.uint64(c) + hv).astype(np.int32)
 
 
 def route_vertices_rh(vids: np.ndarray, n_parts: int,
@@ -115,14 +131,50 @@ def route_edges_rh_ec(src: np.ndarray, dst: np.ndarray, n_parts: int,
     return route_vertices_rh(src, n_parts, seed=seed)
 
 
+@dataclasses.dataclass(frozen=True)
+class StatefulRouterSpec:
+    """A *stateful-streaming* ``STREAM_ROUTERS`` entry.
+
+    Pure entries are chunk functions; a stateful router's placement depends
+    on every previously routed edge, so the entry is a factory instead:
+    ``make_state(n_parts, n_vertices, seed)`` builds the mutable router
+    state a ``StreamContext`` carries (``ctx.router_state``). The state
+    implements ``route_adds`` / ``route_deletes`` / ``route_preview`` /
+    ``grow`` / ``checkpoint`` (see repro.partition.ebv, the reference
+    implementation). Membership tests (``name in STREAM_ROUTERS``) keep
+    working — a stateful partitioner IS streamable, it just routes through
+    its state rather than through a memoryless hash."""
+
+    name: str
+    factory_module: str      # lazy import target (avoids core <-> partition
+    factory_name: str        # import cycles at module-load time)
+
+    def make_state(self, n_parts: int, n_vertices: int, seed: int = 0):
+        import importlib
+        fn = getattr(importlib.import_module(self.factory_module),
+                     self.factory_name)
+        return fn(n_parts, n_vertices, seed=seed)
+
+    @property
+    def stateful(self) -> bool:
+        return True
+
+
+def is_stateful_router(entry) -> bool:
+    """True for ``STREAM_ROUTERS`` entries that need per-stream state."""
+    return isinstance(entry, StatefulRouterSpec)
+
+
 # Streamable routers under a uniform chunk signature:
 #   router(src, dst, degrees, n_vertices, n_parts, seed) -> int32[chunk]
+# (values may instead be a StatefulRouterSpec — see is_stateful_router)
 STREAM_ROUTERS = {
     "rh-vc": lambda s, d, deg, nv, p, seed: route_edges_rh_vc(s, d, p, seed=seed),
     "cdbh": lambda s, d, deg, nv, p, seed: route_edges_cdbh(s, d, deg, p, seed=seed),
     "grid": lambda s, d, deg, nv, p, seed: route_edges_grid(s, d, p, seed=seed),
     "range": lambda s, d, deg, nv, p, seed: route_edges_range(s, d, nv, p),
     "rh-ec": lambda s, d, deg, nv, p, seed: route_edges_rh_ec(s, d, p, seed=seed),
+    "ebv": StatefulRouterSpec("ebv", "repro.partition.ebv", "EBVRouterState"),
 }
 
 
@@ -214,6 +266,12 @@ def greedy_edge_cut(g: Graph, n_parts: int, *, seed: int = 0,
     return _edges_from_vertex_assignment(g, vpart)
 
 
+def _ebv_vertex_cut(g: Graph, n_parts: int, *, seed: int = 0) -> np.ndarray:
+    """EBV one-shot entry (lazy import: repro.partition builds on core)."""
+    from repro.partition.ebv import ebv_vertex_cut
+    return ebv_vertex_cut(g, n_parts, seed=seed)
+
+
 PARTITIONERS = {
     "rh-vc": random_hash_vertex_cut,
     "cdbh": cdbh_vertex_cut,
@@ -221,4 +279,5 @@ PARTITIONERS = {
     "range": range_vertex_cut,
     "rh-ec": random_hash_edge_cut,
     "greedy-ec": greedy_edge_cut,
+    "ebv": _ebv_vertex_cut,
 }

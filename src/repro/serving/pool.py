@@ -46,7 +46,8 @@ class SessionPool:
                  max_runners: Optional[int] = 64,
                  max_runner_bytes: Optional[int] = None,
                  result_cache: Optional[ResultCache] = None,
-                 max_sessions: Optional[int] = None):
+                 max_sessions: Optional[int] = None,
+                 rebalance: str = "off"):
         from repro.core.subgraph import ShapePolicy
         self.mesh = mesh
         self.cfg = cfg
@@ -57,6 +58,10 @@ class SessionPool:
         self.runner_cache = RunnerCache(max_runners, max_runner_bytes)
         self.result_cache = result_cache
         self.max_sessions = max_sessions
+        # pool-wide default for the online load rebalancer
+        # (docs/PARTITIONING.md): every opened session inherits it unless
+        # open(..., rebalance=...) overrides per tenant
+        self.rebalance = rebalance
         self._sessions: OrderedDict = OrderedDict()   # tenant -> session
         self.sessions_closed = 0                      # by the LRU bound
 
@@ -78,7 +83,8 @@ class SessionPool:
         common = dict(mesh=self.mesh, cfg=self.cfg,
                       shape_policy=self.shape_policy,
                       runner_cache=self.runner_cache,
-                      result_cache=self.result_cache, tenant=tenant)
+                      result_cache=self.result_cache, tenant=tenant,
+                      rebalance=self.rebalance)
         common.update(kwargs)
         if pg is not None:
             sess = GraphSession(pg, ctx=ctx, **common)

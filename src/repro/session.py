@@ -100,9 +100,13 @@ from repro.core.engine import (EngineConfig, _device_subgraph,
 from repro.core.api import VertexProgram
 from repro.core.graph import Graph
 from repro.core.metrics import ExecutionStats
-from repro.core.partition import PARTITIONERS, STREAM_ROUTERS
+from repro.core.partition import (PARTITIONERS, STREAM_ROUTERS,
+                                  is_stateful_router)
 from repro.core.subgraph import (PartitionedGraph, ShapePolicy,
                                  build_partitioned_graph)
+from repro.partition.monitor import LoadMonitor
+from repro.partition.rebalance import (RebalanceStats, execute_rebalance,
+                                       plan_rebalance)
 from repro.serving.result_cache import ResultCache
 from repro.serving.result_cache import result_key as _result_key
 from repro.serving.runner_cache import RunnerCache
@@ -177,6 +181,15 @@ class SessionStats:
     result_cache_l1_hits: int = 0  # converged results served from the
     result_cache_l2_hits: int = 0  # in-process / external tier
     result_cache_misses: int = 0   # result-cache consultations that ran
+    rebalances: int = 0            # online migrations executed
+    load_imbalance: float = 1.0    # the LoadMonitor's latest blended gauge
+                                   # (1.0 when no monitor is attached)
+    partition_edge_counts: list = dataclasses.field(default_factory=list)
+                                   # latest per-partition resident edges
+    partition_sweep_time: list = dataclasses.field(default_factory=list)
+                                   # EWMA per-shard sweep seconds across
+                                   # queries (the monitor's measured-work
+                                   # signal, surfaced for benchmark tables)
 
 
 class _SessionBuffer(DeltaBuffer):
@@ -238,6 +251,18 @@ class GraphSession:
     protocol) drops the resident device pytree and releases every shared-
     cache pin; a closed session raises ``RuntimeError`` on use.
 
+    ``rebalance=`` wires in the online load rebalancer
+    (docs/PARTITIONING.md): ``"auto"`` attaches a ``LoadMonitor`` (pass
+    ``monitor=`` to configure it) that watches per-partition edge counts,
+    frontier occupancy and measured per-shard sweep time, and — when its
+    hysteresis gauge trips under streaming churn — migrates boundary edges
+    off the overloaded partitions through the same remap machinery as
+    ``compact()`` (warm state and in-bucket compiled runners survive; the
+    graph-version bump invalidates result-cache entries). ``"manual"``
+    keeps the gauge live but only ``session.rebalance()`` migrates;
+    ``"off"`` (default) disables both. ``rebalance_target`` is the edge-
+    balance the planner aims for (donors shed down to the mean).
+
     ``debug_sanitize=True`` arms the runtime retrace sanitizer
     (``repro.analysis.sanitizer``): every cache-hit launch runs under a
     ``retrace_guard``, so an AOT-compiled runner that silently re-enters
@@ -259,6 +284,9 @@ class GraphSession:
                  runner_cache: Optional[RunnerCache] = None,
                  result_cache: Optional[ResultCache] = None,
                  tenant: Optional[str] = None,
+                 rebalance: str = "off",
+                 monitor: Optional[LoadMonitor] = None,
+                 rebalance_target: float = 1.05,
                  debug_sanitize=False):
         self.pg = pg
         self.ctx = ctx
@@ -268,6 +296,19 @@ class GraphSession:
         self.pad_multiple = self.shape_policy.pad_multiple
         self.max_warm_entries = max_warm_entries
         self.max_warm_bytes = max_warm_bytes
+        if rebalance not in ("off", "auto", "manual"):
+            raise ValueError(
+                f"rebalance={rebalance!r}: expected 'off', 'manual' or "
+                "'auto'")
+        self._rebalance_mode = rebalance
+        self.rebalance_target = rebalance_target
+        # "manual" keeps the monitor's gauge live without auto-triggering;
+        # "off" attaches one only if the caller handed it in explicitly
+        self.monitor = monitor if monitor is not None else (
+            LoadMonitor() if rebalance != "off" else None)
+        self._rebalancing = False      # re-entrancy guard (auto trigger
+                                       # fires from _on_flush, and
+                                       # rebalance() itself flushes)
         self.tenant = f"session-{id(self):x}" if tenant is None else tenant
         self._runner_cache = runner_cache if runner_cache is not None \
             else RunnerCache(max_runners, max_runner_bytes)
@@ -319,13 +360,24 @@ class GraphSession:
             shape_policy = ShapePolicy.exact(
                 8 if pad_multiple is None else pad_multiple)
         policy = cls._resolve_policy(shape_policy, pad_multiple)
-        part = PARTITIONERS[partitioner](g, n_parts, seed=seed)
+        entry = STREAM_ROUTERS.get(partitioner)
+        router_state = None
+        if is_stateful_router(entry):
+            # stateful-streaming partitioner (EBV): the one-shot assignment
+            # and the session's routing state must come from the SAME
+            # streamed pass, or later deltas would not find resident edges
+            router_state = entry.make_state(n_parts, g.n_vertices, seed)
+            part = np.minimum(router_state.route_adds(g.src, g.dst),
+                              n_parts - 1)
+        else:
+            part = PARTITIONERS[partitioner](g, n_parts, seed=seed)
         pg = build_partitioned_graph(g, part, n_parts, shape_policy=policy)
         ctx = None
         if partitioner in STREAM_ROUTERS:
             ctx = StreamContext(partitioner=partitioner, n_parts=n_parts,
                                 seed=seed, n_vertices=g.n_vertices,
-                                routing_degrees=g.total_degrees())
+                                routing_degrees=g.total_degrees(),
+                                router_state=router_state)
         return cls(pg, ctx=ctx, mesh=mesh, cfg=cfg, shape_policy=policy,
                    **kwargs)
 
@@ -960,18 +1012,41 @@ class GraphSession:
                 cfg, n_slots, K, program.dtype, pg.n_parts, n_edge)
         lay = pg.edge_layouts
         sweeps64 = sweeps.astype(np.int64)
+        epp = pg.edges_per_part.astype(np.int64)
+        flops_pp = sweeps64 * _flops_per_sweep(program, eb, pg, lay)
+        tot_flops = int(flops_pp.sum())
+        # per-shard sweep time: the launch wall time apportioned by each
+        # shard's flops share (shards run lock-step supersteps, so the
+        # flops skew IS the critical-path skew the monitor cares about)
+        share = (flops_pp / tot_flops if tot_flops
+                 else np.full(pg.n_parts, 1.0 / max(pg.n_parts, 1)))
         st = ExecutionStats(
             supersteps=steps, total_messages=msgs,
-            processed_edges=int(
-                (sweeps64 * pg.edges_per_part.astype(np.int64)).sum()),
+            processed_edges=int((sweeps64 * epp).sum()),
             total_bytes=total_bytes, wall_time=wall,
             compile_time=compile_time, edge_backend=eb,
-            backend_flops=int((sweeps64 * _flops_per_sweep(
-                program, eb, pg, lay)).sum()))
+            backend_flops=tot_flops,
+            partition_edge_counts=[int(x) for x in epp],
+            partition_flops=[int(x) for x in flops_pp],
+            partition_sweep_time=[float(x) for x in wall * share])
         if eb == "pallas_tiles" and lay is not None:
             spec = program.sweep_spec
             st.tile_density = lay.density(pg, spec.semiring,
                                           spec.edge_values, program.dtype)
+        # surface the load gauges on SessionStats (EWMA for the measured
+        # signal) and feed the monitor's measured-work input
+        self.stats.partition_edge_counts = list(st.partition_edge_counts)
+        prev = self.stats.partition_sweep_time
+        cur = st.partition_sweep_time
+        if len(prev) != len(cur):
+            self.stats.partition_sweep_time = list(cur)
+        else:
+            a = self.monitor.cfg.ema if self.monitor is not None else 0.5
+            self.stats.partition_sweep_time = [
+                a * n + (1.0 - a) * o for n, o in zip(cur, prev)]
+        if self.monitor is not None:
+            self.monitor.observe_query(st)
+            self.stats.load_imbalance = self.monitor.gauge
         return st
 
     def _remember(self, program, wkey, res, supersteps):
@@ -1058,6 +1133,56 @@ class GraphSession:
             self._remap_log.clear()
             self._sync_warm_bytes()
         self._evict_stale_runners()
+        # streaming churn drives the load monitor; under rebalance="auto" a
+        # tripped hysteresis gauge migrates right here, before the flush's
+        # caller sees the new graph version
+        if self.monitor is not None and not self._rebalancing:
+            self.stats.load_imbalance = self.monitor.observe_graph(self.pg)
+            if (self._rebalance_mode == "auto"
+                    and self.monitor.should_rebalance()):
+                self.rebalance()
+
+    def rebalance(self, *, target: Optional[float] = None
+                  ) -> Optional[RebalanceStats]:
+        """Migrate boundary edges off overloaded partitions
+        (docs/PARTITIONING.md). Plans a minimal cheapest-first move set
+        (``repro.partition.rebalance``), executes it through the same
+        ``repack_partitions`` remap machinery as ``compact`` — warm results
+        ride the remap chain, in-bucket runners survive, the version bump
+        invalidates result-cache entries — and records the moved pairs in
+        the routing context so later deletes/re-adds find them. Returns
+        the ``RebalanceStats``, or None when the plan is empty (already
+        balanced). Needs a ``StreamContext`` like every mutation path."""
+        self._check_open()
+        self._require_buffer("rebalance()")
+        if self._rebalancing:
+            return None
+        self._rebalancing = True
+        try:
+            if len(self.buffer):
+                self.flush()
+            plan = plan_rebalance(
+                self.pg, target=self.rebalance_target
+                if target is None else target)
+            if plan.n_moves == 0:
+                return None
+            rs = execute_rebalance(self.pg, self.ctx, plan,
+                                   shape_policy=self.shape_policy)
+            self._host_version += 1
+            self.stats.rebalances += 1
+            # migration changes layout (membership moved), never values:
+            # joins the pending-remap chain exactly like a compaction
+            self._warm_epoch += 1
+            self._remap_log.append((self._warm_epoch, rs))
+            self._prune_remap_log()
+            self._evict_stale_runners()
+            if self.monitor is not None:
+                self.monitor.notify_rebalanced()
+                self.stats.load_imbalance = self.monitor.observe_graph(
+                    self.pg)
+            return rs
+        finally:
+            self._rebalancing = False
 
     def compact(self) -> CompactStats:
         """Evict edge-less members, shrink the padded capacities to the

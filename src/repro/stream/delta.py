@@ -191,9 +191,13 @@ def apply_delta(pg: PartitionedGraph, ctx: StreamContext, delta: EdgeDelta,
     ctx.grow(new_v)
     pg.n_vertices = new_v
 
-    # ---- route mutations through the frozen hashes ----------------------- #
-    add_part = ctx.route(delta.add_src, delta.add_dst)
-    del_part = ctx.route(delta.del_src, delta.del_dst)
+    # ---- route mutations through the frozen routing context -------------- #
+    # Adds first: a stateful router (EBV) commits placements as it routes,
+    # and its pair table is what lets the deletes of a DEL_ADD pair find the
+    # resident copies (same partition — placement is pair-sticky). For the
+    # pure hashes route_adds == route_deletes == route.
+    add_part = ctx.route_adds(delta.add_src, delta.add_dst)
+    del_part = ctx.route_deletes(delta.del_src, delta.del_dst)
     add_w = (np.ones(delta.n_adds, np.float32) if delta.add_w is None
              else delta.add_w)
     affected = np.unique(np.concatenate([add_part, del_part]))

@@ -24,6 +24,13 @@ O(chunk_size) bound. O(n_vertices) columnar state (degree counters, the
 membership tables) is carried like the paper's degree pass; the final
 PartitionedGraph is O(|E|) by definition — on the production mesh each host
 would assemble only its own partitions.
+
+Stateful-streaming routers (the ``"ebv"`` ``STREAM_ROUTERS`` entry) relax
+the columnar claim knowingly: their router state adds O(V * P / 64) replica
+bitmasks plus an exact pair->partition table, O(distinct pairs) host memory
+— the documented price of load-aware placement (docs/PARTITIONING.md). The
+transient chunk buffers stay bounded either way, which is what the
+``ChunkAccountant`` assertion pins.
 """
 from __future__ import annotations
 
@@ -36,7 +43,8 @@ from typing import Optional, Union
 
 import numpy as np
 
-from repro.core.partition import STREAM_ROUTERS, route_vertices_rh
+from repro.core.partition import (STREAM_ROUTERS, is_stateful_router,
+                                  route_vertices_rh)
 from repro.core.subgraph import (PartitionedGraph, ShapePolicy,
                                  assemble_partitioned_graph)
 from repro.stream.edgelog import (BYTES_PER_EDGE, EdgeLogReader,
@@ -68,16 +76,54 @@ class StreamContext:
     # edges would stop being findable (post-growth ids clip to the last
     # block — deterministic, and a no-op for ingest-time ids).
     routing_n_vertices: int = -1
+    # Stateful-streaming routers (STREAM_ROUTERS entries that are a
+    # StatefulRouterSpec, e.g. "ebv") carry their mutable state here; a
+    # rebalanced pure-hash context carries a RelocationOverlay. None for an
+    # untouched pure router — the common case.
+    router_state: Optional[object] = None
 
     def __post_init__(self):
         if self.routing_n_vertices < 0:
             self.routing_n_vertices = self.n_vertices
 
-    def route(self, src: np.ndarray, dst: np.ndarray) -> np.ndarray:
-        part = STREAM_ROUTERS[self.partitioner](
-            src, dst, self.routing_degrees, self.routing_n_vertices,
-            self.n_parts, self.seed)
+    def _route_pure(self, src: np.ndarray, dst: np.ndarray) -> np.ndarray:
+        entry = STREAM_ROUTERS[self.partitioner]
+        if is_stateful_router(entry):
+            raise ValueError(
+                f"partitioner {self.partitioner!r} is stateful-streaming "
+                "but this StreamContext has no router_state — build the "
+                "context through streaming_ingest / GraphSession.from_graph "
+                "(or attach spec.make_state(...) yourself)")
+        part = entry(src, dst, self.routing_degrees,
+                     self.routing_n_vertices, self.n_parts, self.seed)
         return np.minimum(part, self.n_parts - 1)
+
+    def route(self, src: np.ndarray, dst: np.ndarray) -> np.ndarray:
+        """Non-mutating routing: the pure hash, or a stateful router's
+        *preview* (where an insert would currently land). Mutation paths
+        must use ``route_adds`` / ``route_deletes`` instead — for a pure
+        router all three coincide."""
+        if self.router_state is not None:
+            return np.minimum(self.router_state.route_preview(src, dst),
+                              self.n_parts - 1)
+        return self._route_pure(src, dst)
+
+    def route_adds(self, src: np.ndarray, dst: np.ndarray) -> np.ndarray:
+        """Route inserted edges; a stateful router commits the placement
+        (load counters, replica sets, pair table) as it routes."""
+        if self.router_state is not None:
+            return np.minimum(self.router_state.route_adds(src, dst),
+                              self.n_parts - 1)
+        return self._route_pure(src, dst)
+
+    def route_deletes(self, src: np.ndarray, dst: np.ndarray) -> np.ndarray:
+        """Route deletions to the partition holding the resident copies —
+        a stateful router answers from its exact pair table; a pure router
+        re-hashes (placement never moved)."""
+        if self.router_state is not None:
+            return np.minimum(self.router_state.route_deletes(src, dst),
+                              self.n_parts - 1)
+        return self._route_pure(src, dst)
 
     def grow(self, n_vertices: int) -> None:
         if n_vertices > self.n_vertices:
@@ -85,6 +131,8 @@ class StreamContext:
                 [self.routing_degrees,
                  np.zeros(n_vertices - self.n_vertices, np.int64)])
             self.n_vertices = n_vertices
+            if self.router_state is not None:
+                self.router_state.grow(n_vertices)
 
 
 class ChunkAccountant:
@@ -180,6 +228,13 @@ def streaming_ingest(log: Union[str, EdgeLogReader], n_parts: int,
     degrees = out_deg + in_deg
     ctx = StreamContext(partitioner=partitioner, n_parts=n_parts, seed=seed,
                         n_vertices=V, routing_degrees=degrees)
+    entry = STREAM_ROUTERS[partitioner]
+    if is_stateful_router(entry):
+        # Stateful routers (EBV) start scoring from an empty state after the
+        # degree pass; the state is O(V + routed pairs) columnar host memory
+        # (like the degree counters) and rides on the returned ctx so the
+        # delta path keeps routing through it.
+        ctx.router_state = entry.make_state(n_parts, V, seed)
     stats.pass1_time = time.perf_counter() - t0
 
     # ---- pass 2: route chunks to per-partition spill shards -------------- #
@@ -198,7 +253,7 @@ def streaming_ingest(log: Union[str, EdgeLogReader], n_parts: int,
                for p in range(n_parts)]
     for src, dst, w in log.chunks():
         held = acct.hold(_chunk_nbytes(src, dst, w))
-        part = ctx.route(src, dst)
+        part = ctx.route_adds(src, dst)
         order = np.argsort(part, kind="stable")   # chunk order == log order
         held2 = acct.hold(order.nbytes + src.nbytes + dst.nbytes
                           + 4 * src.size)

@@ -1,0 +1,198 @@
+"""EBV stateful-streaming router invariants (docs/PARTITIONING.md).
+
+What these pin: the acceptance quality bar (replication factor strictly
+below the stateless hash with bounded imbalance on skewed power-law
+graphs), the determinism/resume contract (bit-identical replay, mid-stream
+checkpoint/restore), pair-sticky co-location, exact delete routing, and
+the end-to-end streaming-ingest / delta wiring.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (PARTITIONERS, build_partitioned_graph,
+                        partition_metrics)
+from repro.core.partition import (STREAM_ROUTERS, StatefulRouterSpec,
+                                  is_stateful_router)
+from repro.graphgen import powerlaw_graph, random_graph
+from repro.partition.ebv import (EBVConfig, EBVRouterState, _PairTable,
+                                 ebv_vertex_cut, pair_keys)
+
+
+def _pl(n=6000, alpha=2.1, deg=8, seed=0):
+    return powerlaw_graph(n, alpha=alpha, avg_degree=deg, seed=seed)
+
+
+# --------------------------------------------------------------------------- #
+# quality bar
+# --------------------------------------------------------------------------- #
+def test_ebv_beats_rh_on_powerlaw():
+    """Acceptance: on a skewed power-law graph at P=8, EBV's replication
+    factor is strictly below rh-vc's AND edge imbalance stays <= 1.1."""
+    g = _pl()
+    me = partition_metrics(
+        build_partitioned_graph(g, PARTITIONERS["ebv"](g, 8, seed=0), 8))
+    mr = partition_metrics(
+        build_partitioned_graph(g, PARTITIONERS["rh-vc"](g, 8, seed=0), 8))
+    assert me.replication_factor < mr.replication_factor, (me, mr)
+    assert me.imbalance <= 1.1, me
+
+
+def test_ebv_registered_as_stateful_router():
+    entry = STREAM_ROUTERS["ebv"]
+    assert isinstance(entry, StatefulRouterSpec)
+    assert is_stateful_router(entry)
+    assert not is_stateful_router(STREAM_ROUTERS["rh-vc"])
+    st = entry.make_state(4, 100, seed=3)
+    assert isinstance(st, EBVRouterState)
+    assert st.n_parts == 4 and st.seed == 3
+    assert "ebv" in STREAM_ROUTERS   # streamability membership test
+
+
+# --------------------------------------------------------------------------- #
+# determinism / resume contract
+# --------------------------------------------------------------------------- #
+def test_ebv_deterministic_replay():
+    g = _pl(2000)
+    a = PARTITIONERS["ebv"](g, 5, seed=1)
+    b = PARTITIONERS["ebv"](g, 5, seed=1)
+    np.testing.assert_array_equal(a, b)
+    # one-shot partitioner == ebv_vertex_cut == a fresh state's route_adds
+    c = ebv_vertex_cut(g, 5, seed=1)
+    np.testing.assert_array_equal(a, c)
+    st = EBVRouterState(5, g.n_vertices, seed=1)
+    np.testing.assert_array_equal(a, st.route_adds(g.src, g.dst))
+
+
+def test_ebv_checkpoint_restore_bit_identical():
+    """A restored router continues the stream bit-identically (the
+    streaming-resume contract) — including its pair table."""
+    g = _pl(3000)
+    cut = g.src.size // 2
+    a = EBVRouterState(4, g.n_vertices, seed=0)
+    a.route_adds(g.src[:cut], g.dst[:cut])
+    b = EBVRouterState.from_checkpoint(a.checkpoint())
+    pa = a.route_adds(g.src[cut:], g.dst[cut:])
+    pb = b.route_adds(g.src[cut:], g.dst[cut:])
+    np.testing.assert_array_equal(pa, pb)
+    np.testing.assert_array_equal(a.edge_load, b.edge_load)
+    np.testing.assert_array_equal(a.replica_load, b.replica_load)
+    np.testing.assert_array_equal(a.replicas, b.replicas)
+    ka, va = a.table.snapshot()
+    kb, vb = b.table.snapshot()
+    np.testing.assert_array_equal(ka, kb)
+    np.testing.assert_array_equal(va, vb)
+    # deletes agree too (table + hash fallback share the seed)
+    np.testing.assert_array_equal(a.route_deletes(g.src[:99], g.dst[:99]),
+                                  b.route_deletes(g.src[:99], g.dst[:99]))
+
+
+# --------------------------------------------------------------------------- #
+# pair stickiness + deletes
+# --------------------------------------------------------------------------- #
+def test_ebv_pair_sticky_colocation():
+    """Both directions and duplicate copies of a pair co-locate — whether
+    the duplicates arrive in one call (same or different mini-blocks) or
+    in later calls."""
+    g = random_graph(300, 4000, seed=2, undirected=True)
+    st = EBVRouterState(7, 300, cfg=EBVConfig(block=64))
+    part = st.route_adds(g.src, g.dst)
+    lut = {}
+    for s, d, p in zip(g.src.tolist(), g.dst.tolist(), part.tolist()):
+        key = (min(s, d), max(s, d))
+        assert lut.setdefault(key, p) == p, (s, d)
+    # a later re-add sticks to the recorded partition
+    again = st.route_adds(g.dst[:50], g.src[:50])   # reversed direction
+    np.testing.assert_array_equal(again, part[:50])
+
+
+def test_ebv_route_deletes_finds_resident():
+    g = _pl(1500)
+    st = EBVRouterState(6, g.n_vertices)
+    part = st.route_adds(g.src, g.dst)
+    # resident pairs: the table answers exactly, in either direction
+    np.testing.assert_array_equal(st.route_deletes(g.src, g.dst), part)
+    np.testing.assert_array_equal(st.route_deletes(g.dst, g.src), part)
+    # never-routed pairs fall back deterministically in [0, P)
+    miss = st.route_deletes(np.array([1400, 1401]), np.array([1402, 1403]))
+    assert miss.min() >= 0 and miss.max() < 6
+    np.testing.assert_array_equal(
+        miss, st.route_deletes(np.array([1400, 1401]),
+                               np.array([1402, 1403])))
+
+
+def test_ebv_preview_is_nonmutating():
+    g = _pl(1000)
+    st = EBVRouterState(4, g.n_vertices)
+    st.route_adds(g.src[:2000], g.dst[:2000])
+    before = st.checkpoint()
+    st.route_preview(g.src[2000:3000], g.dst[2000:3000])
+    st.route_deletes(g.src[:500], g.dst[:500])
+    after = st.checkpoint()
+    for k in before:
+        np.testing.assert_array_equal(np.asarray(before[k]),
+                                      np.asarray(after[k]), err_msg=k)
+
+
+def test_ebv_growth():
+    st = EBVRouterState(4, 10)
+    p1 = st.route_adds(np.array([1, 2]), np.array([3, 4]))
+    # ids beyond the declared space grow the replica table transparently
+    p2 = st.route_adds(np.array([50]), np.array([51]))
+    assert st.n_vertices == 52
+    assert p2.min() >= 0 and p2.max() < 4
+    # previously routed pairs survive the growth
+    np.testing.assert_array_equal(st.route_deletes(np.array([1, 2]),
+                                                   np.array([3, 4])), p1)
+
+
+def test_pair_table_two_tier():
+    t = _PairTable()
+    k1 = pair_keys(np.arange(10), np.arange(10) + 100)
+    t.put(k1, np.arange(10, dtype=np.int32) % 3)
+    np.testing.assert_array_equal(t.get(k1), np.arange(10) % 3)
+    t.merge()
+    assert len(t.overlay) == 0
+    # overlay wins over base on conflict, before and after merge
+    t.put(k1[:4], np.full(4, 2, np.int32))
+    np.testing.assert_array_equal(t.get(k1[:4]), [2, 2, 2, 2])
+    t.merge()
+    np.testing.assert_array_equal(t.get(k1[:4]), [2, 2, 2, 2])
+    assert t.get(pair_keys(np.array([7]), np.array([999])))[0] == -1
+
+
+# --------------------------------------------------------------------------- #
+# end-to-end wiring: streaming ingest + delta
+# --------------------------------------------------------------------------- #
+def test_ebv_streaming_ingest_and_delta(tmp_path):
+    from repro.stream import write_edge_log
+    from repro.stream.delta import EdgeDelta, apply_delta
+    from repro.stream.ingest import streaming_ingest
+
+    g = _pl(2000, seed=5)
+    log = str(tmp_path / "log")
+    write_edge_log(g, log, chunk_size=512)
+    pg, ctx, _ = streaming_ingest(log, 4, "ebv", seed=0)
+    assert isinstance(ctx.router_state, EBVRouterState)
+    assert pg.emask.sum() == g.n_edges
+    m = partition_metrics(pg)
+    assert m.imbalance <= 1.2
+
+    # a stateless context for a stateful partitioner must refuse pure routing
+    from repro.stream.ingest import StreamContext
+    bare = StreamContext("ebv", 4, 0, g.n_vertices,
+                         np.zeros(g.n_vertices, np.int64))
+    with pytest.raises(ValueError, match="stateful"):
+        bare.route(np.array([1]), np.array([2]))
+
+    # deletes route through the pair table: removing resident edges works
+    n0 = pg.n_edges
+    ds = apply_delta(pg, ctx, EdgeDelta(del_src=g.src[:64],
+                                        del_dst=g.dst[:64]))
+    assert ds.n_deleted == 64
+    assert pg.n_edges == n0 - 64
+    # re-adding them lands back on the recorded partitions (stickiness)
+    ds2 = apply_delta(pg, ctx, EdgeDelta(add_src=g.src[:64],
+                                         add_dst=g.dst[:64],
+                                         add_w=np.ones(64, np.float32)))
+    assert ds2.n_added == 64
+    assert pg.n_edges == n0

@@ -44,7 +44,8 @@ PATH_EXTS = (".py", ".md", ".yml", ".yaml", ".json", ".txt")
 # undocumented, not only when docs point at vanished code). The kernels
 # became load-bearing with the edge-compute backends — keep them covered.
 COVERED_MODULE_DIRS = ("src/repro/kernels", "src/repro/core",
-                       "src/repro/serving", "src/repro/analysis")
+                       "src/repro/serving", "src/repro/analysis",
+                       "src/repro/partition")
 
 _span = re.compile(r"`([^`]+)`")
 _fence = re.compile(r"^(```|~~~)")
