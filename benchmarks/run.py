@@ -15,9 +15,9 @@ import argparse
 import time
 import traceback
 
-from benchmarks import (breakdown, cc_partitioner_exec, kernel_roofline,
-                        partitioner_metrics, sssp_variants, strong_scaling,
-                        trillion_dryrun, weak_scaling)
+from benchmarks import (algo_suite, breakdown, cc_partitioner_exec,
+                        kernel_roofline, partitioner_metrics, sssp_variants,
+                        strong_scaling, trillion_dryrun, weak_scaling)
 
 SUITES = [
     ("partitioner_metrics", partitioner_metrics.run),
@@ -27,6 +27,7 @@ SUITES = [
     ("breakdown", breakdown.run),
     ("weak_scaling", weak_scaling.run),
     ("kernel_roofline", kernel_roofline.run),
+    ("algo_suite", algo_suite.run),
     ("trillion_dryrun", trillion_dryrun.run),
 ]
 

@@ -3,6 +3,17 @@ from repro.algos.sssp import SSSP
 from repro.algos.pagerank import PageRank
 from repro.algos.gsim import GraphSimulation
 from repro.algos.mssp import MultiSourceSSSP
+from repro.algos.bfs import BFS, MultiSourceBFS, make_msbfs
+from repro.algos.lp import LabelPropagation, make_lp, decode_labels
+from repro.algos.kcore import KCore, make_kcore
+from repro.algos.triangles import (TriangleCount, make_triangles,
+                                   triangles_from_result)
+from repro.algos.betweenness import (SigmaCount, BrandesAccum,
+                                     brandes_betweenness)
 
 __all__ = ["ConnectedComponents", "SSSP", "PageRank", "GraphSimulation",
-           "MultiSourceSSSP"]
+           "MultiSourceSSSP", "BFS", "MultiSourceBFS", "make_msbfs",
+           "LabelPropagation", "make_lp", "decode_labels",
+           "KCore", "make_kcore",
+           "TriangleCount", "make_triangles", "triangles_from_result",
+           "SigmaCount", "BrandesAccum", "brandes_betweenness"]

@@ -1,0 +1,193 @@
+"""Approximate betweenness centrality: K-pivot Brandes, staged queries.
+
+Brandes' algorithm per source s needs (1) BFS distances d_s, (2) shortest
+-path counts sigma_s via the BFS DAG, (3) a backward dependency
+accumulation delta_s. Stages (2) and (3) are fixpoints over the DAG, so
+each maps onto the engine as its own ``VertexProgram`` — K pivots batched
+into [v_max, K] columns exactly like ``MultiSourceSSSP``'s landmark
+batching (stage 1 *is* ``MultiSourceBFS``). Sampling K << n pivots gives
+the standard Brandes–Pich approximation; pivots = all vertices is exact.
+
+Replicated frontier vertices receive partial DAG sums from every replica,
+merged with the delta-accumulation discipline (emit only the change in
+the local partial since the last sync, so the sum-combined exchange is
+exact and the emitted deltas shrink to zero — the engine's vote-to-halt
+terminates once the DAG has drained):
+
+    value = acc + pin - emitted       acc: merged global in-flow so far
+                                      pin: current local partial
+                                      emitted: local partial at last sync
+
+``SigmaCount`` runs it forward (sigma flows source->sink: scatter at edge
+destinations), ``BrandesAccum`` backward (delta flows sink->source:
+scatter at edge sources, with the per-edge ratio sigma_s/sigma_d baked
+into a coefficient at init). Both gate edges on the DAG predicate
+``level[src] + 1 == level[dst]`` — a per-edge, per-pivot mask that no
+declarative edge-value map expresses, hence hand-rolled COO sweeps.
+
+``brandes_betweenness`` glues the three stages over any query callable
+(raw ``run``, a ``GraphSession`` — anything returning collected global
+values). Unweighted, simple graphs; not monotone (no warm start).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, ClassVar, Dict, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.api import DeviceSubgraph, VertexProgram
+from repro.algos.bfs import make_msbfs
+
+
+def _local_levels(sg: DeviceSubgraph, levels: jnp.ndarray) -> jnp.ndarray:
+    """Gather the global [n, K] level table into this partition's rows."""
+    idx = jnp.clip(sg.vid32, 0, levels.shape[0] - 1)
+    return jnp.where(sg.vmask[:, None], levels[idx], jnp.inf)
+
+
+def _dag_mask(sg: DeviceSubgraph, lev: jnp.ndarray) -> jnp.ndarray:
+    """[e_max, K] — edges on some shortest path (one level down)."""
+    ls = lev[sg.esrc]
+    return sg.emask[:, None] & jnp.isfinite(ls) & (ls + 1.0 == lev[sg.edst])
+
+
+@dataclasses.dataclass
+class SigmaCount(VertexProgram):
+    """Shortest-path counts sigma over the BFS DAG (forward fixpoint)."""
+
+    supports_edge_backends: ClassVar[Tuple[str, ...]] = ("coo",)
+
+    combiner: str = "sum"
+    payload: int = 4               # K pivots; set at construction
+    dtype: object = jnp.float32
+    delta_based: bool = True
+    monotone: bool = False
+
+    def init(self, sg: DeviceSubgraph, params, ec):
+        lev = _local_levels(sg, params["levels"])
+        dag = _dag_mask(sg, lev)
+        pivots = params["pivots"]
+        seed = ((sg.vid32[:, None] == pivots[None, :]) &
+                sg.vmask[:, None]).astype(jnp.float32)
+        zeros = jnp.zeros_like(seed)
+        return {"sigma": seed, "seed": seed, "dag": dag, "pin": zeros,
+                "acc": zeros, "emitted": zeros}
+
+    def apply_frontier(self, sg, params, state, merged, ec):
+        f = sg.frontier[:, None]
+        acc = jnp.where(f, state["acc"] + merged, state["acc"])
+        emitted = jnp.where(f, state["pin"], state["emitted"])
+        sigma = jnp.where(f, state["seed"] + acc, state["sigma"])
+        changed = jnp.sum(jnp.any(merged != 0, -1) & sg.frontier,
+                          dtype=jnp.int32)
+        return {"sigma": sigma, "seed": state["seed"], "dag": state["dag"],
+                "pin": state["pin"], "acc": acc, "emitted": emitted}, changed
+
+    def sweep(self, sg, params, state, ec):
+        sigma = state["sigma"]
+        contrib = jnp.where(state["dag"], sigma[sg.esrc], 0.0)
+        pin = jnp.zeros_like(sigma).at[sg.edst].add(contrib)
+        pin = ec.sum(pin)
+        new = jnp.where(sg.vmask[:, None],
+                        state["seed"] + state["acc"] + pin - state["emitted"],
+                        sigma)
+        changed = jnp.sum(jnp.any(new != sigma, -1), dtype=jnp.int32)
+        return {"sigma": new, "seed": state["seed"], "dag": state["dag"],
+                "pin": pin, "acc": state["acc"],
+                "emitted": state["emitted"]}, changed
+
+    def frontier_out(self, sg, params, state):
+        return jnp.where(sg.frontier[:, None],
+                         state["pin"] - state["emitted"], 0.0)
+
+    def result(self, sg, params, state):
+        return state["sigma"]
+
+
+@dataclasses.dataclass
+class BrandesAccum(VertexProgram):
+    """Backward dependency accumulation delta over the BFS DAG."""
+
+    supports_edge_backends: ClassVar[Tuple[str, ...]] = ("coo",)
+
+    combiner: str = "sum"
+    payload: int = 4               # K pivots; set at construction
+    dtype: object = jnp.float32
+    delta_based: bool = True
+    monotone: bool = False
+
+    def init(self, sg: DeviceSubgraph, params, ec):
+        lev = _local_levels(sg, params["levels"])
+        dag = _dag_mask(sg, lev)
+        sig = params["sigma"]
+        idx = jnp.clip(sg.vid32, 0, sig.shape[0] - 1)
+        sigl = jnp.where(sg.vmask[:, None], sig[idx], 0.0)
+        ss, sd = sigl[sg.esrc], sigl[sg.edst]
+        coef = jnp.where(dag & (sd > 0), ss / jnp.where(sd > 0, sd, 1.0), 0.0)
+        zeros = jnp.zeros_like(sigl)
+        return {"delta": zeros, "coef": coef, "pout": zeros,
+                "acc": zeros, "emitted": zeros}
+
+    def apply_frontier(self, sg, params, state, merged, ec):
+        f = sg.frontier[:, None]
+        acc = jnp.where(f, state["acc"] + merged, state["acc"])
+        emitted = jnp.where(f, state["pout"], state["emitted"])
+        delta = jnp.where(f, acc, state["delta"])
+        changed = jnp.sum(jnp.any(merged != 0, -1) & sg.frontier,
+                          dtype=jnp.int32)
+        return {"delta": delta, "coef": state["coef"], "pout": state["pout"],
+                "acc": acc, "emitted": emitted}, changed
+
+    def sweep(self, sg, params, state, ec):
+        delta = state["delta"]
+        contrib = state["coef"] * (1.0 + delta[sg.edst])
+        pout = jnp.zeros_like(delta).at[sg.esrc].add(
+            jnp.where(state["coef"] > 0, contrib, 0.0))
+        pout = ec.sum(pout)
+        new = jnp.where(sg.vmask[:, None],
+                        state["acc"] + pout - state["emitted"], delta)
+        changed = jnp.sum(jnp.any(new != delta, -1), dtype=jnp.int32)
+        return {"delta": new, "coef": state["coef"], "pout": pout,
+                "acc": state["acc"], "emitted": state["emitted"]}, changed
+
+    def frontier_out(self, sg, params, state):
+        return jnp.where(sg.frontier[:, None],
+                         state["pout"] - state["emitted"], 0.0)
+
+    def result(self, sg, params, state):
+        return state["delta"]
+
+
+def brandes_betweenness(query: Callable[[VertexProgram, Any], Any],
+                        pivots, undirected: bool = True) -> Dict[str, Any]:
+    """Staged K-pivot Brandes over any engine entry point.
+
+    ``query(program, params)`` must return collected global values ([n] or
+    [n, K]) — e.g. ``lambda p, pp: pg.collect(run(...))`` or a
+    ``GraphSession.query(...).values`` wrapper. Returns the per-stage
+    arrays plus ``bc``: the dependency sum over pivots with the standard
+    v != s exclusion, halved for undirected graphs (each undirected
+    shortest path is seen from both directions)."""
+    pivots = np.asarray(pivots, np.int32)
+    K = int(pivots.shape[0])
+
+    prog, p = make_msbfs(pivots)
+    levels = np.asarray(query(prog, p), np.float32)
+
+    sigma = np.asarray(query(
+        SigmaCount(payload=K),
+        {"pivots": jnp.asarray(pivots), "levels": jnp.asarray(levels)}),
+        np.float32)
+
+    delta = np.asarray(query(
+        BrandesAccum(payload=K),
+        {"levels": jnp.asarray(levels), "sigma": jnp.asarray(sigma)}),
+        np.float32)
+
+    not_pivot = np.arange(levels.shape[0])[:, None] != pivots[None, :]
+    bc = (delta * not_pivot).sum(axis=1)
+    if undirected:
+        bc = bc / 2.0
+    return {"levels": levels, "sigma": sigma, "delta": delta, "bc": bc}

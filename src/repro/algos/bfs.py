@@ -1,0 +1,119 @@
+"""Breadth-First Search levels (Kakwani & Simmhan's first suite member).
+
+BFS is SSSP over unit edge weights: the level of a vertex is the min-plus
+distance where every hop costs 1. Declared as ``SemiringSweep("min_plus",
+"one")`` — the first shipped program to exercise the ``'one'`` edge-value
+map under ``min_plus`` on every edge backend (the COO reference and the
+baked tile layouts add the 1 at the edge; ``engine._edge_messages`` does
+the same for the windowed path).
+
+Levels are float32 with ``inf`` at unreachable vertices: small integer
+levels are exact in f32, and ``inf + 1 == inf`` keeps the unreachable
+sentinel closed under the semiring on every backend (an int32 sentinel
+would wrap under ``+ 1`` on the COO path and clamp on the tiles path —
+two different wrong answers).
+
+``MultiSourceBFS`` batches K root vertices into one launch ([v_max, K]
+values, exactly the MSSP batching shape) — the distance phase of the
+K-pivot Brandes betweenness driver (algos/betweenness.py).
+
+Both are monotone under inserts (new edges only shorten levels), so a
+serving session warm-starts them across insert-only flushes.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.api import DeviceSubgraph, SemiringSweep, VertexProgram
+
+INF = jnp.float32(jnp.inf)
+
+
+@dataclasses.dataclass
+class BFS(VertexProgram):
+    combiner: str = "min"
+    payload: int = 1
+    dtype: object = jnp.float32
+    delta_based: bool = False
+    monotone: bool = True          # levels only tighten under inserts
+    value_key: str = "level"
+
+    # unit-cost min-plus relax: level[d] = min_e level[src(e)] + 1
+    sweep_spec = SemiringSweep("min_plus", "one")
+
+    def init(self, sg: DeviceSubgraph, params, ec):
+        src = params["source"]            # global vertex id (scalar)
+        lvl = jnp.where(sg.vid32 == src, 0.0, INF).astype(jnp.float32)
+        return {"level": jnp.where(sg.vmask, lvl, INF)}
+
+    def apply_frontier(self, sg, params, state, merged, ec):
+        m = merged[:, 0]
+        new = jnp.where(sg.frontier, jnp.minimum(state["level"], m),
+                        state["level"])
+        changed = jnp.sum(new < state["level"], dtype=jnp.int32)
+        return {"level": new}, changed
+
+    def sweep_values(self, sg, params, state):
+        return state["level"]
+
+    def sweep_fold(self, sg, params, state, agg):
+        lvl = state["level"]
+        new = jnp.where(sg.vmask, jnp.minimum(lvl, agg), lvl)
+        changed = jnp.sum(new < lvl, dtype=jnp.int32)
+        return {"level": new}, changed
+
+    def frontier_out(self, sg, params, state):
+        return state["level"][:, None]
+
+    def result(self, sg, params, state):
+        return state["level"]
+
+
+@dataclasses.dataclass
+class MultiSourceBFS(VertexProgram):
+    """K-root BFS in one launch: [v_max, K] levels, min-combined SBS."""
+
+    combiner: str = "min"
+    payload: int = 4               # K roots; set at construction
+    dtype: object = jnp.float32
+    delta_based: bool = False
+    monotone: bool = True
+    value_key: str = "level"
+
+    sweep_spec = SemiringSweep("min_plus", "one")
+
+    def init(self, sg: DeviceSubgraph, params, ec):
+        sources = params["sources"]       # [K] global vertex ids
+        lvl = jnp.where(sg.vid32[:, None] == sources[None, :], 0.0, INF)
+        return {"level": jnp.where(sg.vmask[:, None], lvl, INF)}
+
+    def apply_frontier(self, sg, params, state, merged, ec):
+        new = jnp.where(sg.frontier[:, None],
+                        jnp.minimum(state["level"], merged), state["level"])
+        changed = jnp.sum(jnp.any(new < state["level"], -1), dtype=jnp.int32)
+        return {"level": new}, changed
+
+    def sweep_values(self, sg, params, state):
+        return state["level"]
+
+    def sweep_fold(self, sg, params, state, agg):
+        lvl = state["level"]
+        new = jnp.where(sg.vmask[:, None], jnp.minimum(lvl, agg), lvl)
+        changed = jnp.sum(jnp.any(new < lvl, -1), dtype=jnp.int32)
+        return {"level": new}, changed
+
+    def frontier_out(self, sg, params, state):
+        return state["level"]
+
+    def result(self, sg, params, state):
+        return state["level"]
+
+
+def make_msbfs(sources):
+    """(program, params) for K-root BFS from the given global vertex ids."""
+    sources = np.asarray(sources, np.int32)
+    prog = MultiSourceBFS(payload=int(sources.shape[0]))
+    return prog, {"sources": jnp.asarray(sources)}

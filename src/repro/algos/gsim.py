@@ -20,6 +20,7 @@ State: ``sim [v_max, VQ]`` membership, ``post [v_max, VQ]`` effective counts
 from __future__ import annotations
 
 import dataclasses
+from typing import ClassVar, Tuple
 
 import jax.numpy as jnp
 
@@ -28,6 +29,9 @@ from repro.core.api import DeviceSubgraph, VertexProgram
 
 @dataclasses.dataclass
 class GraphSimulation(VertexProgram):
+    # label-indexed joins per edge: COO gather/scatter only
+    supports_edge_backends: ClassVar[Tuple[str, ...]] = ("coo",)
+
     combiner: str = "sum"
     payload: int = 1          # set to |V_Q| at construction
     dtype: object = jnp.int32

@@ -1,0 +1,116 @@
+"""k-core decomposition (fixed k): iterative peel with frontier re-election.
+
+The k-core of a graph is the maximal subgraph where every vertex keeps
+degree >= k; it is computed by repeatedly peeling vertices of degree < k
+until none remain. Subgraph-centrically (GoFFish's formulation) each
+partition peels to a *local* fixed point per superstep, exchanging degree
+*decrements* for replicated frontier vertices — the same
+post/pending/nsync bookkeeping as graph simulation (algos/gsim.py):
+
+  post     last-synced global degree + this replica's un-synced decrements
+  pending  decrements accumulated since the last SBS sync (sum-combined)
+  nsync    frontier degree counts are only globally valid after one sync
+
+Degrees count a vertex's stored out-edges whose destination is still
+un-peeled (graphs stored undirected — both directions present — make this
+the undirected degree; self-loops count until the vertex itself peels).
+Between syncs a frontier replica's ``post`` is an upper bound on the true
+degree (it has seen only its own local decrements), so ``post < k`` can
+only fire *late*, never wrongly — replicas may peel a vertex in different
+supersteps but each local edge is decremented exactly once globally.
+
+The peel is monotone under DELETES (``warm_under = "deletes"``): removing
+edges only shrinks the core, so a vertex peeled before stays peeled.
+``result`` therefore reports a *peeled* flag (1 = out of the core) whose
+sum-combiner identity 0 means "no information": a warm block re-kills the
+previously peeled set in the first local sweep (``must``), letting the
+ordinary decrement machinery rebuild every degree without a dedicated
+edge reduction in ``warm_init`` — and an identity-filled cold block is a
+no-op by construction.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import ClassVar, Tuple
+
+import jax.numpy as jnp
+
+from repro.core.api import DeviceSubgraph, VertexProgram
+
+
+@dataclasses.dataclass
+class KCore(VertexProgram):
+    # per-edge alive-gated counting: COO gather/scatter only
+    supports_edge_backends: ClassVar[Tuple[str, ...]] = ("coo",)
+    warm_under: ClassVar[str] = "deletes"
+
+    combiner: str = "sum"
+    payload: int = 2            # lane 0: decrement sum; lane 1: sync marker
+    dtype: object = jnp.int32
+    delta_based: bool = True
+    monotone: bool = True       # peeled flags only grow under deletes
+    value_key: str = "peeled"
+    k: int = 2
+
+    def _dec_to_src(self, sg: DeviceSubgraph, removed, ec):
+        """Degree decrements: one per local out-edge into a just-peeled
+        destination, summed at the edge's source row."""
+        contrib = jnp.where(sg.emask, removed.astype(jnp.int32)[sg.edst], 0)
+        dec = jnp.zeros((sg.v_max,), jnp.int32).at[sg.esrc].add(contrib)
+        return ec.sum(dec)
+
+    def init(self, sg: DeviceSubgraph, params, ec):
+        ldeg = jnp.zeros((sg.v_max,), jnp.int32).at[sg.esrc].add(
+            sg.emask.astype(jnp.int32))
+        ldeg = ec.sum(ldeg)
+        return {"alive": sg.vmask, "post": ldeg, "pending": ldeg,
+                "must": jnp.zeros((sg.v_max,), bool), "nsync": jnp.int32(0)}
+
+    def warm_init(self, sg, params, state, warm):
+        peeled = warm if warm.ndim == 1 else warm[..., 0]
+        state = dict(state)
+        state["must"] = (peeled > 0) & sg.vmask
+        return state
+
+    def apply_frontier(self, sg, params, state, merged, ec):
+        f = sg.frontier
+        m = merged[:, 0]
+        post = jnp.where(f, state["post"] - state["pending"] + m,
+                         state["post"])
+        pending = jnp.where(f, 0, state["pending"])
+        changed = jnp.sum((m != 0) & f, dtype=jnp.int32)
+        return {"alive": state["alive"], "post": post, "pending": pending,
+                "must": state["must"], "nsync": state["nsync"] + 1}, changed
+
+    def sweep(self, sg, params, state, ec):
+        alive, post, pending = state["alive"], state["post"], state["pending"]
+        valid = sg.internal | (state["nsync"] >= 1)
+        removed = alive & sg.vmask & \
+            (state["must"] | (valid & (post < jnp.int32(self.k))))
+        alive = alive & ~removed
+        dec = self._dec_to_src(sg, removed, ec)
+        changed = jnp.sum(removed, dtype=jnp.int32)
+        return {"alive": alive, "post": post - dec, "pending": pending - dec,
+                "must": state["must"] & ~removed,
+                "nsync": state["nsync"]}, changed
+
+    def frontier_out(self, sg, params, state):
+        # lane 1 is nonzero exactly until the first sync: a replica whose
+        # local degree cancels to zero before any exchange (a star hub
+        # losing every local leaf in superstep one) must still emit once,
+        # or no sync ever happens and the ``nsync`` validity gate that
+        # allows ``post < k`` to fire on frontier rows never opens
+        need = sg.frontier & (state["nsync"] == 0)
+        return jnp.stack([jnp.where(sg.frontier, state["pending"], 0),
+                          need.astype(jnp.int32)], axis=-1)
+
+    def result(self, sg, params, state):
+        """1 = peeled out of the k-core, 0 = still in it."""
+        return (sg.vmask & ~state["alive"]).astype(jnp.int32)
+
+
+def make_kcore(k: int):
+    """(program, params) for the fixed-k peel."""
+    if k < 1:
+        raise ValueError(f"k={k}: the k-core peel needs k >= 1")
+    return KCore(k=k), {}

@@ -1,0 +1,107 @@
+"""Label propagation / community detection, hop-stratified and confluent.
+
+Classic LPA adopts the *most frequent* neighbour label with random
+tie-breaks — a per-vertex histogram that neither fits the [v_max, K]
+exchange model nor yields deterministic cross-backend parity. The
+subgraph-centric formulation used here (the deterministic variant of the
+GoFFish/Kakwani suite) is hop-bounded minimum-label propagation: every
+vertex adopts the smallest vertex id reachable within ``hops`` edges, so
+communities are balls around local id-minima and ties cannot occur.
+
+A single packed (label, hop) min-code does NOT compute this: the target
+``min id within h hops`` at a vertex can depend on a *transient* code a
+neighbour held before its own minimum improved to something whose hop
+budget is already spent — the packed fixpoint is evaluation-order
+dependent, and the engine's SC mode (asynchronous per-partition local
+fixpoints) legitimately visits different orders than VC mode or a
+synchronous oracle. The confluent formulation keeps one lane per hop
+budget, ``payload = hops + 1``:
+
+    lane_h(v) = min id within h hops of v
+              = min(v, min over in-neighbours u of lane_{h-1}(u))
+
+The system is *stratified* — lane h only reads lane h-1 — and each lane
+is a plain monotone min fixpoint, so chaotic iteration converges to the
+same unique answer under any fair schedule (SC, VC, any partitioning).
+The community label is the last lane. The lane-shifted edge map (lane h
+of the message is the source's lane h-1) does not fit ``SemiringSweep``'s
+declarative per-edge values, so this is a hand-rolled COO sweep
+(``supports_edge_backends = ("coo",)``) exercising the custom-sweep
+fallback seam.
+
+Monotone under inserts: new edges only shrink distances, so every lane
+only decreases — warm-startable after insert-only flushes
+(``value_key = "lanes"``). Use ``make_lp()`` to construct and
+``decode_labels()`` to project community ids from collected lanes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import ClassVar, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.api import DeviceSubgraph, VertexProgram
+
+_IMAX = 2**31 - 1
+
+
+@dataclasses.dataclass
+class LabelPropagation(VertexProgram):
+    # lane-shifted per-edge map: COO gather/scatter only
+    supports_edge_backends: ClassVar[Tuple[str, ...]] = ("coo",)
+
+    combiner: str = "min"
+    payload: int = 4            # hops + 1 lanes; keep in sync with hops
+    dtype: object = jnp.int32
+    delta_based: bool = False
+    monotone: bool = True       # lanes only decrease -> warm-startable
+    value_key: str = "lanes"
+    hops: int = 3               # propagation radius L
+
+    def __post_init__(self):
+        self.payload = self.hops + 1
+
+    def init(self, sg: DeviceSubgraph, params, ec):
+        lanes = jnp.where(sg.vmask[:, None],
+                          sg.vid32[:, None].astype(jnp.int32), _IMAX)
+        return {"lanes": jnp.broadcast_to(
+            lanes, (sg.vmask.shape[0], self.payload)).astype(jnp.int32)}
+
+    def apply_frontier(self, sg, params, state, merged, ec):
+        new = jnp.where(sg.frontier[:, None],
+                        jnp.minimum(state["lanes"], merged), state["lanes"])
+        changed = jnp.sum(jnp.any(new < state["lanes"], -1), dtype=jnp.int32)
+        return {"lanes": new}, changed
+
+    def sweep(self, sg, params, state, ec):
+        lanes = state["lanes"]
+        # message lane h carries the source's lane h-1; lane 0 never moves
+        prev = jnp.where(sg.emask[:, None], lanes[sg.esrc, :-1], _IMAX)
+        cand = jnp.concatenate(
+            [jnp.full(prev[:, :1].shape, _IMAX, jnp.int32), prev], axis=1)
+        agg = jnp.full(lanes.shape, _IMAX, jnp.int32).at[sg.edst].min(cand)
+        agg = ec.min(agg)
+        new = jnp.where(sg.vmask[:, None], jnp.minimum(lanes, agg), lanes)
+        changed = jnp.sum(jnp.any(new < lanes, -1), dtype=jnp.int32)
+        return {"lanes": new}, changed
+
+    def frontier_out(self, sg, params, state):
+        return state["lanes"]
+
+    def result(self, sg, params, state):
+        return state["lanes"]
+
+
+def make_lp(hops: int = 3):
+    """(program, params) for hop-bounded min-label propagation."""
+    if hops < 1:
+        raise ValueError(f"hops={hops}: the propagation radius must be >= 1")
+    return LabelPropagation(hops=hops), {}
+
+
+def decode_labels(lanes):
+    """Community ids from collected lanes: the full-radius lane (IMAX
+    padding rows stay IMAX)."""
+    return np.asarray(lanes)[..., -1].astype(np.int32)

@@ -9,6 +9,7 @@ natural consumer of the model-axis feature parallelism (DESIGN.md §2).
 from __future__ import annotations
 
 import dataclasses
+from typing import ClassVar, Tuple
 
 import jax.numpy as jnp
 
@@ -19,6 +20,9 @@ INF = jnp.float32(jnp.inf)
 
 @dataclasses.dataclass
 class MultiSourceSSSP(VertexProgram):
+    # hand-rolled sweep: implements the COO gather/scatter path only
+    supports_edge_backends: ClassVar[Tuple[str, ...]] = ("coo",)
+
     combiner: str = "min"
     payload: int = 4            # K sources; set at construction
     dtype: object = jnp.float32

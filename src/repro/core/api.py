@@ -214,6 +214,27 @@ class VertexProgram:
     monotone: bool = False
     value_key: Optional[str] = None
 
+    # Which delta polarity preserves monotonicity (and therefore warm-start
+    # soundness). ``'inserts'``: adding edges only tightens values (SSSP/CC/
+    # BFS/LP — any deletion invalidates warm state). ``'deletes'``: removing
+    # edges only tightens values (the k-core peel: edges can only disappear
+    # from a vertex's support, so previously-peeled vertices stay peeled —
+    # any insertion invalidates warm state). A serving session keeps a warm
+    # entry across a flush only when every applied op matches the program's
+    # polarity (session.py `_on_flush`); the low-level engines trust the
+    # caller (`run_sim(init_state=...)` docs).
+    warm_under: ClassVar[str] = "inserts"
+
+    # Edge-compute backends this program's ``sweep`` can run on. ``None``
+    # (the default) means "derive from the sweep kind": declarative
+    # ``sweep_spec`` programs support every backend (the engine generates
+    # their product); programs that *override* ``sweep`` must declare the
+    # backends their hand-rolled code actually implements — today that is
+    # ``("coo",)`` for all shipped custom sweeps — or
+    # ``engine.resolve_edge_backend`` refuses to run them at all rather
+    # than silently routing them onto a backend they ignore.
+    supports_edge_backends: ClassVar[Optional[Tuple[str, ...]]] = None
+
     # -------------------------------------------------------------- #
     def init(self, sg: DeviceSubgraph, params: Any, ec: Any) -> Any:
         """Build per-partition state. ``ec`` is the EdgeCombine context for

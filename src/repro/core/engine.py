@@ -194,10 +194,35 @@ def _device_subgraph(pg: PartitionedGraph) -> DeviceSubgraph:
 # device layouts built by core.layouts (interpret mode off-TPU).
 # --------------------------------------------------------------------------- #
 def resolve_edge_backend(program: VertexProgram, cfg: EngineConfig) -> str:
-    """The backend this (program, config) pair actually runs: programs
-    without a ``sweep_spec`` (gsim, MSSP) always take the COO path — their
-    hand-rolled ``sweep`` *is* the computation, there is nothing to swap."""
-    return "coo" if program.sweep_spec is None else cfg.edge_backend
+    """The backend this (program, config) pair actually runs.
+
+    Declarative ``sweep_spec`` programs run on whatever
+    ``cfg.edge_backend`` asks for — the engine generates their product.
+    Programs that override ``sweep`` declare the backends their hand-rolled
+    code implements via the ``supports_edge_backends`` class attribute
+    (today ``("coo",)`` for every shipped custom sweep); when the requested
+    backend is unsupported they fall back to the first declared one so a
+    session can serve a mixed program suite under one config. A custom
+    sweep that declares nothing is refused outright: silently running it
+    on an arbitrary backend it ignores is exactly the bug class this
+    resolution step exists to prevent."""
+    declared = program.supports_edge_backends
+    if declared is not None:
+        allowed = EngineConfig._EDGE_BACKENDS
+        unknown = tuple(b for b in declared if b not in allowed)
+        if unknown or not declared:
+            raise ValueError(
+                f"{type(program).__name__}.supports_edge_backends={declared!r}"
+                f" contains unknown backends {unknown!r}; allowed values are "
+                f"{allowed}")
+        return cfg.edge_backend if cfg.edge_backend in declared else declared[0]
+    if program.sweep_spec is not None:
+        return cfg.edge_backend           # generated product: any backend
+    raise ValueError(
+        f"{type(program).__name__} overrides sweep but does not declare "
+        "supports_edge_backends: a hand-rolled sweep must name the edge "
+        "backends it implements (e.g. supports_edge_backends = ('coo',)) "
+        "so the engine cannot silently route it onto a backend it ignores")
 
 
 def _tile_product(blk: TileBlock, vals, spec: SemiringSweep, v_max: int):
@@ -245,7 +270,12 @@ def _edge_messages(spec: SemiringSweep, vals, esrc, ew):
         return sv + ev if spec.semiring == "min_plus" else sv * ev
     if spec.edge_values == "zero":
         return sv if spec.semiring == "min_plus" else jnp.zeros_like(sv)
-    return sv                        # 'one': + 0 / * 1 are both identities
+    # 'one': * 1 is the identity, but + 1 is NOT — min_plus over unit edge
+    # values is hop counting (BFS levels). The COO reference and the baked
+    # tile layouts (layouts._edge_values) both add the 1; returning ``sv``
+    # here would make the windowed backend count every hop as free.
+    return sv + jnp.asarray(1, vals.dtype) if spec.semiring == "min_plus" \
+        else sv
 
 
 def _window_product(blk: WindowBlock, vals, spec: SemiringSweep, v_max: int,

@@ -135,12 +135,19 @@ class _WarmEntry:
     layout) is the fast path — valid at ``device_epoch`` of the session's
     remap log: insert-only flushes and compactions do NOT eagerly remap it,
     they append to the log, and the pending chain is applied here on the
-    entry's next use (``GraphSession._sync_warm_entry``)."""
+    entry's next use (``GraphSession._sync_warm_entry``).
+
+    ``polarity`` is the program's ``warm_under`` declaration: the delta
+    polarity this entry survives (``'inserts'``: SSSP/CC/BFS/LP results
+    stay valid upper bounds while edges only appear; ``'deletes'``: the
+    k-core peel stays valid while edges only disappear). ``_on_flush``
+    drops exactly the entries whose polarity the applied patch violated."""
     global_values: np.ndarray
     device_block: Optional[np.ndarray]
     identity: Any
     supersteps: int
     device_epoch: int = 0
+    polarity: str = "inserts"
 
     @property
     def nbytes(self) -> int:
@@ -1063,7 +1070,8 @@ class GraphSession:
         self._warm[wkey] = _WarmEntry(
             global_values=pg.collect(res, fill=program.identity),
             device_block=blk, identity=program.identity,
-            supersteps=supersteps, device_epoch=self._warm_epoch)
+            supersteps=supersteps, device_epoch=self._warm_epoch,
+            polarity=program.warm_under)
         self._warm.move_to_end(wkey)
         self._evict_lru(self._warm, self.max_warm_entries, "warm_evictions",
                         max_bytes=self.max_warm_bytes)
@@ -1117,8 +1125,14 @@ class GraphSession:
     def _on_flush(self, st: DeltaStats) -> None:
         self._host_version += 1
         self.stats.flushes += 1
-        if st.warm_start_safe:
-            # insert-only growth: previous results stay valid upper bounds.
+        # A warm entry survives a flush only when the applied patch matches
+        # its program's declared polarity (VertexProgram.warm_under):
+        # 'inserts' entries survive insert-only patches (no delete was even
+        # attempted — the historical warm_start_safe bit), 'deletes' entries
+        # survive patches that added no edge. Membership is grow-only under
+        # both, so one shared remap log serves whichever side survives.
+        keep = {"inserts": st.warm_start_safe, "deletes": st.n_added == 0}
+        if any(keep.values()):
             # Local rows reshuffle (and v_max may cross a bucket), but the
             # remap is only LOGGED here — each warm entry replays the
             # pending chain on its next use (_sync_warm_entry), so a flush
@@ -1126,12 +1140,14 @@ class GraphSession:
             # never queried again never pay at all.
             self._warm_epoch += 1
             self._remap_log.append((self._warm_epoch, st))
-            self._prune_remap_log()
-        else:
-            # deletions can loosen values: nothing cached is sound anymore
-            self._warm.clear()
-            self._remap_log.clear()
-            self._sync_warm_bytes()
+        if not all(keep.values()):
+            # the patch loosened values for the other polarity: those
+            # cached results are not sound anymore
+            for wkey in [k for k, e in self._warm.items()
+                         if not keep.get(e.polarity, False)]:
+                del self._warm[wkey]
+        self._prune_remap_log()
+        self._sync_warm_bytes()
         self._evict_stale_runners()
         # streaming churn drives the load monitor; under rebalance="auto" a
         # tripped hysteresis gauge migrates right here, before the flush's

@@ -1,0 +1,396 @@
+"""Differential test harness for the algorithm suite.
+
+One registration per algorithm (an ``AlgoCase`` appended to ``ALGOS``)
+buys every check family the suite runs:
+
+  - **oracle parity** — engine results vs a tiny numpy reference, over
+    hypothesis-drawn power-law graphs plus the pathological zoo (stars,
+    chains, multi-component graphs, self-loops, duplicate edges);
+  - **backend equivalence** — identical results across
+    ``edge_backend='coo' | 'pallas_tiles' | 'pallas_windows'`` (custom
+    sweeps resolve to their declared backend — the check then pins that
+    the resolution itself is equivalent, not silent divergence);
+  - **fresh-vs-incremental parity** — a ``GraphSession`` streaming a
+    randomized delta schedule of the program's ``warm_under`` polarity,
+    asserting warm answers are bit-identical to cold recomputes and never
+    take more supersteps;
+  - **sim-vs-shard_map** — via ``run_case_shard`` inside the multi-device
+    subprocess driven by tests/test_algo_suite.py.
+
+Registering a new algorithm:
+
+    ALGOS.append(AlgoCase(
+        name="myalgo",
+        make=lambda g: (MyProgram(), {}),          # program + params
+        oracle=my_numpy_oracle,                    # Graph -> [n(,K)]
+        fill=<collect fill for non-master rows>,
+    ))
+
+``make`` receives the *canonical* graph (simple + undirected unless
+``canonical=False``) so K-payload programs can pick pivots from
+``g.n_vertices``. Set ``exact=False`` for float sum-combined programs
+whose cross-backend reductions legitimately reorder.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import EngineConfig, partition_and_build, run_sim
+from repro.core.graph import Graph
+from repro.graphgen import powerlaw_graph
+from repro.session import GraphSession
+from repro.algos import (BFS, KCore, LabelPropagation, SigmaCount,
+                         BrandesAccum, make_msbfs, make_triangles)
+
+_IMAX = 2**31 - 1
+
+# DRONE_HARNESS_FAST=1 (the CI algo-suite job) caps the drawn-example and
+# delta-chunk counts so the whole suite stays inside a smoke budget.
+FAST = bool(os.environ.get("DRONE_HARNESS_FAST"))
+MAX_EXAMPLES = 2 if FAST else 4
+
+
+# --------------------------------------------------------------------- #
+# registry
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass
+class AlgoCase:
+    """One algorithm's registration with the differential harness."""
+    name: str
+    make: Callable[[Graph], Tuple[Any, Dict[str, Any]]]
+    oracle: Callable[[Graph], np.ndarray]
+    fill: Any
+    exact: bool = True            # bit-identical vs allclose comparisons
+    canonical: bool = True        # oracle semantics need simple+undirected
+
+    def compare(self, got, want) -> bool:
+        got, want = np.asarray(got), np.asarray(want)
+        if self.exact:
+            return bool(np.array_equal(got, want, equal_nan=True))
+        return bool(np.allclose(got, want, rtol=1e-5, atol=1e-5))
+
+
+def canonicalize(g: Graph) -> Graph:
+    """Simple undirected form: no self-loops, no duplicates, both edge
+    directions stored — the domain every suite oracle is defined on."""
+    return g.drop_self_loops().dedup().as_undirected()
+
+
+def build(g: Graph, n_parts: int = 4, part: str = "cdbh"):
+    return partition_and_build(g, n_parts, part)
+
+
+# --------------------------------------------------------------------- #
+# graph generators: power-law + the pathological zoo
+# --------------------------------------------------------------------- #
+def harness_powerlaw(n: int, seed: int) -> Graph:
+    return canonicalize(powerlaw_graph(n, seed=seed))
+
+
+def pathological_graphs() -> List[Tuple[str, Graph]]:
+    """Canonicalized adversarial shapes, each a historical engine bug
+    class: hubs (star), deep diameter (chain), multiple components,
+    self-loops and duplicate edges (must vanish in canonical form),
+    and a dense clique (triangle-heavy)."""
+    out: List[Tuple[str, Graph]] = []
+
+    hub = np.zeros(19, np.int64)
+    leaves = np.arange(1, 20, dtype=np.int64)
+    out.append(("star", canonicalize(Graph(20, hub, leaves))))
+
+    chain = np.arange(23, dtype=np.int64)
+    out.append(("chain", canonicalize(Graph(24, chain, chain + 1))))
+
+    s = np.concatenate([np.zeros(7, np.int64), np.full(7, 10, np.int64)])
+    d = np.concatenate([np.arange(1, 8), np.arange(11, 18)]).astype(np.int64)
+    out.append(("two_components", canonicalize(Graph(20, s, d))))
+
+    s = np.array([0, 0, 1, 1, 1, 2, 3, 3, 4], np.int64)
+    d = np.array([0, 1, 1, 2, 2, 3, 3, 0, 4], np.int64)
+    out.append(("loops_and_dups", canonicalize(Graph(6, s, d))))
+
+    k = 6
+    s, d = np.meshgrid(np.arange(k, dtype=np.int64),
+                       np.arange(k, dtype=np.int64))
+    m = s.ravel() != d.ravel()
+    out.append(("clique", canonicalize(Graph(k, s.ravel()[m], d.ravel()[m]))))
+    return out
+
+
+# --------------------------------------------------------------------- #
+# numpy oracles
+# --------------------------------------------------------------------- #
+def bfs_levels_oracle(g: Graph, source: int = 0) -> np.ndarray:
+    lvl = np.full(g.n_vertices, np.inf)
+    if g.n_vertices:
+        lvl[source] = 0.0
+    for _ in range(g.n_vertices):
+        new = lvl.copy()
+        np.minimum.at(new, g.dst, lvl[g.src] + 1.0)
+        if np.array_equal(new, lvl):
+            break
+        lvl = new
+    return lvl.astype(np.float32)
+
+
+def msbfs_oracle(g: Graph, sources) -> np.ndarray:
+    return np.stack([bfs_levels_oracle(g, s) for s in sources], axis=1)
+
+
+def lp_lanes_oracle(g: Graph, hops: int) -> np.ndarray:
+    """[n, hops+1] — lane h is the smallest vertex id within h hops."""
+    ids = np.arange(g.n_vertices, dtype=np.int32)
+    lanes = [ids]
+    for _ in range(hops):
+        new = ids.copy()
+        np.minimum.at(new, g.dst, lanes[-1][g.src])
+        lanes.append(new)
+    return np.stack(lanes, axis=1)
+
+
+def kcore_peeled_oracle(g: Graph, k: int) -> np.ndarray:
+    alive = np.ones(g.n_vertices, bool)
+    while True:
+        deg = np.zeros(g.n_vertices, np.int64)
+        np.add.at(deg, g.src, alive[g.dst].astype(np.int64))
+        kill = alive & (deg < k)
+        if not kill.any():
+            break
+        alive &= ~kill
+    return (~alive).astype(np.int32)
+
+
+def triangles_oracle(g: Graph, pivots) -> np.ndarray:
+    """Per-vertex [K] summands of diag(A^3): y_p * z_p."""
+    n = g.n_vertices
+    A = np.zeros((n, n), np.float32)
+    A[g.src, g.dst] = 1.0
+    cols = []
+    for p in pivots:
+        x = np.zeros(n, np.float32)
+        x[p] = 1.0
+        y = A.T @ x
+        z = A.T @ y
+        cols.append(y * z)
+    return np.stack(cols, axis=1)
+
+
+def brandes_oracle(g: Graph, pivots):
+    """(levels, sigma, delta), each [n, K], by textbook Brandes."""
+    from collections import deque
+    n = g.n_vertices
+    adj: List[List[int]] = [[] for _ in range(n)]
+    for s, d in zip(g.src.tolist(), g.dst.tolist()):
+        adj[s].append(d)
+    levels = np.full((n, len(pivots)), np.inf, np.float32)
+    sigma = np.zeros((n, len(pivots)), np.float32)
+    delta = np.zeros((n, len(pivots)), np.float32)
+    for ki, s in enumerate(pivots):
+        dist = np.full(n, -1, np.int64)
+        sig = np.zeros(n)
+        dist[s] = 0
+        sig[s] = 1.0
+        order: List[int] = []
+        q = deque([s])
+        while q:
+            v = q.popleft()
+            order.append(v)
+            for w in adj[v]:
+                if dist[w] < 0:
+                    dist[w] = dist[v] + 1
+                    q.append(w)
+                if dist[w] == dist[v] + 1:
+                    sig[w] += sig[v]
+        dl = np.zeros(n)
+        for v in reversed(order):
+            for w in adj[v]:
+                if dist[w] == dist[v] + 1:
+                    dl[v] += sig[v] / sig[w] * (1.0 + dl[w])
+        levels[:, ki] = np.where(dist < 0, np.inf, dist)
+        sigma[:, ki] = sig
+        delta[:, ki] = dl
+    return levels, sigma, delta
+
+
+def _pivots(g: Graph, k: int = 4) -> np.ndarray:
+    n = max(g.n_vertices, 1)
+    return np.unique(np.array([0, n // 3, n // 2, n - 1][:k]) % n)
+
+
+# --------------------------------------------------------------------- #
+# the suite registry (one ~10-line entry per algorithm)
+# --------------------------------------------------------------------- #
+def _sigma_case_make(g: Graph):
+    import jax.numpy as jnp
+    pv = _pivots(g)
+    lev, _, _ = brandes_oracle(g, pv)
+    return SigmaCount(payload=len(pv)), {
+        "pivots": jnp.asarray(pv, jnp.int32), "levels": jnp.asarray(lev)}
+
+
+def _accum_case_make(g: Graph):
+    import jax.numpy as jnp
+    pv = _pivots(g)
+    lev, sig, _ = brandes_oracle(g, pv)
+    return BrandesAccum(payload=len(pv)), {"levels": jnp.asarray(lev),
+                                           "sigma": jnp.asarray(sig)}
+
+
+ALGOS: List[AlgoCase] = [
+    AlgoCase(name="bfs",
+             make=lambda g: (BFS(), {"source": 0}),
+             oracle=lambda g: bfs_levels_oracle(g, 0),
+             fill=np.inf),
+    AlgoCase(name="msbfs",
+             make=lambda g: make_msbfs(_pivots(g)),
+             oracle=lambda g: msbfs_oracle(g, _pivots(g)),
+             fill=np.inf),
+    AlgoCase(name="lp",
+             make=lambda g: (LabelPropagation(hops=3), {}),
+             oracle=lambda g: lp_lanes_oracle(g, 3),
+             fill=_IMAX),
+    AlgoCase(name="kcore2",
+             make=lambda g: (KCore(k=2), {}),
+             oracle=lambda g: kcore_peeled_oracle(g, 2),
+             fill=0),
+    AlgoCase(name="kcore3",
+             make=lambda g: (KCore(k=3), {}),
+             oracle=lambda g: kcore_peeled_oracle(g, 3),
+             fill=0),
+    AlgoCase(name="triangles",
+             make=lambda g: make_triangles(_pivots(g)),
+             oracle=lambda g: triangles_oracle(g, _pivots(g)),
+             fill=0.0, exact=False),
+    AlgoCase(name="sigma",
+             make=_sigma_case_make,
+             oracle=lambda g: brandes_oracle(g, _pivots(g))[1],
+             fill=0.0, exact=False),
+    AlgoCase(name="brandes_delta",
+             make=_accum_case_make,
+             oracle=lambda g: brandes_oracle(g, _pivots(g))[2],
+             fill=0.0, exact=False),
+]
+
+
+def case_by_name(name: str) -> AlgoCase:
+    for c in ALGOS:
+        if c.name == name:
+            return c
+    raise KeyError(name)
+
+
+# --------------------------------------------------------------------- #
+# check families
+# --------------------------------------------------------------------- #
+def check_oracle(case: AlgoCase, g: Graph, *, n_parts: int = 4,
+                 part: str = "cdbh", mode: str = "sc",
+                 edge_backend: str = "coo") -> None:
+    g = canonicalize(g) if case.canonical else g
+    pg = build(g, n_parts, part)
+    prog, params = case.make(g)
+    res, _ = run_sim(prog, pg, params, EngineConfig(mode=mode,
+                                                    edge_backend=edge_backend))
+    got = pg.collect(res, fill=case.fill)
+    want = case.oracle(g)
+    assert case.compare(got, want), \
+        f"{case.name}: engine != oracle on n={g.n_vertices} ({part}/{mode})"
+
+
+def check_backend_equivalence(case: AlgoCase, g: Graph, *,
+                              n_parts: int = 4, part: str = "cdbh") -> None:
+    """Identical answers whatever ``edge_backend`` the config requests —
+    real three-way parity for declarative programs, resolution-stability
+    for custom sweeps (which all normalize onto their declared backend)."""
+    g = canonicalize(g) if case.canonical else g
+    pg = build(g, n_parts, part)
+    prog, params = case.make(g)
+    ref = None
+    for eb in ("coo", "pallas_tiles", "pallas_windows"):
+        res, _ = run_sim(prog, pg, params,
+                         EngineConfig(mode="sc", edge_backend=eb))
+        got = pg.collect(res, fill=case.fill)
+        if ref is None:
+            ref = got
+        else:
+            assert case.compare(got, ref), \
+                f"{case.name}: edge_backend={eb} diverges from coo"
+
+
+def _drop_pairs(g: Graph, pairs: set) -> Graph:
+    keep = np.array([(s, d) not in pairs and (d, s) not in pairs
+                     for s, d in zip(g.src.tolist(), g.dst.tolist())])
+    return Graph(g.n_vertices, g.src[keep], g.dst[keep],
+                 None if g.weight is None else g.weight[keep],
+                 directed=g.directed)
+
+
+def _undirected_pairs(g: Graph) -> List[Tuple[int, int]]:
+    return sorted({(min(s, d), max(s, d))
+                   for s, d in zip(g.src.tolist(), g.dst.tolist())})
+
+
+def check_fresh_vs_incremental(case: AlgoCase, g: Graph, *, seed: int = 0,
+                               n_chunks: int = 2, n_parts: int = 4,
+                               part: str = "cdbh") -> None:
+    """Stream a randomized delta schedule of the program's ``warm_under``
+    polarity through a ``GraphSession``; after every flush the warm="auto"
+    answer must be bit-identical to a forced cold recompute and use no
+    more supersteps."""
+    g = canonicalize(g) if case.canonical else g
+    prog, _ = case.make(g)
+    assert prog.monotone, f"{case.name} is not monotone; no incremental path"
+    rng = np.random.default_rng(seed)
+    pairs = _undirected_pairs(g)
+    n_move = max(1, len(pairs) // 5)
+    moved = [pairs[i] for i in rng.choice(len(pairs), n_move, replace=False)]
+    chunks = [moved[i::n_chunks] for i in range(n_chunks)]
+    chunks = [c for c in chunks if c]
+
+    if prog.warm_under == "inserts":
+        base = _drop_pairs(g, set(moved))
+    else:
+        base = g
+    sess = GraphSession.from_graph(base, n_parts, part)
+    try:
+        prog, params = case.make(g)     # pivots etc from the FULL graph
+        sess.query(prog, params)        # seed the warm memory
+        for chunk in chunks:
+            s = np.array([p[0] for p in chunk] + [p[1] for p in chunk],
+                         np.int64)
+            d = np.array([p[1] for p in chunk] + [p[0] for p in chunk],
+                         np.int64)
+            if prog.warm_under == "inserts":
+                sess.update(adds=(s, d, np.ones(len(s), np.float32)))
+            else:
+                sess.update(deletes=(s, d))
+            sess.flush()
+            res_w, st_w = sess.query(prog, params, warm=True)
+            res_c, st_c = sess.query(prog, params, warm=False,
+                                     use_result_cache=False)
+            got_w = sess.pg.collect(res_w, fill=case.fill)
+            got_c = sess.pg.collect(res_c, fill=case.fill)
+            assert np.array_equal(got_w, got_c, equal_nan=True), \
+                f"{case.name}: warm result != cold recompute after flush"
+            assert st_w.supersteps <= st_c.supersteps, \
+                (f"{case.name}: warm start took {st_w.supersteps} supersteps"
+                 f" vs {st_c.supersteps} cold")
+    finally:
+        sess.close()
+
+
+def run_case_all(case_name: str, g: Graph, *, mode: str = "sc",
+                 n_parts: int = 4, part: str = "cdbh",
+                 edge_backend: str = "coo"):
+    """(collected values, supersteps) — helper the shard-parity subprocess
+    shares with in-process tests so both sides run the same code path."""
+    case = case_by_name(case_name)
+    g = canonicalize(g) if case.canonical else g
+    pg = build(g, n_parts, part)
+    prog, params = case.make(g)
+    res, st = run_sim(prog, pg, params,
+                      EngineConfig(mode=mode, edge_backend=edge_backend))
+    return pg.collect(res, fill=case.fill), st.supersteps

@@ -1,0 +1,110 @@
+"""Online rebalancing under the new algorithm workloads: a mid-stream
+``plan_rebalance``/migration must preserve query answers bit-identically
+for BFS and k-core, and their warm state must survive the layout-only
+remap — including k-core's delete-polarity entries, since a migration
+moves edges without changing the graph (mirrors test_rebalance.py's
+session lifecycle pins for SSSP)."""
+import numpy as np
+import pytest
+
+import harness
+from repro.algos import BFS, make_kcore
+from repro.core import build_partitioned_graph, partition_metrics
+from repro.graphgen import powerlaw_graph
+from repro.partition.rebalance import plan_rebalance
+from repro.session import GraphSession
+from repro.stream.ingest import StreamContext
+
+
+def _skewed_session(n_v=900, P=4, hot=0.7, seed=5):
+    g = harness.canonicalize(
+        powerlaw_graph(n_v, alpha=2.2, avg_degree=6, seed=seed))
+    E = g.src.size
+    idx = np.arange(E)
+    part = np.where(idx % 10 < int(hot * 10), 0,
+                    idx % (P - 1) + 1).astype(np.int32)
+    pg = build_partitioned_graph(g, part, P)
+    ctx = StreamContext("rh-vc", P, 0, g.n_vertices,
+                        np.zeros(g.n_vertices, np.int64))
+    return g, GraphSession(pg, ctx=ctx, rebalance="manual")
+
+
+@pytest.mark.parametrize("maker", [lambda: (BFS(), {"source": 0}),
+                                   lambda: make_kcore(2)],
+                         ids=["bfs", "kcore"])
+def test_rebalance_query_parity_and_warm_survival(maker):
+    g, sess = _skewed_session()
+    try:
+        prog, params = maker()
+        cold, st0 = sess.query(prog, params, warm=False)
+        before = np.asarray(sess.pg.collect(cold, fill=0))
+        plan = plan_rebalance(sess.pg, target=1.0)
+        assert plan.n_moves > 0, "skewed by construction"
+        rs = sess.rebalance(target=1.0)
+        assert rs is not None and rs.n_moved > 0
+        assert partition_metrics(sess.pg).imbalance < plan.imbalance_before
+        warm, st1 = sess.query(prog, params)
+        after = np.asarray(sess.pg.collect(warm, fill=0))
+        np.testing.assert_array_equal(before, after)
+        # the warm entry survived the layout-only remap: a migration moves
+        # edges without touching the graph, so both warm polarities hold
+        assert st1.supersteps <= st0.supersteps
+    finally:
+        sess.close()
+
+
+def test_rebalance_mid_stream_kcore_delete_polarity():
+    """Rebalance *between* delete flushes: k-core's delete-polarity warm
+    entry must survive both the flush and the migration, and the warm
+    answer must stay bit-identical to a forced cold recompute."""
+    g, sess = _skewed_session(seed=7)
+    try:
+        prog, params = make_kcore(2)
+        sess.query(prog, params)
+        pairs = sorted({(min(s, d), max(s, d))
+                        for s, d in zip(g.src.tolist(), g.dst.tolist())})
+        rng = np.random.default_rng(0)
+        sel = [pairs[i] for i in rng.choice(len(pairs), 12, replace=False)]
+        for chunk in (sel[:6], sel[6:]):
+            s = np.array([p[0] for p in chunk] + [p[1] for p in chunk])
+            d = np.array([p[1] for p in chunk] + [p[0] for p in chunk])
+            sess.update(deletes=(s, d))
+            sess.flush()
+            sess.rebalance(target=1.0)       # may be a no-op once balanced
+            warm, st_w = sess.query(prog, params, warm=True)
+            cold, st_c = sess.query(prog, params, warm=False,
+                                    use_result_cache=False)
+            np.testing.assert_array_equal(
+                np.asarray(sess.pg.collect(warm, fill=0)),
+                np.asarray(sess.pg.collect(cold, fill=0)))
+            assert st_w.supersteps <= st_c.supersteps
+    finally:
+        sess.close()
+
+
+def test_rebalance_mid_stream_bfs_insert_polarity():
+    """The mirror image: BFS's insert-polarity warm entry rides through
+    insert flushes interleaved with migrations."""
+    g, sess = _skewed_session(seed=11)
+    try:
+        _, st0 = sess.query(BFS(), {"source": 0})
+        rng = np.random.default_rng(1)
+        for _ in range(2):
+            u = rng.integers(0, g.n_vertices, 8)
+            v = rng.integers(0, g.n_vertices, 8)
+            keep = u != v
+            u, v = u[keep], v[keep]
+            sess.update(adds=(np.concatenate([u, v]),
+                              np.concatenate([v, u]),
+                              np.ones(2 * u.size, np.float32)))
+            sess.flush()
+            sess.rebalance(target=1.0)
+            warm, st_w = sess.query(BFS(), {"source": 0}, warm=True)
+            cold, st_c = sess.query(BFS(), {"source": 0}, warm=False,
+                                    use_result_cache=False)
+            np.testing.assert_array_equal(
+                np.asarray(sess.pg.collect(warm, fill=np.inf)),
+                np.asarray(sess.pg.collect(cold, fill=np.inf)))
+            assert st_w.supersteps <= st_c.supersteps
+    finally:
+        sess.close()

@@ -1,0 +1,163 @@
+"""Trace-counter pins for the algorithm suite: every new algorithm's
+compiled runner must be reused — zero retraces — across repeated queries,
+parameter sweeps (params are traced inputs, not constants baked into the
+jaxpr) and in-bucket flushes, on the sim backend inline and on shard_map
+via subprocess (fake host devices must precede jax init)."""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import harness
+from repro.algos import (BFS, KCore, LabelPropagation, TriangleCount,
+                         make_kcore, make_msbfs, make_triangles)
+from repro.analysis.sanitizer import retrace_guard
+from repro.session import GraphSession
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return harness.harness_powerlaw(200, 9)
+
+
+def _cases(g):
+    pv = harness._pivots(g)
+    return [("bfs",) + (BFS(), {"source": 0}),
+            ("msbfs",) + make_msbfs(pv),
+            ("lp",) + (LabelPropagation(hops=3), {}),
+            ("kcore",) + make_kcore(2),
+            ("triangles",) + make_triangles(pv)]
+
+
+@pytest.mark.parametrize("name", ["bfs", "msbfs", "lp", "kcore", "triangles"])
+def test_repeated_query_zero_retraces(graph, name):
+    prog, params = dict((n, (p, pp)) for n, p, pp in _cases(graph))[name]
+    sess = GraphSession.from_graph(graph, 4, "cdbh")
+    try:
+        _, s1 = sess.query(prog, params)
+        assert s1.compile_time > 0.0
+        with retrace_guard(label=f"{name}: second identical query"):
+            _, s2 = sess.query(prog, params)
+        assert s2.compile_time == 0.0
+        assert sess.stats.cache_misses == 1
+    finally:
+        sess.close()
+
+
+def test_bfs_source_sweep_shares_one_runner(graph):
+    """BFS from any source is the same compiled runner: params are traced."""
+    sess = GraphSession.from_graph(graph, 4, "cdbh")
+    try:
+        sess.query(BFS(), {"source": 0})
+        with retrace_guard(label="BFS source sweep"):
+            for s in (1, 5, 17):
+                _, st = sess.query(BFS(), {"source": s})
+                assert st.compile_time == 0.0
+        assert sess.stats.cache_misses == 1
+    finally:
+        sess.close()
+
+
+def test_kcore_k_values_are_distinct_runners(graph):
+    """k is a program field, so it is part of the runner cache key — two k
+    values are two compilations, then both stay cached."""
+    sess = GraphSession.from_graph(graph, 4, "cdbh")
+    try:
+        sess.query(*make_kcore(2))
+        sess.query(*make_kcore(3))
+        assert sess.stats.cache_misses == 2
+        with retrace_guard(label="kcore k=2/k=3 requeries"):
+            sess.query(*make_kcore(2))
+            sess.query(*make_kcore(3))
+        assert sess.stats.cache_misses == 2
+    finally:
+        sess.close()
+
+
+@pytest.mark.parametrize("name", ["bfs", "lp", "kcore"])
+def test_inbucket_flush_zero_retraces(graph, name):
+    """A flush that moves no padded bucket must re-hit every compiled
+    runner of the suite with zero retraces."""
+    prog, params = dict((n, (p, pp)) for n, p, pp in _cases(graph))[name]
+    sess = GraphSession.from_graph(graph, 4, "cdbh")
+    try:
+        sess.query(prog, params)
+        pg = sess.pg
+        p = int(np.argmin(pg.edges_per_part))
+        m = pg.emask[p]
+        gs = int(pg.gvid[p][pg.esrc[p][m]][0])
+        gd = int(pg.gvid[p][pg.edst[p][m]][0])
+        shape0 = sess.shape_key
+        sess.update(adds=([gs], [gd], [7.0]))
+        sess.flush()
+        assert sess.shape_key == shape0, "in-bucket by design"
+        with retrace_guard(label=f"{name}: in-bucket flush requery"):
+            _, st = sess.query(prog, params)
+        assert st.compile_time == 0.0
+        assert sess.stats.cache_misses == 1
+    finally:
+        sess.close()
+
+
+# --------------------------------------------------------------------------- #
+# shard_map backend: same pins, fresh process for fake devices
+# --------------------------------------------------------------------------- #
+SHARD_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+import harness
+from repro.algos import BFS, make_kcore
+from repro.analysis.sanitizer import retrace_guard
+from repro.core import EngineConfig
+from repro.session import GraphSession
+
+g = harness.harness_powerlaw(200, 9)
+mesh = Mesh(np.array(jax.devices()[:4]).reshape(4), ("sub",))
+cfg = EngineConfig(subgraph_axes=("sub",))
+sess = GraphSession.from_graph(g, 4, "cdbh", mesh=mesh, cfg=cfg)
+for prog, params in ((BFS(), {"source": 0}), make_kcore(2)):
+    r1, s1 = sess.query(prog, params)
+    assert s1.compile_time > 0.0
+    with retrace_guard(label=f"{type(prog).__name__}: shard requery"):
+        r2, s2 = sess.query(prog, params)
+    assert s2.compile_time == 0.0
+    np.testing.assert_array_equal(np.asarray(r1), np.asarray(r2))
+# param sweep shares the trace too
+with retrace_guard(label="BFS shard source sweep"):
+    _, st = sess.query(BFS(), {"source": 3})
+assert st.compile_time == 0.0
+# in-bucket flush re-hits both compiled runners
+pg = sess.pg
+p = int(np.argmin(pg.edges_per_part))
+m = pg.emask[p]
+gs = int(pg.gvid[p][pg.esrc[p][m]][0])
+gd = int(pg.gvid[p][pg.edst[p][m]][0])
+shape0 = sess.shape_key
+sess.update(adds=([gs], [gd], [7.0]))
+sess.flush()
+assert sess.shape_key == shape0, "in-bucket by design"
+with retrace_guard(label="shard in-bucket flush requery"):
+    _, st = sess.query(BFS(), {"source": 0})
+assert st.compile_time == 0.0
+sess.close()
+print("RETRACE_SHARD_OK")
+"""
+
+
+def test_shard_map_zero_retraces():
+    here = os.path.dirname(os.path.abspath(__file__))
+    src = os.path.join(os.path.dirname(here), "src")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [src, here] + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
+    res = subprocess.run([sys.executable, "-c", SHARD_SCRIPT],
+                         capture_output=True, text=True, timeout=1200,
+                         env=env)
+    assert res.returncode == 0, res.stdout + res.stderr
+    assert "RETRACE_SHARD_OK" in res.stdout

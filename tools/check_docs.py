@@ -45,7 +45,7 @@ PATH_EXTS = (".py", ".md", ".yml", ".yaml", ".json", ".txt")
 # became load-bearing with the edge-compute backends — keep them covered.
 COVERED_MODULE_DIRS = ("src/repro/kernels", "src/repro/core",
                        "src/repro/serving", "src/repro/analysis",
-                       "src/repro/partition")
+                       "src/repro/partition", "src/repro/algos")
 
 _span = re.compile(r"`([^`]+)`")
 _fence = re.compile(r"^(```|~~~)")
