@@ -57,7 +57,7 @@ from repro.serving import (BatchPolicy, DictStore, MicroBatcher,
                            ResultCache, SessionPool)
 from repro.session import GraphSession
 
-EDGE_BACKENDS = ("coo", "pallas_tiles", "pallas_windows")
+EDGE_BACKENDS = ("coo", "pallas_tiles", "pallas_windows", "auto")
 
 
 def _quantiles(xs):
@@ -235,20 +235,27 @@ def bench_edge_backends(n0, n_parts, n_cycles, per_cycle, smoke):
         steady = n_cycles - (max(i for i, r in enumerate(tail) if r) + 1) \
             if any(tail) else n_cycles
         p50, p95, _ = _quantiles(lat)
+        ss = sess.stats
+        dens = (f"{ss.tile_density_min:.3f}/{ss.tile_density_mean:.3f}/"
+                f"{ss.tile_density_max:.3f}"
+                if eb in ("pallas_tiles", "auto") else "-")
         rows.append([eb, recompile_cycles, steady, f"{p50*1e3:.0f}",
                      f"{p95*1e3:.0f}", f"{st.backend_flops/1e6:.1f}",
-                     f"{st.tile_density:.3f}" if eb == "pallas_tiles"
-                     else "-"])
+                     dens])
         recs[f"eb_{eb}_recompile_cycles"] = int(recompile_cycles)
         recs[f"eb_{eb}_steady_cycles"] = int(steady)
         recs[f"eb_{eb}_p50_ms"] = p50 * 1e3
         recs[f"eb_{eb}_flops_per_query"] = int(st.backend_flops)
-        if eb == "pallas_tiles":
-            recs["eb_tile_density"] = float(st.tile_density)
+        if eb in ("pallas_tiles", "auto"):
+            recs[f"eb_{eb}_tile_density_min"] = float(ss.tile_density_min)
+            recs[f"eb_{eb}_tile_density_mean"] = float(ss.tile_density_mean)
+            recs[f"eb_{eb}_tile_density_max"] = float(ss.tile_density_max)
+        if eb == "auto":
+            recs["eb_auto_assignment"] = list(st.partition_edge_backends)
     table(f"Edge-compute backends under streaming growth ({n_cycles} "
           f"cycles x {per_cycle} new vertices, P={n_parts})",
           ["backend", "recompile cycles", "steady tail", "p50 ms",
-           "p95 ms", "Mflops/query", "tile density"], rows)
+           "p95 ms", "Mflops/query", "tile density min/mean/max"], rows)
     for eb in EDGE_BACKENDS[1:]:
         np.testing.assert_array_equal(
             finals["coo"], finals[eb],

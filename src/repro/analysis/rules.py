@@ -1,4 +1,4 @@
-"""The drone-lint rules (DL001-DL006).
+"""The drone-lint rules (DL001-DL007).
 
 Each rule is grounded in a failure mode this repo has actually hit (see
 docs/ANALYSIS.md for the before/after history):
@@ -26,6 +26,12 @@ docs/ANALYSIS.md for the before/after history):
   DL006  ``except Exception``/bare ``except`` that swallows the error:
          no re-raise, no logging, no use of the bound exception. Narrow the
          type and log at debug level, or annotate deliberate suppressions.
+  DL007  raw ``cfg.edge_backend`` reads outside the engine's resolution
+         layer. Since ``edge_backend='auto'`` the stored value may not name
+         a backend a sweep can execute on — dispatching or cache-keying on
+         it mis-handles 'auto'. Consume the field through
+         ``resolve_edge_backend``/``resolve_partition_backends``/
+         ``normalize_edge_backend`` only.
 """
 from __future__ import annotations
 
@@ -643,6 +649,48 @@ def _handler_is_silent(handler: ast.ExceptHandler) -> bool:
     return True
 
 
+#: the engine's sanctioned ``cfg.edge_backend`` consumers — the resolution
+#: layer itself, plus the config's own construction-time validation
+_EB_RESOLVERS = {"resolve_edge_backend", "resolve_partition_backends",
+                 "normalize_edge_backend", "__post_init__"}
+
+
+@rule("DL007", "error",
+      "raw cfg.edge_backend read outside the resolution layer")
+def check_raw_edge_backend(tree, src, path) -> Iterator[Finding]:
+    """``EngineConfig.edge_backend`` may hold ``'auto'``, which no sweep can
+    execute on — it resolves to a concrete per-partition backend only
+    through the engine's resolution layer. Any other code branching or
+    keying on the raw field treats 'auto' as a concrete backend and
+    silently mis-dispatches (or splits cache keys that should dedupe).
+    Flags ``Load`` reads of ``.edge_backend`` on a receiver named ``cfg``/
+    ``config`` (``self.cfg`` included) outside the resolver functions."""
+
+    def visit(node, fname) -> Iterator[Finding]:
+        for child in ast.iter_child_nodes(node):
+            inner = fname
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                inner = child.name
+            elif isinstance(child, ast.Attribute) and \
+                    child.attr == "edge_backend" and \
+                    isinstance(child.ctx, ast.Load) and \
+                    fname not in _EB_RESOLVERS:
+                recv = (_qualname(child.value) or "").split(".")[-1]
+                if recv in ("cfg", "config"):
+                    yield Finding(
+                        rule="", path=path, line=child.lineno,
+                        col=child.col_offset,
+                        message=(f"raw `{_qualname(child) or 'cfg.edge_backend'}` "
+                                 f"read in `{fname}`: the field may hold "
+                                 f"'auto'; go through resolve_edge_backend/"
+                                 f"resolve_partition_backends/"
+                                 f"normalize_edge_backend"))
+            yield from visit(child, inner)
+
+    yield from visit(tree, "<module>")
+
+
+# --------------------------------------------------------------------- #
 @rule("DL006", "warning",
       "broad except swallows the error silently")
 def check_silent_handler(tree, src, path) -> Iterator[Finding]:

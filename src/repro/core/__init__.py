@@ -1,6 +1,8 @@
 from repro.core.api import DeviceSubgraph, SemiringSweep, VertexProgram
 from repro.core.engine import (EdgeCombine, EngineConfig, make_bsp_runner,
-                               make_sim_runner, resolve_edge_backend, run,
+                               make_sim_runner, normalize_edge_backend,
+                               resolve_edge_backend,
+                               resolve_partition_backends, run,
                                run_sim, run_shard_map)
 from repro.core.layouts import EdgeLayouts, TileBlock, WindowBlock
 from repro.core.graph import Graph
@@ -18,7 +20,8 @@ __all__ = [
     "DeviceSubgraph", "SemiringSweep", "VertexProgram", "EdgeCombine",
     "EngineConfig", "run",
     "run_sim", "run_shard_map", "make_bsp_runner", "make_sim_runner",
-    "resolve_edge_backend", "EdgeLayouts", "TileBlock", "WindowBlock",
+    "resolve_edge_backend", "normalize_edge_backend",
+    "resolve_partition_backends", "EdgeLayouts", "TileBlock", "WindowBlock",
     "Graph", "ExecutionStats", "PartitionMetrics",
     "partition_metrics", "PARTITIONERS", "STREAM_ROUTERS", "cdbh_vertex_cut",
     "greedy_edge_cut", "grid_vertex_cut", "random_hash_edge_cut",

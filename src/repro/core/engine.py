@@ -75,7 +75,8 @@ from repro.kernels.ref import combine_identity, tile_pad_identity
 from repro.kernels.segment_combine import W, segment_combine_windowed
 
 __all__ = ["EngineConfig", "EdgeCombine", "run", "run_sim", "run_shard_map",
-           "make_sim_runner", "make_bsp_runner", "resolve_edge_backend"]
+           "make_sim_runner", "make_bsp_runner", "resolve_edge_backend",
+           "normalize_edge_backend", "resolve_partition_backends"]
 
 
 # --------------------------------------------------------------------------- #
@@ -111,10 +112,13 @@ class EngineConfig:
     max_supersteps: int = 100_000
     backend: str = "sim"              # 'sim' | 'shard_map'
     edge_backend: str = "coo"         # 'coo' | 'pallas_tiles' |
-                                      # 'pallas_windows' — how the local
-                                      # sweep's semiring product is computed
-                                      # for SemiringSweep programs (programs
-                                      # without a spec always run COO)
+                                      # 'pallas_windows' | 'auto' — how the
+                                      # local sweep's semiring product is
+                                      # computed for SemiringSweep programs
+                                      # (programs without a spec always run
+                                      # COO). 'auto' picks per partition
+                                      # from the calibrated density policy
+                                      # (core/autotune.py)
     trace: bool = False               # python superstep loop w/ per-step stats
     sparse_sync_capacity: int = 0     # >0: compacted all-gather SBS (shard)
     shard_slots: bool = False         # shard the SBS buffer over edge_axes
@@ -128,7 +132,10 @@ class EngineConfig:
 
     _MODES = ("sc", "vc")
     _BACKENDS = ("sim", "shard_map")
-    _EDGE_BACKENDS = ("coo", "pallas_tiles", "pallas_windows")
+    # backends a partition's sweep can actually execute on; 'auto' resolves
+    # to one of these per partition (resolve_partition_backends)
+    _CONCRETE_EDGE_BACKENDS = ("coo", "pallas_tiles", "pallas_windows")
+    _EDGE_BACKENDS = _CONCRETE_EDGE_BACKENDS + ("auto",)
 
     def __post_init__(self):
         """Fail at construction, not deep inside a run (a typo'd mode would
@@ -197,18 +204,21 @@ def resolve_edge_backend(program: VertexProgram, cfg: EngineConfig) -> str:
     """The backend this (program, config) pair actually runs.
 
     Declarative ``sweep_spec`` programs run on whatever
-    ``cfg.edge_backend`` asks for — the engine generates their product.
-    Programs that override ``sweep`` declare the backends their hand-rolled
-    code implements via the ``supports_edge_backends`` class attribute
-    (today ``("coo",)`` for every shipped custom sweep); when the requested
-    backend is unsupported they fall back to the first declared one so a
-    session can serve a mixed program suite under one config. A custom
-    sweep that declares nothing is refused outright: silently running it
-    on an arbitrary backend it ignores is exactly the bug class this
-    resolution step exists to prevent."""
+    ``cfg.edge_backend`` asks for — the engine generates their product;
+    ``'auto'`` passes through here and resolves per *partition* in
+    ``resolve_partition_backends``. Programs that override ``sweep``
+    declare the backends their hand-rolled code implements via the
+    ``supports_edge_backends`` class attribute (today ``("coo",)`` for
+    every shipped custom sweep); when the requested backend — including
+    ``'auto'``, which no custom sweep can implement — is unsupported they
+    fall back to the first declared one so a session can serve a mixed
+    program suite under one config. A custom sweep that declares nothing
+    is refused outright: silently running it on an arbitrary backend it
+    ignores is exactly the bug class this resolution step exists to
+    prevent."""
     declared = program.supports_edge_backends
     if declared is not None:
-        allowed = EngineConfig._EDGE_BACKENDS
+        allowed = EngineConfig._CONCRETE_EDGE_BACKENDS
         unknown = tuple(b for b in declared if b not in allowed)
         if unknown or not declared:
             raise ValueError(
@@ -223,6 +233,44 @@ def resolve_edge_backend(program: VertexProgram, cfg: EngineConfig) -> str:
         "supports_edge_backends: a hand-rolled sweep must name the edge "
         "backends it implements (e.g. supports_edge_backends = ('coo',)) "
         "so the engine cannot silently route it onto a backend it ignores")
+
+
+def normalize_edge_backend(program: VertexProgram,
+                           cfg: EngineConfig) -> tuple:
+    """``(resolved backend, config rewritten to it)`` — the ONLY sanctioned
+    way to consume ``cfg.edge_backend`` outside this resolution layer
+    (drone-lint DL007). Raw reads are a correctness trap: a session serving
+    a custom-sweep program under a Pallas or ``'auto'`` config would key
+    its runner cache and pick its argument protocol off the *requested*
+    backend while the engine silently runs the *resolved* one."""
+    eb = resolve_edge_backend(program, cfg)
+    if eb != cfg.edge_backend:
+        cfg = dataclasses.replace(cfg, edge_backend=eb)
+    return eb, cfg
+
+
+#: lax.switch branch ids of the shard_map mixed-backend sweep
+_BACKEND_IDS = {"coo": 0, "pallas_tiles": 1, "pallas_windows": 2}
+
+
+def resolve_partition_backends(program: VertexProgram, cfg: EngineConfig,
+                               pg: PartitionedGraph, *, lay=None,
+                               table=None) -> tuple:
+    """Per-partition concrete backend assignment. Uniform (non-``'auto'``)
+    configs broadcast the resolved backend; ``'auto'`` consults the
+    platform's calibration table (core/autotune.py) over the partition's
+    layout-geometry unit counts. Deterministic for a given (table,
+    geometry) — sessions additionally pin the assignment per shape bucket
+    so in-bucket growth cannot flip it."""
+    eb = resolve_edge_backend(program, cfg)
+    if eb != "auto":
+        return (eb,) * pg.n_parts
+    from repro.core import autotune
+    if lay is None:
+        lay = pg.ensure_edge_layouts()
+    if table is None:
+        table = autotune.get_table()
+    return autotune.pick_backends(table, pg, lay)
 
 
 def _tile_product(blk: TileBlock, vals, spec: SemiringSweep, v_max: int):
@@ -331,10 +379,12 @@ def _make_pallas_sweep(program: VertexProgram, edge_backend: str):
 
 
 def _layout_block_from(lay: EdgeLayouts, pg: PartitionedGraph,
-                       program: VertexProgram, edge_backend: str):
+                       program: VertexProgram, edge_backend: str,
+                       n_shards: int = 1):
     """Device layout pytree a Pallas runner takes as an explicit input
     (never closed over: the arrays change under streaming, the compiled
-    runner must not bake them in)."""
+    runner must not bake them in). ``n_shards > 1`` returns the
+    edge-axis-sharded variant (per-shard tile/window lists)."""
     spec = program.sweep_spec
     if edge_backend == "pallas_tiles":
         if not jnp.issubdtype(jnp.dtype(program.dtype), jnp.floating):
@@ -342,9 +392,96 @@ def _layout_block_from(lay: EdgeLayouts, pg: PartitionedGraph,
                 ("integer min_plus through the tile kernel clamps values to "
                  "iinfo.max >> 1 (kernels/ref.py tile_pad_identity); ids "
                  "must stay below 2**30")
+        if n_shards > 1:
+            return lay.device_tiles_sharded(pg, spec.semiring,
+                                            spec.edge_values, program.dtype,
+                                            n_shards)
         return lay.device_tiles(pg, spec.semiring, spec.edge_values,
                                 program.dtype)
+    if n_shards > 1:
+        return lay.device_windows_sharded(pg, n_shards)
     return lay.device_windows()
+
+
+def _assignment_groups(assignment) -> tuple:
+    """Static per-backend partition groups of an ``'auto'`` assignment:
+    ``((backend, [P_g] int64 indices), ...)`` in a fixed order."""
+    groups = []
+    for b in EngineConfig._CONCRETE_EDGE_BACKENDS:
+        idx = np.asarray([p for p, a in enumerate(assignment) if a == b],
+                         np.int64)
+        if idx.size:
+            groups.append((b, idx))
+    return tuple(groups)
+
+
+def _auto_layout_blocks(lay: EdgeLayouts, pg: PartitionedGraph,
+                        program: VertexProgram, assignment,
+                        mixed_shard: bool = False, n_shards: int = 1):
+    """Layout input of an ``'auto'`` runner.
+
+    Simulator (``mixed_shard=False``): ``(tiles, windows)`` with each block
+    group-sliced to just the partitions its backend owns (``None`` when the
+    backend owns nothing) — the mixed superstep launches one kernel per
+    group over its sub-stack. Cached on the layouts' device cache so
+    repeated queries reuse the slices until a rebuild invalidates them.
+
+    shard_map (``mixed_shard=True``): ``(tiles, windows, backend_ids)``
+    with *full* (possibly edge-axis-sharded) blocks — every device gets
+    same-shaped slices and a ``lax.switch`` on its partition's backend id
+    picks the path, so one executable serves any assignment shape."""
+    spec = program.sweep_spec
+    if mixed_shard:
+        ids = jnp.asarray([_BACKEND_IDS[b] for b in assignment], jnp.int32)
+        return (_layout_block_from(lay, pg, program, "pallas_tiles",
+                                   n_shards),
+                _layout_block_from(lay, pg, program, "pallas_windows",
+                                   n_shards), ids)
+    t_idx = tuple(p for p, b in enumerate(assignment)
+                  if b == "pallas_tiles")
+    w_idx = tuple(p for p, b in enumerate(assignment)
+                  if b == "pallas_windows")
+    key = ("auto_groups", t_idx, w_idx, spec.semiring, spec.edge_values,
+           np.dtype(program.dtype).str)
+    blk = lay._device.get(key)
+    if blk is None:
+        t_blk = w_blk = None
+        if t_idx:
+            full = _layout_block_from(lay, pg, program, "pallas_tiles")
+            t_blk = TileBlock(*[x[np.asarray(t_idx)] for x in full])
+        if w_idx:
+            full = lay.device_windows()
+            w_blk = WindowBlock(*[x[np.asarray(w_idx)] for x in full])
+        blk = (t_blk, w_blk)
+        lay._device[key] = blk
+    return blk
+
+
+def _mixed_product(program: VertexProgram, groups, sgs, lay_blks, v):
+    """Stacked [P, v_max, K] semiring product under a mixed per-partition
+    backend assignment: one launch per backend group over its (static)
+    partition sub-stack, scattered back into the full aggregate. Matches
+    the uniform paths bit-for-bit per partition — the COO group is the
+    vmapped reference product, the Pallas groups are the flattened kernel
+    launches over group-sliced layout blocks."""
+    from repro.core.api import coo_semiring_product
+    spec = program.sweep_spec
+    t_blk, w_blk = lay_blks
+    v_max = sgs.vmask.shape[-1]
+    agg = jnp.zeros(v.shape, v.dtype)       # every row overwritten below
+    for backend, gidx in groups:
+        if backend == "coo":
+            sub = jax.tree.map(lambda a: a[gidx], sgs)
+            part = jax.vmap(
+                lambda sg, vv: coo_semiring_product(sg, spec, vv)
+            )(sub, v[gidx])
+        elif backend == "pallas_tiles":
+            part = _tile_product(t_blk, v[gidx], spec, v_max)
+        else:
+            part = _window_product(w_blk, v[gidx], spec, v_max,
+                                   sgs.esrc[gidx], sgs.ew[gidx])
+        agg = agg.at[jnp.asarray(gidx)].set(part)
+    return agg
 
 
 def _local_phase(program: VertexProgram, sg: DeviceSubgraph, params, state,
@@ -379,16 +516,18 @@ def _local_phase(program: VertexProgram, sg: DeviceSubgraph, params, state,
 
 def _batched_local_phase(program: VertexProgram, sgs, lay_blk, params, state,
                          merged_v, ec: EdgeCombine, bound: int, first,
-                         edge_backend: str):
-    """Stacked-graph local phase for the simulator's Pallas path.
+                         edge_backend: str, groups=None):
+    """Stacked-graph local phase for the simulator's Pallas (and mixed
+    ``'auto'``) path.
 
     The vmapped ``_local_phase`` cannot host a Pallas call (the batching
     rule would have to lift the kernel); instead the whole [P, ...] stack
-    goes through ONE flattened kernel launch per sweep, and the while loop
-    emulates vmap-of-while semantics by hand: a partition whose local fixed
-    point is reached stops updating (its rows are select-frozen) while the
-    others continue — identical results, per-partition sweep counts, and
-    straggler bound as the vmapped COO path."""
+    goes through ONE flattened kernel launch per sweep — per backend group
+    under a mixed assignment — and the while loop emulates vmap-of-while
+    semantics by hand: a partition whose local fixed point is reached stops
+    updating (its rows are select-frozen) while the others continue —
+    identical results, per-partition sweep counts, and straggler bound as
+    the vmapped COO path."""
     state = jax.lax.cond(
         first, lambda st: st,
         lambda st: jax.vmap(
@@ -401,7 +540,9 @@ def _batched_local_phase(program: VertexProgram, sgs, lay_blk, params, state,
         squeeze = vals.ndim == 2
         v = vals[..., None] if squeeze else vals
         v_max = sgs.vmask.shape[-1]
-        if edge_backend == "pallas_tiles":
+        if edge_backend == "auto":
+            agg = _mixed_product(program, groups, sgs, lay_blk, v)
+        elif edge_backend == "pallas_tiles":
             agg = _tile_product(lay_blk, v, program.sweep_spec, v_max)
         else:
             agg = _window_product(lay_blk, v, program.sweep_spec, v_max,
@@ -491,29 +632,46 @@ def _exchange_bytes_per_step(cfg: EngineConfig, n_slots: int, K: int,
 
 def _flops_per_sweep(program: VertexProgram, edge_backend: str,
                      pg: PartitionedGraph,
-                     lay: Optional[EdgeLayouts]) -> np.ndarray:
+                     lay: Optional[EdgeLayouts], assignment=None,
+                     n_edge_shards: int = 1) -> np.ndarray:
     """[P] semiring ops one local sweep issues per partition, for
     ``ExecutionStats.backend_flops``: the COO path pays one combine + one
     reduce per resident edge per payload lane; the Pallas backends pay for
     the dense tiles/blocks they actually launch (identity padding included —
-    that is the density tax the stats make visible)."""
+    that is the density tax the stats make visible). Under ``'auto'`` each
+    partition is billed at its *assigned* backend's rate."""
     K = program.payload
+    coo = 2 * K * pg.edges_per_part.astype(np.int64)
     if edge_backend == "coo" or lay is None:
-        return 2 * K * pg.edges_per_part.astype(np.int64)
-    return lay.flops_per_sweep(edge_backend, K)
+        return coo
+    if edge_backend == "auto":
+        out = coo.copy()
+        asg = np.asarray(assignment)
+        for b in ("pallas_tiles", "pallas_windows"):
+            m = asg == b
+            if m.any():
+                out[m] = lay.flops_per_sweep(
+                    b, K, n_shards=n_edge_shards, pg=pg)[m]
+        return out
+    return lay.flops_per_sweep(edge_backend, K, n_shards=n_edge_shards,
+                               pg=pg)
 
 
 # --------------------------------------------------------------------------- #
 # Simulator backend
 # --------------------------------------------------------------------------- #
 def _make_sim_superstep(program: VertexProgram, cfg: EngineConfig,
-                        n_slots: int, edge_backend: str = "coo"):
+                        n_slots: int, edge_backend: str = "coo",
+                        assignment=None):
     """One BSP superstep over the stacked [P, ...] pytree: vmapped local
     phase on the COO backend, one flattened Pallas launch per sweep on the
-    kernel backends. ``lay`` is the device layout pytree (None for COO)."""
+    kernel backends (per backend group under a mixed ``'auto'``
+    ``assignment``). ``lay`` is the device layout pytree (None for COO)."""
     ident = program.identity
     ec = EdgeCombine(())
     ex = sbs.SimExchange()
+    groups = _assignment_groups(assignment) if edge_backend == "auto" \
+        else None
 
     def superstep(sgs, lay, params, state, last_out, merged_buf, first):
         merged_v = jax.vmap(lambda sg: sbs.gather_merged(merged_buf, sg.slot))(sgs)
@@ -525,7 +683,7 @@ def _make_sim_superstep(program: VertexProgram, cfg: EngineConfig,
         else:
             state, out, sweeps, last_ch = _batched_local_phase(
                 program, sgs, lay, params, state, merged_v, ec,
-                cfg.local_bound, first, edge_backend)
+                cfg.local_bound, first, edge_backend, groups)
         bufs, changed = jax.vmap(
             lambda sg, o, lo: _pack(program, sg, o, lo, n_slots)
         )(sgs, out, last_out)
@@ -539,7 +697,8 @@ def _make_sim_superstep(program: VertexProgram, cfg: EngineConfig,
 
 
 def make_sim_runner(program: VertexProgram, cfg: EngineConfig, n_slots: int,
-                    *, warm_start=False, batch=False):
+                    *, warm_start=False, batch=False,
+                    partition_backends=None):
     """Build the simulator BSP loop as a pure function
 
         runner(sgs[, lay], params[, warm_block]) ->
@@ -566,7 +725,10 @@ def make_sim_runner(program: VertexProgram, cfg: EngineConfig, n_slots: int,
     built by ``_layout_block_from``) as its second argument — an explicit
     input,
     not a closure, so a serving session's compiled executable keeps working
-    as the layouts evolve under streaming.
+    as the layouts evolve under streaming. Under ``'auto'`` the caller must
+    pass the per-partition ``partition_backends`` assignment
+    (``resolve_partition_backends``) and the layout argument becomes the
+    group-sliced ``(tiles, windows)`` pair of ``_auto_layout_blocks``.
 
     ``run_sim`` calls the runner eagerly once per job; ``GraphSession``
     wraps it in ``jax.jit``, AOT-compiles it once per
@@ -576,7 +738,12 @@ def make_sim_runner(program: VertexProgram, cfg: EngineConfig, n_slots: int,
     ident = program.identity
     ec = EdgeCombine(())
     edge_backend = resolve_edge_backend(program, cfg)
-    superstep = _make_sim_superstep(program, cfg, n_slots, edge_backend)
+    if edge_backend == "auto" and partition_backends is None:
+        raise ValueError("edge_backend='auto' runners need the resolved "
+                         "partition_backends assignment "
+                         "(resolve_partition_backends)")
+    superstep = _make_sim_superstep(program, cfg, n_slots, edge_backend,
+                                    partition_backends)
 
     def _run(sgs, lay, params, warm):
         n_parts, v_max = sgs.vmask.shape
@@ -653,18 +820,26 @@ def run_sim(program: VertexProgram, pg: PartitionedGraph, params=None,
     n_slots, K = pg.n_slots, program.payload
     warm = init_state is not None and program.monotone
     edge_backend = resolve_edge_backend(program, cfg)
-    lay = lay_blk = None
-    if edge_backend != "coo":
+    lay = lay_blk = assignment = None
+    if edge_backend == "auto":
+        lay = pg.ensure_edge_layouts()
+        assignment = resolve_partition_backends(program, cfg, pg, lay=lay)
+        lay_blk = _auto_layout_blocks(lay, pg, program, assignment)
+    elif edge_backend != "coo":
         lay = pg.ensure_edge_layouts()
         lay_blk = _layout_block_from(lay, pg, program, edge_backend)
 
     stats = ExecutionStats(edge_backend=edge_backend)
     epp_host = pg.edges_per_part.astype(np.int64)
-    flops_pp = _flops_per_sweep(program, edge_backend, pg, lay)
-    if edge_backend == "pallas_tiles":
+    flops_pp = _flops_per_sweep(program, edge_backend, pg, lay, assignment)
+    if assignment is not None:
+        stats.partition_edge_backends = list(assignment)
+    if edge_backend in ("pallas_tiles", "auto"):
         spec = program.sweep_spec
         stats.tile_density = lay.density(pg, spec.semiring, spec.edge_values,
                                          program.dtype)
+        stats.partition_tile_density = list(lay.partition_density(
+            pg, spec.semiring, spec.edge_values, program.dtype))
     t0 = time.perf_counter()
 
     if cfg.trace:
@@ -689,7 +864,8 @@ def run_sim(program: VertexProgram, pg: PartitionedGraph, params=None,
                                       ckpt["merged"])
             start_step = int(ckpt["step"])
 
-        superstep = _make_sim_superstep(program, cfg, n_slots, edge_backend)
+        superstep = _make_sim_superstep(program, cfg, n_slots, edge_backend,
+                                        assignment)
         step_fn = jax.jit(lambda st, lo, mb, first: superstep(
             sgs, lay_blk, params, st, lo, mb, first))
         state, last_out, merged_buf = v_init, last0, merged0
@@ -718,7 +894,8 @@ def run_sim(program: VertexProgram, pg: PartitionedGraph, params=None,
             lambda sg, st: program.result(sg, params, st))(sgs, state)
     else:
         assert resume_from is None, "resume requires trace mode"
-        runner = make_sim_runner(program, cfg, n_slots, warm_start=warm)
+        runner = make_sim_runner(program, cfg, n_slots, warm_start=warm,
+                                 partition_backends=assignment)
         args = (sgs,) if edge_backend == "coo" else (sgs, lay_blk)
         args += (params,)
         if warm:
@@ -742,7 +919,8 @@ def run_sim(program: VertexProgram, pg: PartitionedGraph, params=None,
 def make_bsp_runner(program: VertexProgram, mesh: Mesh,
                     cfg: EngineConfig, n_slots: int, *, params=None,
                     has_vlabel=False, warm_start=False,
-                    params_as_input=False, batch=False):
+                    params_as_input=False, batch=False,
+                    partition_backends=None):
     """Build the shard_map'd BSP loop (shared by run_shard_map, the
     graph-engine dry-run — which lowers it against ShapeDtypeStructs — and
     ``GraphSession``'s compiled-runner cache).
@@ -763,9 +941,18 @@ def make_bsp_runner(program: VertexProgram, mesh: Mesh,
     When ``resolve_edge_backend(program, cfg)`` picks a Pallas backend the
     runner takes the device layout pytree as an additional input directly
     after ``sgs`` (positional protocol: ``sgs[, layout][, warm][, params]``),
-    sharded over the subgraph axes like the vertex tables; each shard's
-    local sweep then runs one whole-partition kernel product, which is why
-    the Pallas backends refuse edge-axis sharding.
+    sharded over the subgraph axes like the vertex tables. With
+    ``cfg.edge_axes`` set, the tile/window lists are additionally sharded
+    over the edge axes (``EdgeLayouts._sharded_geometry``): each edge shard
+    runs the kernel product over its own per-shard tile/window lists and
+    the ``EdgeCombine`` epilogue of the generated sweep (pmin for
+    ``min_plus``, psum for ``plus_times``) reduces the partial per-vertex
+    aggregates across the shards before the fold — bit-identical to the
+    unsharded launch for min-combines, float-associativity-tolerant for
+    sums, exactly like the COO path's sharded product. Under ``'auto'``
+    (``partition_backends`` required) the layout input is
+    ``(tiles, windows, backend_ids)`` with full blocks and a per-partition
+    ``lax.switch`` picks the sweep — one executable serves any assignment.
 
     ``batch=True`` (requires ``params_as_input=True``) builds the
     micro-batching variant: the warm block (when present) and every params
@@ -799,26 +986,49 @@ def make_bsp_runner(program: VertexProgram, mesh: Mesh,
     shard_slots = cfg.shard_slots and n_edge_shards > 1
     n_loc = -(-(n_slots + 1) // n_edge_shards) if shard_slots else n_slots + 1
 
+    # Pallas layout specs: tile/window lists shard over the edge axes like
+    # the edge arrays themselves — each edge shard's slice is a standalone
+    # per-shard tile/window list (EdgeLayouts._sharded_geometry), and the
+    # EdgeCombine epilogue inside the generated sweep merges the partial
+    # aggregates across shards. With no edge axes these reduce to the
+    # replicated-within-partition specs of the unsharded launch.
+    e_ax = edge_axes if edge_axes else None
+    tile_specs = TileBlock(tiles=P(sub_axes, e_ax, None, None),
+                           tile_dst=P(sub_axes, e_ax),
+                           tile_src=P(sub_axes, e_ax))
+    window_specs = WindowBlock(eslot=edge_spec, ldst=P(sub_axes, e_ax),
+                               bwin=P(sub_axes, e_ax))
     lay_specs = None
-    if edge_backend != "coo":
-        if n_edge_shards > 1:
-            raise ValueError(
-                f"edge_backend={edge_backend!r} computes whole-partition "
-                "tile/window products and cannot shard a partition's edges "
-                "over the model axes; use edge_backend='coo' with "
-                f"edge_axes={edge_axes}")
-        if edge_backend == "pallas_tiles":
-            lay_specs = TileBlock(tiles=P(sub_axes, None, None, None),
-                                  tile_dst=vert_spec, tile_src=vert_spec)
-        else:
-            lay_specs = WindowBlock(eslot=vert_spec, ldst=vert_spec,
-                                    bwin=vert_spec)
+    if edge_backend == "auto":
+        if partition_backends is None:
+            raise ValueError("edge_backend='auto' runners need the resolved "
+                             "partition_backends assignment "
+                             "(resolve_partition_backends)")
+        lay_specs = (tile_specs, window_specs, P(sub_axes))
+        tiles_sweep = _make_pallas_sweep(program, "pallas_tiles")
+        windows_sweep = _make_pallas_sweep(program, "pallas_windows")
+    elif edge_backend != "coo":
+        lay_specs = tile_specs if edge_backend == "pallas_tiles" \
+            else window_specs
         pallas_sweep = _make_pallas_sweep(program, edge_backend)
 
     def _body(sg_block, lay_block, warm_block, params):
         sg = DeviceSubgraph(*[_squeeze(x) for x in sg_block])
         sweep_fn = None
-        if lay_block is not None:
+        if lay_block is not None and edge_backend == "auto":
+            t_raw, w_raw, bid = lay_block
+            t_lay = TileBlock(*[_squeeze(x) for x in t_raw])
+            w_lay = WindowBlock(*[_squeeze(x) for x in w_raw])
+            bid = _squeeze(bid)                      # () int32 backend id
+
+            def sweep_fn(sg_, p_, st_, ec_):
+                return jax.lax.switch(
+                    bid,
+                    [lambda s: program.sweep(sg_, p_, s, ec_),
+                     lambda s: tiles_sweep(sg_, t_lay, p_, s, ec_),
+                     lambda s: windows_sweep(sg_, w_lay, p_, s, ec_)],
+                    st_)
+        elif lay_block is not None:
             lay = type(lay_block)(*[_squeeze(x) for x in lay_block])
             sweep_fn = (lambda sg_, p_, st_, ec_:
                         pallas_sweep(sg_, lay, p_, st_, ec_))
@@ -967,15 +1177,22 @@ def run_shard_map(program: VertexProgram, pg: PartitionedGraph, mesh: Mesh,
 
     n_slots, K = pg.n_slots, program.payload
     warm = init_state is not None and program.monotone
-    go = make_bsp_runner(program, mesh, cfg, n_slots, params=params,
-                         has_vlabel=pg.vlabel is not None, warm_start=warm)
     sgs = _device_subgraph(pg)
     edge_backend = resolve_edge_backend(program, cfg)
-    lay = None
+    lay = assignment = None
     args = (sgs,)
-    if edge_backend != "coo":
+    if edge_backend == "auto":
         lay = pg.ensure_edge_layouts()
-        args += (_layout_block_from(lay, pg, program, edge_backend),)
+        assignment = resolve_partition_backends(program, cfg, pg, lay=lay)
+        args += (_auto_layout_blocks(lay, pg, program, assignment,
+                                     mixed_shard=True, n_shards=n_edge),)
+    elif edge_backend != "coo":
+        lay = pg.ensure_edge_layouts()
+        args += (_layout_block_from(lay, pg, program, edge_backend,
+                                    n_shards=n_edge),)
+    go = make_bsp_runner(program, mesh, cfg, n_slots, params=params,
+                         has_vlabel=pg.vlabel is not None, warm_start=warm,
+                         partition_backends=assignment)
 
     t0 = time.perf_counter()
     with mesh:
@@ -993,12 +1210,17 @@ def run_shard_map(program: VertexProgram, pg: PartitionedGraph, mesh: Mesh,
         wall_time=time.perf_counter() - t0,
         edge_backend=edge_backend,
         backend_flops=int((sweeps_per_part * _flops_per_sweep(
-            program, edge_backend, pg, lay)).sum()),
+            program, edge_backend, pg, lay, assignment,
+            n_edge_shards=n_edge)).sum()),
     )
-    if edge_backend == "pallas_tiles":
+    if assignment is not None:
+        stats.partition_edge_backends = list(assignment)
+    if edge_backend in ("pallas_tiles", "auto"):
         spec = program.sweep_spec
         stats.tile_density = lay.density(pg, spec.semiring, spec.edge_values,
                                          program.dtype)
+        stats.partition_tile_density = list(lay.partition_density(
+            pg, spec.semiring, spec.edge_values, program.dtype))
     return res, stats
 
 

@@ -152,6 +152,13 @@ class EdgeLayouts:
         default_factory=dict)             # [P] non-identity entries per part
     _density: Dict[Tuple, float] = dataclasses.field(default_factory=dict)
     _device: Dict[Tuple, object] = dataclasses.field(default_factory=dict)
+    # edge-axis-sharded geometry (shard_map cfg.edge_axes on the Pallas
+    # backends): host geometry per shard count, rebuilt wholesale on any
+    # graph change; the per-shard caps are grow-only across rebuilds so a
+    # compiled sharded runner survives in-bucket streaming growth.
+    _shard_geom: Dict[int, Dict] = dataclasses.field(default_factory=dict)
+    _shard_caps: Dict[int, Tuple[int, int]] = dataclasses.field(
+        default_factory=dict)             # S -> (t_loc, b_loc), grow-only
 
     # ------------------------------------------------------------------ #
     @property
@@ -166,9 +173,20 @@ class EdgeLayouts:
     def n_windows(self) -> int:
         return max(-(-self.v_max // W), 1)
 
-    def shape_key(self, backend: str) -> tuple:
+    def shape_key(self, backend: str, n_shards: int = 1, pg=None) -> tuple:
         """What a compiled Pallas runner is additionally specialized to —
-        joins the session's padded-shape key for cache lookup/eviction."""
+        joins the session's padded-shape key for cache lookup/eviction.
+        ``n_shards > 1`` keys the edge-axis-sharded variant (``pg``
+        required: the per-shard caps come from the sharded geometry)."""
+        if n_shards > 1:
+            assert pg is not None, "sharded shape_key needs the graph"
+            self._sharded_geometry(pg, n_shards)
+            t_loc, b_loc = self._shard_caps[int(n_shards)]
+            if backend == "pallas_tiles":
+                return ("tiles", int(n_shards), t_loc, self.n_dst_tiles,
+                        self.n_src_tiles)
+            return ("windows", int(n_shards), b_loc, self.block_edges,
+                    self.n_windows)
         if backend == "pallas_tiles":
             return ("tiles", self.t_max, self.n_dst_tiles, self.n_src_tiles)
         return ("windows", self.b_max, self.block_edges, self.n_windows)
@@ -221,6 +239,17 @@ class EdgeLayouts:
             self._realize_tiles(pg, key)
         return self._density[key]
 
+    def partition_density(self, pg, semiring: str, kind: str,
+                          dtype) -> np.ndarray:
+        """[P] per-partition tile density (non-identity fraction of each
+        partition's real tiles) — the actual input of the ``'auto'`` backend
+        policy, surfaced per partition in ``ExecutionStats``."""
+        key = (semiring, kind, np.dtype(dtype).str)
+        if key not in self._filled:
+            self._realize_tiles(pg, key)
+        denom = np.maximum(self.n_tiles * (TM * TN), 1).astype(np.float64)
+        return self._filled[key].astype(np.float64) / denom
+
     # ------------------------------------------------------------------ #
     # device pytrees (cached; invalidated by any rebuild)
     # ------------------------------------------------------------------ #
@@ -247,13 +276,146 @@ class EdgeLayouts:
         return blk
 
     # ------------------------------------------------------------------ #
+    # edge-axis-sharded geometry (shard_map edge_axes on Pallas backends)
+    # ------------------------------------------------------------------ #
+    def _sharded_geometry(self, pg, n_shards: int) -> Dict:
+        """Per-(partition, shard) tile/window geometry over the ``n_shards``
+        contiguous ``e_max / n_shards`` column chunks of the edge arrays —
+        the chunks a ``P(sub_axes, edge_axes)`` sharding hands each device.
+
+        Each partition's valid edges are dst-sorted ascending along the
+        columns (``localize_edges``), so any chunk's valid subset is itself
+        dst-ascending and the per-shard builders apply unchanged.
+        Each shard gets its own coverage fillers (every dst tile / window
+        covered at least once), per-shard-local slot ids, and a shared
+        bucketed per-shard capacity (``t_loc`` tiles / ``b_loc`` blocks,
+        grow-only across rebuilds) so the stacked arrays split evenly:
+        tiles [P, S*t_loc, TM, TN], bwin [P, S*b_loc], ldst
+        [P, S*b_loc*Be], eslot [P, e_max] holding *shard-local* slots."""
+        S = int(n_shards)
+        geom = self._shard_geom.get(S)
+        if geom is not None:
+            return geom
+        assert self.e_max % S == 0, \
+            (f"e_max={self.e_max} must divide by n_shards={S}; pad edges "
+             f"to a multiple of the edge axes")
+        Se = self.e_max // S
+        ndt, nst, nw = self.n_dst_tiles, self.n_src_tiles, self.n_windows
+        Be = self.block_edges
+        P = self.n_parts
+
+        per = []                       # (p, s) -> geometry pieces
+        need_t = need_b = 1
+        for p in range(P):
+            m = pg.emask[p]
+            for s in range(S):
+                cols = slice(s * Se, (s + 1) * Se)
+                ms = m[cols]
+                ls, ld = pg.esrc[p][cols][ms], pg.edst[p][cols][ms]
+                td, ts, et, er, ec = _tile_geometry(ls, ld, ndt, nst)
+                es, ldst, bw, nb = _window_geometry(ld, nw, Be)
+                per.append((np.nonzero(ms)[0] + s * Se, td, ts, et, er, ec,
+                            es, ldst, bw, nb))
+                need_t = max(need_t, td.shape[0])
+                need_b = max(need_b, nb)
+        prev_t, prev_b = self._shard_caps.get(S, (0, 0))
+        t_loc = max(prev_t, self.policy.bucket(need_t))
+        b_loc = max(prev_b, self.policy.bucket(need_b))
+        self._shard_caps[S] = (t_loc, b_loc)
+
+        geom = dict(
+            n_shards=S, t_loc=t_loc, b_loc=b_loc,
+            tile_dst=np.full((P, S * t_loc), ndt - 1, np.int32),
+            tile_src=np.full((P, S * t_loc), nst - 1, np.int32),
+            edge_tile=np.full((P, self.e_max), -1, np.int32),
+            edge_r=np.zeros((P, self.e_max), np.int32),
+            edge_c=np.zeros((P, self.e_max), np.int32),
+            eslot=np.full((P, self.e_max), -1, np.int32),
+            ldst=np.zeros((P, S * b_loc * Be), np.int32),
+            bwin=np.full((P, S * b_loc), nw - 1, np.int32),
+            n_tiles=np.zeros((P, S), np.int64),
+            n_blocks=np.zeros((P, S), np.int64),
+        )
+        it = iter(per)
+        for p in range(P):
+            for s in range(S):
+                cols, td, ts, et, er, ec, es, ldst, bw, nb = next(it)
+                T = td.shape[0]
+                t0, b0 = s * t_loc, s * b_loc
+                geom["tile_dst"][p, t0:t0 + T] = td
+                geom["tile_src"][p, t0:t0 + T] = ts
+                geom["n_tiles"][p, s] = T
+                # edge_tile indexes the concatenated [S*t_loc] list: the
+                # host-side value realization scatters through it; on
+                # device each shard sees only its own [t_loc] slice
+                geom["edge_tile"][p, cols] = et + t0
+                geom["edge_r"][p, cols] = er
+                geom["edge_c"][p, cols] = ec
+                geom["eslot"][p, cols] = es        # shard-local slot ids
+                geom["ldst"][p, b0 * Be:b0 * Be + ldst.shape[0]] = ldst
+                geom["bwin"][p, b0:b0 + nb] = bw
+                geom["n_blocks"][p, s] = nb
+        self._shard_geom[S] = geom
+        return geom
+
+    def device_tiles_sharded(self, pg, semiring: str, kind: str, dtype,
+                             n_shards: int) -> TileBlock:
+        import jax.numpy as jnp
+        S = int(n_shards)
+        key = ("tiles_sharded", S, semiring, kind, np.dtype(dtype).str)
+        blk = self._device.get(key)
+        if blk is None:
+            g = self._sharded_geometry(pg, S)
+            dt = np.dtype(dtype)
+            ident = tile_pad_identity(semiring, dt)
+            tiles = np.full((self.n_parts, S * g["t_loc"], TM, TN), ident,
+                            dt)
+            for p in range(self.n_parts):
+                valid = g["edge_tile"][p] >= 0
+                vals = _edge_values(kind, pg.ew[p][valid], dt)
+                idx = (g["edge_tile"][p][valid], g["edge_r"][p][valid],
+                       g["edge_c"][p][valid])
+                if semiring == "plus_times":
+                    np.add.at(tiles[p], idx, vals)
+                else:
+                    np.minimum.at(tiles[p], idx, vals)
+            blk = TileBlock(tiles=jnp.asarray(tiles),
+                            tile_dst=jnp.asarray(g["tile_dst"]),
+                            tile_src=jnp.asarray(g["tile_src"]))
+            self._device[key] = blk
+        return blk
+
+    def device_windows_sharded(self, pg, n_shards: int) -> WindowBlock:
+        import jax.numpy as jnp
+        S = int(n_shards)
+        key = ("windows_sharded", S)
+        blk = self._device.get(key)
+        if blk is None:
+            g = self._sharded_geometry(pg, S)
+            blk = WindowBlock(eslot=jnp.asarray(g["eslot"]),
+                              ldst=jnp.asarray(g["ldst"]),
+                              bwin=jnp.asarray(g["bwin"]))
+            self._device[key] = blk
+        return blk
+
+    # ------------------------------------------------------------------ #
     # accounting
     # ------------------------------------------------------------------ #
-    def flops_per_sweep(self, backend: str, K: int) -> np.ndarray:
+    def flops_per_sweep(self, backend: str, K: int, n_shards: int = 1,
+                        pg=None) -> np.ndarray:
         """[P] semiring ops one local sweep costs per partition: the dense
         work the kernels actually issue (multiply+accumulate per tile entry;
         compare+combine per block slot), *including* identity padding inside
-        real tiles/blocks — that is the density tax the stats surface."""
+        real tiles/blocks — that is the density tax the stats surface.
+        ``n_shards > 1`` bills the per-shard coverage fillers of the
+        edge-axis-sharded launch."""
+        if n_shards > 1:
+            g = self._sharded_geometry(pg, n_shards)
+            if backend == "pallas_tiles":
+                return (g["n_tiles"].sum(axis=1)
+                        * (2 * TM * TN * K)).astype(np.int64)
+            return (g["n_blocks"].sum(axis=1)
+                    * (2 * W * self.block_edges * K)).astype(np.int64)
         if backend == "pallas_tiles":
             return (self.n_tiles * (2 * TM * TN * K)).astype(np.int64)
         return (self.n_blocks * (2 * W * self.block_edges * K)).astype(
@@ -357,6 +519,7 @@ class EdgeLayouts:
         for key in self._tiles:
             self._realize_tiles(pg, key, parts)
         self._device.clear()
+        self._shard_geom.clear()    # caps persist (grow-only) in _shard_caps
 
     def sync_capacity(self, pg) -> bool:
         """Column-grow the per-edge arrays after ``e_max`` growth (``v_max``
@@ -378,6 +541,7 @@ class EdgeLayouts:
             self.eslot = grow(self.eslot, -1)
             self.e_max = pg.e_max
             self._device.clear()
+            self._shard_geom.clear()
         return self.e_max == pg.e_max
 
     def matches(self, pg) -> bool:

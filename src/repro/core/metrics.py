@@ -102,6 +102,14 @@ class ExecutionStats:
                                        # wall_time apportioned by each
                                        # shard's flops share — the realized
                                        # per-shard sweep-time estimate
+    partition_tile_density: list = dataclasses.field(default_factory=list)
+                                       # per-partition non-identity tile
+                                       # fraction — the auto policy's input
+                                       # (filled on pallas_tiles and auto)
+    partition_edge_backends: list = dataclasses.field(default_factory=list)
+                                       # edge_backend='auto' only: the
+                                       # resolved concrete backend billed to
+                                       # each partition this run
 
     @property
     def peps(self) -> float:

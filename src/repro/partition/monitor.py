@@ -119,6 +119,28 @@ class LoadMonitor:
                 den += w
         return num / den if den else 1.0
 
+    def blended_loads(self, n_parts: int) -> Optional[np.ndarray]:
+        """[n_parts] weighted blend of the observed per-partition load
+        vectors (each mean-normalized so the weights compare signal
+        *shapes*, not units) — what ``plan_rebalance(loads=...)`` wants for
+        sweep-time-weighted donor selection. Signals never observed — or
+        observed for a different partition count — contribute nothing;
+        returns None when nothing usable has been observed at all (the
+        planner then falls back to raw edge counts)."""
+        out = np.zeros(n_parts, np.float64)
+        tot = 0.0
+        for w, arr in ((self.cfg.w_edges, self._edge_loads),
+                       (self.cfg.w_time, self._time_loads),
+                       (self.cfg.w_frontier, self._frontier_loads)):
+            if w <= 0.0 or arr is None or arr.size != n_parts:
+                continue
+            mean = float(arr.mean())
+            if mean <= 0.0:
+                continue
+            out += w * (arr / mean)
+            tot += w
+        return out / tot if tot > 0.0 else None
+
     def signals(self) -> dict:
         """Per-signal imbalance snapshot (benchmark tables / debugging)."""
         return {

@@ -92,11 +92,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.engine import (EngineConfig, _device_subgraph,
+from repro.core.engine import (EngineConfig, _auto_layout_blocks,
+                               _device_subgraph,
                                _exchange_bytes_per_step, _flops_per_sweep,
                                _layout_block_from, _warm_block,
                                make_bsp_runner, make_sim_runner,
-                               resolve_edge_backend, run_sim)
+                               normalize_edge_backend,
+                               resolve_partition_backends, run_sim)
 from repro.core.api import VertexProgram
 from repro.core.graph import Graph
 from repro.core.metrics import ExecutionStats
@@ -197,6 +199,9 @@ class SessionStats:
                                    # EWMA per-shard sweep seconds across
                                    # queries (the monitor's measured-work
                                    # signal, surfaced for benchmark tables)
+    tile_density_min: float = 0.0  # spread of the per-partition tile
+    tile_density_mean: float = 0.0  # densities from the latest Pallas/auto
+    tile_density_max: float = 0.0  # query — the auto policy's raw input
 
 
 class _SessionBuffer(DeltaBuffer):
@@ -331,6 +336,8 @@ class GraphSession:
         self._host_version = 0         # bumped by every applied flush/compact
         self._warm: OrderedDict = OrderedDict()     # (pkey, params) -> entry
         self._identity_blocks: dict = {}  # cold-start [P,v_max,K] blocks
+        self._auto_pin: dict = {}      # (shape, tiles, windows buckets) ->
+                                       # pinned 'auto' backend assignment
         self._keepalive: dict = {}     # id-keyed programs pinned alive
         self._warm_epoch = 0           # advances per layout-moving event
         self._remap_log: list = []     # [(epoch, stats-with-remap_state)]:
@@ -585,9 +592,7 @@ class GraphSession:
         self.stats.queries += 1
         # programs without a SemiringSweep always run COO: normalize the
         # config so their runners dedupe across edge_backend settings
-        eb = resolve_edge_backend(program, cfg)
-        if eb != cfg.edge_backend:
-            cfg = dataclasses.replace(cfg, edge_backend=eb)
+        eb, cfg = normalize_edge_backend(program, cfg)
 
         use_rc = use_result_cache and self.result_cache is not None
         rkey = None
@@ -613,7 +618,7 @@ class GraphSession:
         warm_in = bool(program.monotone)
         args = (self.device_graph(),)
         if eb != "coo":
-            args += (self._layout_arg(program, eb),)
+            args += (self._layout_arg(program, eb, cfg),)
         args += (params_c,)
         if warm_in:
             args += (self._warm_arg(program, entry, use_warm),)
@@ -699,9 +704,7 @@ class GraphSession:
         pkey = _program_key(program)
         if isinstance(pkey[1], int):
             self._keepalive[pkey[1]] = program
-        eb = resolve_edge_backend(program, cfg)
-        if eb != cfg.edge_backend:
-            cfg = dataclasses.replace(cfg, edge_backend=eb)
+        eb, cfg = normalize_edge_backend(program, cfg)
 
         use_rc = use_result_cache and self.result_cache is not None
         rkeys = None
@@ -758,7 +761,7 @@ class GraphSession:
         batched_params = jax.tree.map(lambda *ls: jnp.stack(ls), *params_pad)
         args = (self.device_graph(),)
         if eb != "coo":
-            args += (self._layout_arg(program, eb),)
+            args += (self._layout_arg(program, eb, cfg),)
         args += (batched_params,)
         if warm_in:
             blocks = [self._warm_arg(program, entries[i], use_warms[i])
@@ -798,25 +801,68 @@ class GraphSession:
         request right now (tenant + current graph version + normalized
         config) — the batcher's fast path peeks it before queueing."""
         cfg = self._normalize_cfg(cfg or self.cfg)
-        eb = resolve_edge_backend(program, cfg)
-        if eb != cfg.edge_backend:
-            cfg = dataclasses.replace(cfg, edge_backend=eb)
+        _, cfg = normalize_edge_backend(program, cfg)
         return _result_key(self.tenant, self._host_version, program,
                            _canonical_params(params), cfg)
 
-    def _layout_arg(self, program, eb):
+    def _n_edge_shards(self, cfg) -> int:
+        if cfg.backend != "shard_map" or not cfg.edge_axes \
+                or self.mesh is None:
+            return 1
+        return int(np.prod([self.mesh.shape[a] for a in cfg.edge_axes]))
+
+    def _resolve_assignment(self, program, cfg) -> tuple:
+        """The per-partition backend assignment a ``'auto'`` query runs
+        with, PINNED per (padded-shape, layout-capacity) bucket: the policy
+        is consulted once when a bucket combination is first seen, and every
+        later query in the same buckets reuses the pick even though the
+        measured densities drift with streaming growth — that is the
+        zero-retrace guarantee ('auto' never flips a backend mid-bucket).
+        Bucket crossings (flush past a capacity, compact, rebalance)
+        naturally re-resolve under their new key."""
+        lay = self.pg.ensure_edge_layouts(shape_policy=self.shape_policy)
+        key = (self.shape_key, lay.shape_key("pallas_tiles"),
+               lay.shape_key("pallas_windows"))
+        asg = self._auto_pin.get(key)
+        if asg is None:
+            asg = resolve_partition_backends(program, cfg, self.pg, lay=lay)
+            self._auto_pin[key] = asg
+        return asg
+
+    def _layout_arg(self, program, eb, cfg):
         """Device layout pytree for a Pallas-backend query — an explicit
         runner input (like params), so the executable survives layout
         content changes and retraces only when the layout *capacities*
-        cross a bucket (a new layout shape-key)."""
+        cross a bucket (a new layout shape-key). ``'auto'`` passes the
+        mixed-backend blocks (group-sliced pair on the simulator, full
+        blocks + per-partition backend ids under shard_map); edge-axis
+        sharding passes the per-shard geometry."""
         lay = self.pg.ensure_edge_layouts(shape_policy=self.shape_policy)
-        return _layout_block_from(lay, self.pg, program, eb)
+        ns = self._n_edge_shards(cfg)
+        if eb == "auto":
+            asg = self._resolve_assignment(program, cfg)
+            if cfg.backend == "shard_map":
+                return _auto_layout_blocks(lay, self.pg, program, asg,
+                                           mixed_shard=True, n_shards=ns)
+            return _auto_layout_blocks(lay, self.pg, program, asg)
+        return _layout_block_from(lay, self.pg, program, eb, n_shards=ns)
 
-    def _layout_key(self, eb):
+    def _layout_key(self, program, eb, cfg):
         if eb == "coo":
             return None
         lay = self.pg.edge_layouts
-        return None if lay is None else lay.shape_key(eb)
+        if lay is None:
+            return None
+        ns = self._n_edge_shards(cfg)
+        if eb == "auto":
+            # the pinned assignment joins the key: a re-resolution that
+            # lands on different picks must compile a fresh runner (group
+            # composition is baked into the traced argument structure)
+            asg = self._resolve_assignment(program, cfg)
+            return ("auto", asg,
+                    lay.shape_key("pallas_tiles", n_shards=ns, pg=self.pg),
+                    lay.shape_key("pallas_windows", n_shards=ns, pg=self.pg))
+        return lay.shape_key(eb, n_shards=ns, pg=self.pg)
 
     def _sync_warm_entry(self, entry: _WarmEntry) -> None:
         """Apply the pending remap chain to this entry's device block (lazy
@@ -907,7 +953,7 @@ class GraphSession:
         ``query_batch``) joins the key explicitly so a batched runner can
         never collide with a singleton runner whose params genuinely carry
         a leading axis of the same length."""
-        lkey = self._layout_key(eb)
+        lkey = self._layout_key(program, eb, cfg)
         full_shape = (self.shape_key, lkey)
         key = (pkey, _params_struct_key(params_c), cfg, full_shape, warm_in)
         if batch:
@@ -918,10 +964,12 @@ class GraphSession:
             return hit.compiled, 0.0, 0
         self.stats.cache_misses += 1
         n_slots = self.slot_capacity
+        asg = self._resolve_assignment(program, cfg) if eb == "auto" \
+            else None
         t0 = time.perf_counter()
         if cfg.backend == "sim":
             fn = make_sim_runner(program, cfg, n_slots, warm_start=warm_in,
-                                 batch=bool(batch))
+                                 batch=bool(batch), partition_backends=asg)
             compiled = jax.jit(fn).lower(*args).compile()
         else:
             self._check_mesh(cfg)
@@ -929,7 +977,7 @@ class GraphSession:
                                  params=params_c,
                                  has_vlabel=self.pg.vlabel is not None,
                                  warm_start=warm_in, params_as_input=True,
-                                 batch=bool(batch))
+                                 batch=bool(batch), partition_backends=asg)
             # session args are (sgs[, lay], params[, warm]); the shard
             # runner wants (sgs[, lay][, warm], params) — reorder inside
             # the jitted wrapper
@@ -1020,7 +1068,12 @@ class GraphSession:
         lay = pg.edge_layouts
         sweeps64 = sweeps.astype(np.int64)
         epp = pg.edges_per_part.astype(np.int64)
-        flops_pp = sweeps64 * _flops_per_sweep(program, eb, pg, lay)
+        ns = self._n_edge_shards(cfg)
+        asg = self._resolve_assignment(program, cfg) if eb == "auto" \
+            else None
+        flops_pp = sweeps64 * _flops_per_sweep(program, eb, pg, lay,
+                                               assignment=asg,
+                                               n_edge_shards=ns)
         tot_flops = int(flops_pp.sum())
         # per-shard sweep time: the launch wall time apportioned by each
         # shard's flops share (shards run lock-step supersteps, so the
@@ -1036,10 +1089,18 @@ class GraphSession:
             partition_edge_counts=[int(x) for x in epp],
             partition_flops=[int(x) for x in flops_pp],
             partition_sweep_time=[float(x) for x in wall * share])
-        if eb == "pallas_tiles" and lay is not None:
+        if eb in ("pallas_tiles", "auto") and lay is not None:
             spec = program.sweep_spec
             st.tile_density = lay.density(pg, spec.semiring,
                                           spec.edge_values, program.dtype)
+            dens = lay.partition_density(pg, spec.semiring,
+                                         spec.edge_values, program.dtype)
+            st.partition_tile_density = [float(x) for x in dens]
+            self.stats.tile_density_min = float(dens.min())
+            self.stats.tile_density_mean = float(dens.mean())
+            self.stats.tile_density_max = float(dens.max())
+        if asg is not None:
+            st.partition_edge_backends = list(asg)
         # surface the load gauges on SessionStats (EWMA for the measured
         # signal) and feed the monitor's measured-work input
         self.stats.partition_edge_counts = list(st.partition_edge_counts)
@@ -1177,15 +1238,24 @@ class GraphSession:
         try:
             if len(self.buffer):
                 self.flush()
+            # donor selection weights by the monitor's BLENDED load vector
+            # (measured sweep time + frontier churn, not just edge counts)
+            # when one is live — the moved objects are still edges
+            loads = self.monitor.blended_loads(self.pg.n_parts) \
+                if self.monitor is not None else None
             plan = plan_rebalance(
                 self.pg, target=self.rebalance_target
-                if target is None else target)
+                if target is None else target, loads=loads)
             if plan.n_moves == 0:
                 return None
             rs = execute_rebalance(self.pg, self.ctx, plan,
                                    shape_policy=self.shape_policy)
             self._host_version += 1
             self.stats.rebalances += 1
+            # migration deliberately reshaped the per-partition densities:
+            # drop the pinned 'auto' assignments so the next query
+            # re-consults the policy against the new geometry
+            self._auto_pin.clear()
             # migration changes layout (membership moved), never values:
             # joins the pending-remap chain exactly like a compaction
             self._warm_epoch += 1
@@ -1215,6 +1285,8 @@ class GraphSession:
         cs = _compact_pg(self.pg, self.ctx, shape_policy=self.shape_policy)
         self._host_version += 1
         self.stats.compactions += 1
+        self._auto_pin.clear()     # compaction re-lays the geometry: let
+                                   # the next 'auto' query re-resolve
         # compaction changes layout, never values: joins the pending-remap
         # chain like an insert-only flush (applied on each entry's next use)
         self._warm_epoch += 1
@@ -1238,10 +1310,16 @@ class GraphSession:
         every stale entry — exactly the old behavior."""
         cur = self.shape_key
         lay = self.pg.edge_layouts
-        cur_lay = {}
-        if lay is not None and lay.matches(self.pg):
-            cur_lay = {"tiles": lay.shape_key("pallas_tiles"),
-                       "windows": lay.shape_key("pallas_windows")}
+        have_lay = lay is not None and lay.matches(self.pg)
+
+        def lay_key_now(backend, ns):
+            # the entry's layout key recomputed against the CURRENT layout
+            # at the entry's own shard count; None (can't realize, e.g.
+            # e_max no longer divides the shards) means stale
+            try:
+                return lay.shape_key(backend, n_shards=ns, pg=self.pg)
+            except AssertionError:
+                return None
 
         def stale_entry(e):
             base, lkey = e.shape_key
@@ -1249,7 +1327,24 @@ class GraphSession:
                 return True
             if lkey is None:
                 return False
-            return cur_lay.get(lkey[0]) != lkey
+            if not have_lay:
+                return True
+            if lkey[0] == "auto":
+                _, asg, tk, wk = lkey
+                ns = tk[1] if len(tk) == 5 else 1
+                if tk != lay_key_now("pallas_tiles", ns) \
+                        or wk != lay_key_now("pallas_windows", ns):
+                    return True
+                # a re-resolved pin that landed on different picks stales
+                # the old mixed-backend executable
+                pin = self._auto_pin.get(
+                    (cur, lay.shape_key("pallas_tiles"),
+                     lay.shape_key("pallas_windows")))
+                return pin is not None and pin != asg
+            ns = lkey[1] if len(lkey) == 5 else 1
+            backend = "pallas_tiles" if lkey[0] == "tiles" \
+                else "pallas_windows"
+            return lkey != lay_key_now(backend, ns)
 
         released = self._runner_cache.release_stale(self.tenant, stale_entry)
         self.stats.cache_evictions_shape += released

@@ -177,6 +177,35 @@ def f():
         log.debug("risky failed: %r", e)
 """,
     ),
+    "DL007": dict(
+        tp="""
+def dispatch(program, cfg):
+    if cfg.edge_backend == "pallas_tiles":
+        return "tiles"
+    return "coo"
+""",
+        suppressed="""
+def dispatch(program, cfg):
+    if cfg.edge_backend == "pallas_tiles":  # drone-lint: disable=DL007
+        return "tiles"
+    return "coo"
+""",
+        clean="""
+from repro.core.engine import resolve_edge_backend
+
+def resolve_partition_backends(program, cfg, pg):
+    return (cfg.edge_backend,) * pg.n_parts   # resolver itself: exempt
+
+def dispatch(program, cfg):
+    eb = resolve_edge_backend(program, cfg)
+    if eb == "pallas_tiles":
+        return "tiles"
+    return "coo"
+
+def write_it(cfg, value):
+    cfg.edge_backend = value                  # Store, not a read: exempt
+""",
+    ),
 }
 
 

@@ -93,7 +93,7 @@ import numpy as np
 from jax.sharding import Mesh
 
 from repro.algos import ConnectedComponents, PageRank, SSSP
-from repro.core import (EngineConfig, make_bsp_runner, partition_and_build,
+from repro.core import (EngineConfig, partition_and_build,
                         run_shard_map, run_sim)
 from repro.graphgen import powerlaw_graph
 
@@ -121,22 +121,31 @@ for eb in ("pallas_tiles", "pallas_windows"):
                                        rtol=1e-5, atol=1e-8,
                                        err_msg=f"{name}/{eb}")
 
-# whole-partition kernel products cannot shard a partition's edges: the
-# runner build must fail loudly, not silently degrade
-mesh2 = Mesh(np.array(jax.devices()[:8]).reshape(4, 2), ("sub", "model"))
-cfg2 = EngineConfig(backend="shard_map", subgraph_axes=("sub",),
-                    edge_axes=("model",), edge_backend="pallas_tiles")
-try:
-    make_bsp_runner(SSSP(), mesh2, cfg2, pg.n_slots)
-except ValueError as e:
-    assert "edge_backend" in str(e)
-else:
-    raise AssertionError("edge-sharded pallas runner must be refused")
+# edge-axis sharding: each partition's tile/window lists shard over the
+# 'edge' mesh axis and the generated sweep's EdgeCombine epilogue reduces
+# the per-shard partial segment results — results must stay bit-identical
+# (min_plus) / allclose (PageRank) to the unsharded runs above
+mesh2 = Mesh(np.array(jax.devices()[:8]).reshape(4, 2), ("sub", "edge"))
+for eb in ("pallas_tiles", "pallas_windows", "auto"):
+    cfg2 = EngineConfig(backend="shard_map", subgraph_axes=("sub",),
+                        edge_axes=("edge",), edge_backend=eb)
+    for name, prog, params, exact in algos:
+        res, st = run_shard_map(prog, pg, mesh2, params, cfg2)
+        assert st.edge_backend == eb, (name, eb, st.edge_backend)
+        if exact:
+            np.testing.assert_array_equal(coo[name], np.asarray(res),
+                                          err_msg=f"{name}/{eb}/sharded")
+        else:
+            np.testing.assert_allclose(coo[name], np.asarray(res),
+                                       rtol=1e-5, atol=1e-8,
+                                       err_msg=f"{name}/{eb}/sharded")
+    if eb == "auto":
+        assert len(st.partition_edge_backends) == pg.n_parts
 print("SHARD_EB_OK")
 """
 
 
-def test_shard_map_parity_and_edge_sharding_gate():
+def test_shard_map_parity_and_edge_sharding():
     res = subprocess.run([sys.executable, "-c", SHARD_SCRIPT],
                          capture_output=True, text=True, timeout=1200)
     assert res.returncode == 0, res.stdout + res.stderr
